@@ -1,0 +1,71 @@
+"""Table 1 reproduction: message overhead, delivery execution time, and
+local space for vector-clock causal broadcast vs. PC-broadcast.
+
+Emits CSV rows  name,us_per_call,derived  where ``derived`` is the
+table's complexity metric (bytes/message, comparisons/delivery, entries).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (BoundedPCBroadcast, Network, VCBroadcast,
+                        check_trace, ring_plus_random)
+from repro.core.metrics import overhead_per_message
+
+
+def run_broadcasts(proto_cls, n, n_bcast, seed=0, **kw):
+    net = Network(seed=seed, default_delay=0.5, oob_delay=0.25)
+    for pid in range(n):
+        net.add_process(proto_cls(pid, **kw))
+    ring_plus_random(net, range(n), k=max(3, n // 32))
+    t0 = time.perf_counter()
+    for i in range(n_bcast):
+        net.procs[i % n].broadcast(("m", i))
+        net.run(until=net.time + 0.7)
+    net.run()
+    wall = time.perf_counter() - t0
+    rep = check_trace(net.trace, all_pids=set(range(n)))
+    assert rep.ok, rep.summary()
+    return net, wall, rep
+
+
+def rows():
+    out = []
+    for n in (50, 100, 200):
+        # broadcasters scale with N so the vector-clock entry count (one
+        # per process that EVER broadcast — the paper's N) grows too
+        n_bcast = n // 2
+        # --- PC-broadcast -------------------------------------------- #
+        net, wall, rep = run_broadcasts(
+            lambda pid: BoundedPCBroadcast(pid, ping_mode="route"), n,
+            n_bcast)
+        per_delivery_us = wall / max(rep.n_deliveries, 1) * 1e6
+        out.append((f"table1/pc/overhead_bytes/N={n}", per_delivery_us,
+                    overhead_per_message(net)))
+        space = max(len(p.received) for p in net.procs.values())
+        out.append((f"table1/pc/space_entries/N={n}", per_delivery_us,
+                    space))
+
+        # --- vector clocks -------------------------------------------- #
+        net, wall, rep = run_broadcasts(VCBroadcast, n, n_bcast)
+        per_delivery_us = wall / max(rep.n_deliveries, 1) * 1e6
+        out.append((f"table1/vc/overhead_bytes/N={n}", per_delivery_us,
+                    overhead_per_message(net)))
+        comparisons = sum(p.comparisons for p in net.procs.values())
+        out.append((f"table1/vc/comparisons_per_delivery/N={n}",
+                    per_delivery_us,
+                    comparisons / max(rep.n_deliveries, 1)))
+        space = max(p.local_space_entries() for p in net.procs.values())
+        out.append((f"table1/vc/space_entries/N={n}", per_delivery_us,
+                    space))
+    return out
+
+
+def main():
+    for name, us, derived in rows():
+        print(f"{name},{us:.2f},{derived:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Benchmark harness — one module per paper table/figure + substrate
+benches.  Prints ``name,us_per_call,derived`` CSV."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bench_engine, bench_fig7, bench_table1, \
+        bench_train
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in (bench_table1, bench_fig7, bench_engine, bench_train):
+        try:
+            for name, us, derived in mod.rows():
+                print(f"{name},{us:.2f},{derived:.3f}", flush=True)
+        except Exception:                      # noqa: BLE001
+            failed += 1
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

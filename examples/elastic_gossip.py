@@ -1,0 +1,61 @@
+"""End-to-end driver (the paper's kind of system): elastic multi-pod
+training over PC-broadcast.
+
+Five pods train DiLoCo-style; outer updates disseminate via the paper's
+causal broadcast with O(1) metadata.  Mid-run a pod JOINS (its links are
+gated by ping phases — Algorithm 2), and another pod CRASHES SILENTLY
+(Algorithm 3 retries, then abandons its links).  Loss keeps dropping,
+replicas stay close, and the happens-before oracle certifies zero causal
+violations and zero double-deliveries over the whole run.
+
+    PYTHONPATH=src python examples/elastic_gossip.py
+"""
+
+from dataclasses import replace
+
+import jax
+
+from repro.configs import get_arch
+from repro.data.pipeline import DataConfig
+from repro.models import build_model
+from repro.runtime.gossip import CausalGossipTrainer, GossipConfig
+
+
+def main():
+    cfg = replace(get_arch("yi-6b").smoke(), num_layers=2, d_model=32,
+                  d_ff=64, num_heads=2, num_kv_heads=2, head_dim=16,
+                  vocab_size=64, compute_dtype="float32",
+                  param_dtype="float32")
+    dc = DataConfig(vocab_size=64, seq_len=32, global_batch=8)
+    tr = CausalGossipTrainer(
+        lambda: build_model(cfg, remat="none"), 5,
+        GossipConfig(local_steps=2, compress_frac=0.25,
+                     ping_timeout=10.0, max_retry=3), dc)
+
+    state = {"round": 0}
+
+    def churn(_, t):
+        r = state["round"]
+        if r == 4:
+            pid = t.join()
+            print(f"  >> pod {pid} JOINED (links unsafe until ping phase)")
+        if r == 8:
+            t.leave(2, graceful=False)
+            print("  >> pod 2 CRASHED silently (Alg. 3 will clean up)")
+
+    for r in range(12):
+        state["round"] = r
+        tr.run_rounds(1, churn=churn)
+        print(f"round {r:2d}  mean_loss={tr.mean_loss():.4f}  "
+              f"drift={tr.replica_drift():.4f}  "
+              f"pods={[p.pid for p in tr.pods.values() if p.alive]}")
+
+    rep = tr.causal_report()
+    print("\nhappens-before oracle:", rep.summary())
+    assert rep.causal_ok and not rep.double_deliveries
+    print("PASS: causal order held through join + silent crash; "
+          f"final mean loss {tr.mean_loss():.4f}")
+
+
+if __name__ == "__main__":
+    main()

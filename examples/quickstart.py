@@ -1,0 +1,65 @@
+"""Quickstart: train a small LM for a few dozen steps on CPU, checkpoint,
+resume, and sample from it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from dataclasses import replace
+
+from repro.checkpoint import ckpt
+from repro.configs import get_arch
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import build_model
+from repro.serving.engine import Request, ServeConfig, ServingEngine
+from repro.training.optimizer import AdamWConfig, OptState, init_opt_state
+from repro.training.step import make_train_step
+
+
+def main():
+    cfg = replace(get_arch("yi-6b").smoke(), compute_dtype="float32",
+                  param_dtype="float32")
+    model = build_model(cfg, remat="none")
+    params, _ = model.init(jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-2)))
+    data = SyntheticLM(DataConfig(cfg.vocab_size, 64, 8))
+
+    print("== training ==")
+    for i in range(40):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        params, opt, m = step(params, opt, batch)
+        if i % 10 == 0:
+            print(f"step {i:3d} loss {float(m['loss']):.4f}")
+
+    with tempfile.TemporaryDirectory() as d:
+        print("== checkpoint / resume ==")
+        ckpt.save(d, 40, {"params": params, "opt": opt._asdict()},
+                  meta={"data_step": 40})
+        state, meta = ckpt.restore(d, 40, like={"params": params,
+                                                "opt": opt._asdict()})
+        params, opt = state["params"], OptState(**state["opt"])
+        for i in range(meta["data_step"], meta["data_step"] + 10):
+            batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+            params, opt, m = step(params, opt, batch)
+        print(f"resumed loss {float(m['loss']):.4f}")
+
+    print("== sampling ==")
+    eng = ServingEngine(model, params, ServeConfig(batch=2, max_len=64))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=8
+                                               ).astype(np.int32),
+                    max_new_tokens=12) for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    for r in reqs:
+        print(f"req {r.rid}: {r.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

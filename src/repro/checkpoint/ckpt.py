@@ -1,0 +1,142 @@
+"""Sharded checkpointing with atomic commit and cross-topology restore.
+
+Layout:  <dir>/step_<n>/
+            manifest.json     — pytree structure, leaf shapes/dtypes, meta
+            shard_<k>.npz     — flat leaves, split round-robin by size
+
+Properties a 1000-node fleet needs:
+  * atomic    — written to ``.tmp-…`` then os.replace()'d; a crashed save
+    never corrupts the latest checkpoint;
+  * resumable — ``latest_step`` scans committed steps only;
+  * reshard   — restore is by *leaf path*, independent of mesh/topology;
+    the caller re-applies whatever sharding the new mesh wants;
+  * self-describing — the manifest carries user metadata (data step,
+    gossip round, pod id) for exact pipeline resume;
+  * retention — ``keep`` bounds disk usage.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "available_steps"]
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def save(directory: str, step: int, tree, *, meta: Optional[Dict] = None,
+         shards: int = 4, keep: int = 3) -> str:
+    """Write a checkpoint; returns the committed path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step}")
+    tmp = tempfile.mkdtemp(prefix=f".tmp-step_{step}-", dir=directory)
+    try:
+        leaves = _flatten_with_paths(tree)
+        arrays = {}
+        manifest = {"step": step, "meta": meta or {}, "leaves": [],
+                    "format": 1, "shards": shards}
+        # round-robin largest-first for balanced shard files
+        order = sorted(range(len(leaves)),
+                       key=lambda i: -np.asarray(leaves[i][1]).nbytes)
+        shard_of = {}
+        sizes = [0] * shards
+        for i in order:
+            k = int(np.argmin(sizes))
+            shard_of[i] = k
+            sizes[k] += np.asarray(leaves[i][1]).nbytes
+        per_shard: List[Dict[str, np.ndarray]] = [{} for _ in range(shards)]
+        for i, (path, leaf) in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            manifest["leaves"].append(
+                {"path": path, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype), "shard": shard_of[i]})
+            per_shard[shard_of[i]][f"leaf_{i}"] = arr
+        for k in range(shards):
+            np.savez(os.path.join(tmp, f"shard_{k}.npz"), **per_shard[k])
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)                      # atomic commit
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _retain(directory, keep)
+    return final
+
+
+def _retain(directory: str, keep: int) -> None:
+    steps = available_steps(directory)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s}"),
+                      ignore_errors=True)
+
+
+def available_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(directory, name,
+                                             "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = available_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: int, like=None,
+            shardings=None) -> Tuple[Any, Dict]:
+    """Load a checkpoint.
+
+    ``like`` — optional pytree template; structure and leaf shapes are
+    validated against the manifest.  ``shardings`` — optional pytree of
+    shardings (same structure) applied via device_put — this is the
+    cross-topology reshard path.  Returns (tree, meta)."""
+    base = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(base, "manifest.json")) as f:
+        manifest = json.load(f)
+    shard_files = {}
+    flat: List[np.ndarray] = []
+    for i, ent in enumerate(manifest["leaves"]):
+        k = ent["shard"]
+        if k not in shard_files:
+            shard_files[k] = np.load(os.path.join(base, f"shard_{k}.npz"))
+        arr = shard_files[k][f"leaf_{i}"]
+        assert list(arr.shape) == ent["shape"], (ent["path"], arr.shape)
+        flat.append(arr)
+
+    if like is None:
+        # reconstruct as {path: array}
+        return ({ent["path"]: a for ent, a in
+                 zip(manifest["leaves"], flat)}, manifest["meta"])
+
+    treedef = jax.tree_util.tree_structure(like)
+    like_leaves = jax.tree_util.tree_leaves(like)
+    assert len(like_leaves) == len(flat), \
+        f"leaf count mismatch: ckpt {len(flat)} vs template {len(like_leaves)}"
+    for tmpl, arr, ent in zip(like_leaves, flat, manifest["leaves"]):
+        assert tuple(tmpl.shape) == tuple(arr.shape), \
+            (ent["path"], tmpl.shape, arr.shape)
+    tree = jax.tree_util.tree_unflatten(treedef, flat)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree,
+                            shardings)
+    return tree, manifest["meta"]

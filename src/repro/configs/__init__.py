@@ -1,0 +1,5 @@
+from .base import SHAPES, ArchConfig, ShapeSpec, runnable_shapes
+from .registry import ARCHS, get_arch
+
+__all__ = ["SHAPES", "ArchConfig", "ShapeSpec", "runnable_shapes",
+           "ARCHS", "get_arch"]

@@ -1,0 +1,9 @@
+"""Mamba2-2.7B [arXiv:2405.21060]: SSD (state-space duality), attn-free."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-2.7b", family="ssm", num_layers=64, d_model=2560,
+    num_heads=0, num_kv_heads=0, head_dim=1, d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_chunk=128,
+    tie_embeddings=True,
+)

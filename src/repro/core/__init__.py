@@ -1,0 +1,25 @@
+"""repro.core — the paper's contribution, reproduced exactly.
+
+Discrete-event implementations of the paper's three algorithms plus the
+vector-clock baseline, the Spray-like dynamic overlay, and a
+happens-before oracle validating the broadcast specification.
+
+The TPU-native tensorized adaptation lives in ``repro.core.engine``.
+"""
+
+from .base import AppMsg, Ping, Pong, Protocol, control_bytes, msg_id
+from .bounded import BoundedPCBroadcast
+from .events import Link, NetStats, Network
+from .oracle import OracleReport, check_trace
+from .overlay import SprayOverlay, ring_plus_random, view_size
+from .pcbroadcast import PCBroadcast
+from .rbroadcast import RBroadcast
+from .vector_clock import VCBroadcast
+
+__all__ = [
+    "AppMsg", "Ping", "Pong", "Protocol", "control_bytes", "msg_id",
+    "BoundedPCBroadcast", "Link", "NetStats", "Network",
+    "OracleReport", "check_trace",
+    "SprayOverlay", "ring_plus_random", "view_size",
+    "PCBroadcast", "RBroadcast", "VCBroadcast",
+]

@@ -1,0 +1,15 @@
+"""repro.core.engine — TPU-native tensorized PC-broadcast simulation.
+
+Event-driven -> bulk-synchronous adaptation of the paper's protocol
+(DESIGN.md §2.1): dense per-round state, one lax.scan per run, process
+axis shardable across devices (sharded.py).
+"""
+
+from .ref import analyze, run_ref
+from .state import INF, EngineConfig, Schedule, build_state, random_instance
+from .step import make_step, run_engine
+
+__all__ = [
+    "INF", "EngineConfig", "Schedule", "build_state", "random_instance",
+    "analyze", "run_ref", "make_step", "run_engine",
+]

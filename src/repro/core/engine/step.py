@@ -1,0 +1,169 @@
+"""JAX tensorized engine: the whole run is one ``lax.scan`` over rounds.
+
+Semantics are pinned to ``ref.py`` (numpy oracle); tests sweep random
+instances for exact equality.  All shapes are static; the per-round body is
+pure scatter/gather over ``(N, M)`` and ``(N, K)`` arrays, so the process
+axis shards cleanly (see ``sharded.py``) and the same body runs unmodified
+on TPU.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .state import INF, EngineConfig, Schedule, build_state
+
+__all__ = ["run_engine", "make_step"]
+
+
+def _scatter_min(arr: jnp.ndarray, rows: jnp.ndarray, vals: jnp.ndarray,
+                 valid: jnp.ndarray) -> jnp.ndarray:
+    """arr[rows[i], :] = min(arr[rows[i], :], vals[i, :]) where valid[i]."""
+    n = arr.shape[0]
+    rows = jnp.where(valid, rows, n)          # out-of-bounds -> dropped
+    return arr.at[rows, :].min(vals, mode="drop")
+
+
+def make_step(cfg: EngineConfig, sched: Schedule):
+    """Build the per-round body (closure over the static schedule)."""
+    m_app = sched.m_app
+    bc_round = jnp.asarray(sched.bcast_round)
+    bc_origin = jnp.asarray(sched.bcast_origin)
+    add_round = jnp.asarray(sched.add_round)
+    add_p = jnp.asarray(sched.add_p)
+    add_k = jnp.asarray(sched.add_k)
+    add_q = jnp.asarray(sched.add_q)
+    add_delay = jnp.asarray(sched.add_delay)
+    add_slot = jnp.asarray(m_app + np.arange(sched.n_adds, dtype=np.int32))
+    rm_round = jnp.asarray(sched.rm_round)
+    rm_p = jnp.asarray(sched.rm_p)
+    rm_k = jnp.asarray(sched.rm_k)
+    K = cfg.k
+    pc_mode = cfg.mode == "pc"
+
+    def step(state, t):
+        arr, delivered, adj, delay, active, gate, flush, ping = state
+        n = arr.shape[0]
+        t = t.astype(jnp.int32)
+
+        # -- 1. removals -------------------------------------------------- #
+        if rm_round.shape[0]:
+            sel = rm_round == t
+            p_, k_ = jnp.where(sel, rm_p, n), rm_k
+            active = active.at[p_, k_].set(False, mode="drop")
+            gate = gate.at[p_, k_].set(-1, mode="drop")
+            flush = flush.at[p_, k_].set(INF, mode="drop")
+            ping = ping.at[p_, k_].set(-1, mode="drop")
+
+        # -- 2. additions -------------------------------------------------- #
+        if add_round.shape[0]:
+            sel = add_round == t
+            p_ = jnp.where(sel, add_p, n)
+            adj = adj.at[p_, add_k].set(add_q, mode="drop")
+            delay = delay.at[p_, add_k].set(add_delay, mode="drop")
+            active = active.at[p_, add_k].set(True, mode="drop")
+            if pc_mode:
+                # gate if p has >=1 other safe active link AND (always_gate
+                # or p already delivered an app message).
+                safe_links = active & (gate < 0)
+                safe_cnt = safe_links.sum(axis=1)                 # (N,)
+                own_slot_safe = safe_links[
+                    jnp.clip(add_p, 0, n - 1), add_k]             # (E,)
+                other_safe = (safe_cnt[jnp.clip(add_p, 0, n - 1)]
+                              - own_slot_safe.astype(jnp.int32)) >= 1
+                if cfg.always_gate:
+                    want = other_safe
+                else:
+                    has_del = (delivered[:, :m_app] >= 0).any(axis=1)
+                    want = other_safe & has_del[jnp.clip(add_p, 0, n - 1)]
+                gsel = sel & want
+                pg = jnp.where(gsel, add_p, n)
+                gate = gate.at[pg, add_k].set(t, mode="drop")
+                flush = flush.at[pg, add_k].set(INF, mode="drop")
+                ping = ping.at[pg, add_k].set(add_slot, mode="drop")
+                # own ping is "delivered" by p now -> floods from phase 7
+                delivered = delivered.at[pg, add_slot].set(t, mode="drop")
+                # non-gated adds must clear any stale slot state
+                csel = sel & ~want
+                pc_ = jnp.where(csel, add_p, n)
+                gate = gate.at[pc_, add_k].set(-1, mode="drop")
+                flush = flush.at[pc_, add_k].set(INF, mode="drop")
+                ping = ping.at[pc_, add_k].set(-1, mode="drop")
+
+        # -- 3. broadcasts -------------------------------------------------- #
+        if bc_round.shape[0]:
+            sel = bc_round == t
+            o_ = jnp.where(sel, bc_origin, n)
+            slots = jnp.arange(m_app, dtype=jnp.int32)
+            delivered = delivered.at[o_, slots].max(t, mode="drop")
+
+        # -- 4. arrivals -> deliveries -------------------------------------- #
+        newly = (arr == t) & (delivered < 0)
+        delivered = jnp.where(newly, t, delivered)
+
+        # -- 5. pong detection ---------------------------------------------- #
+        if pc_mode:
+            q_ = jnp.clip(adj, 0, n - 1)
+            s_ = jnp.clip(ping, 0, delivered.shape[1] - 1)
+            tgt_del = delivered[q_, s_]                           # (N, K)
+            fire = (gate >= 0) & (flush == INF) & (ping >= 0) & (tgt_del >= 0)
+            flush = jnp.where(fire, t + cfg.pong_delay, flush)
+
+        # -- 6. flush buffered app messages over now-safe links ------------- #
+        if pc_mode:
+            d_app = delivered[:, :m_app]                          # (N, m_app)
+            for kk in range(K):
+                do = (flush[:, kk] == t) & active[:, kk]          # (N,)
+                win = ((d_app >= gate[:, kk][:, None])
+                       & (d_app < t) & do[:, None])               # (N, m_app)
+                vals = jnp.where(
+                    win, (t + delay[:, kk])[:, None].astype(jnp.int32), INF)
+                pad = jnp.full((n, delivered.shape[1] - m_app), INF,
+                               jnp.int32)
+                arr = _scatter_min(arr, adj[:, kk],
+                                   jnp.concatenate([vals, pad], axis=1), do)
+            cleared = flush == t
+            gate = jnp.where(cleared, -1, gate)
+            ping = jnp.where(cleared, -1, ping)
+            flush = jnp.where(cleared, INF, flush)
+
+        # -- 7. forward this round's deliveries over safe active links ------ #
+        new_del = delivered == t                                  # (N, M)
+        for kk in range(K):
+            ok = active[:, kk] & (gate[:, kk] < 0) & (adj[:, kk] >= 0)
+            vals = jnp.where(new_del & ok[:, None],
+                             (t + delay[:, kk])[:, None].astype(jnp.int32),
+                             INF)
+            arr = _scatter_min(arr, adj[:, kk], vals, ok)
+
+        return (arr, delivered, adj, delay, active, gate, flush, ping), None
+
+    return step
+
+
+def run_engine(cfg: EngineConfig, sched: Schedule, adj0, delay0,
+               jit: bool = True):
+    """Run the tensorized engine; returns ``delivered`` as numpy (N, M)."""
+    st = build_state(cfg, sched, adj0, delay0)
+    state = (
+        jnp.asarray(st["arr"]), jnp.asarray(st["delivered"]),
+        jnp.asarray(st["adj"]), jnp.asarray(st["delay"]),
+        jnp.asarray(st["active"]), jnp.asarray(st["gate"]),
+        jnp.asarray(st["flush"]), jnp.asarray(st["ping"]),
+    )
+    step = make_step(cfg, sched)
+
+    def run(state):
+        rounds = jnp.arange(cfg.rounds, dtype=jnp.int32)
+        final, _ = jax.lax.scan(step, state, rounds)
+        return final
+
+    if jit:
+        run = jax.jit(run)
+    final = run(state)
+    return np.asarray(final[1])

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the training substrate's compute hot spots.
+
+The paper itself has no kernel-level contribution (it is a broadcast
+protocol); these kernels belong to the LM substrate the framework trains
+and serves (DESIGN.md §2.3): flash attention, the Mamba-2 SSD chunked
+scan, and the RG-LRU linear scan.  Each has kernel.py (pl.pallas_call +
+BlockSpec), ops.py (jit'd wrapper), ref.py (pure-jnp oracle) and an
+interpret-mode shape/dtype sweep in tests/.
+"""

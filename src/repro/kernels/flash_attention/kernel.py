@@ -1,0 +1,121 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+Online-softmax tiled attention: the grid is (batch*q_heads, Sq/BQ, Skv/BK)
+with the KV axis innermost (sequential on TPU); running max / sum / output
+accumulators live in VMEM scratch and persist across the KV loop.  GQA maps
+query head h to KV head h // (H/KV) in the K/V index_maps.  Causal masking
+is applied only where needed; fully-masked blocks contribute a masked
+no-op (TPU grids are dense).
+
+VMEM budget at the default tiles (BQ=BK=128, D<=256): q/k/v blocks
+3*128*256*4 B = 384 KiB + f32 accumulators ~130 KiB — comfortably inside
+the ~16 MiB/core VMEM of a v5e, and all matmul dims are multiples of the
+128x128 MXU tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def flash_attention_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                           l_ref, *, scale: float, causal: bool,
+                           block_q: int, block_k: int, seq_kv: int):
+    """One (bh, iq, ik) grid step."""
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)                  # (BK, D)
+    v = v_ref[0].astype(jnp.float32)                  # (BK, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (BQ, BK)
+
+    # mask: causal + kv-padding (columns beyond the true seq_kv)
+    iq = pl.program_id(1)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < seq_kv
+    if causal:
+        qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        mask &= kpos <= qpos
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                               # (BQ, 1)
+    m_new = jnp.maximum(m_prev[:, 0], s.max(axis=1))
+    alpha = jnp.exp(m_prev[:, 0] - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)   # fully-masked rows would otherwise be 1
+    l_ref[...] = l_ref[...] * alpha[:, None] + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new[:, None]
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           block_q: int = 128, block_k: int = 128,
+                           seq_kv: int = 0, interpret: bool = False):
+    """q (B, H, Sq, D); k, v (B, KV, Skv, D) -> (B, H, Sq, D).
+
+    Sq/Skv must be multiples of the block sizes (ops.py pads; the true
+    KV length ``seq_kv`` masks the padding — it defaults to the padded
+    length, i.e. no padding)."""
+    b, h, sq, d = q.shape
+    kv, skv = k.shape[1], k.shape[2]
+    seq_kv = seq_kv or skv
+    groups = h // kv
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv)
+    scale = d ** -0.5
+
+    grid = (b * h, sq // block_q, skv // block_k)
+
+    def qmap(bh, iq, ik):
+        return (bh, iq, 0)
+
+    def kvmap(bh, iq, ik):
+        bi, hi = bh // h, bh % h
+        return (bi * kv + hi // groups, ik, 0)
+
+    qr = q.reshape(b * h, sq, d)
+    kr = k.reshape(b * kv, skv, d)
+    vr = v.reshape(b * kv, skv, d)
+
+    out = pl.pallas_call(
+        functools.partial(flash_attention_kernel, scale=scale, causal=causal,
+                          block_q=block_q, block_k=block_k, seq_kv=seq_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), qmap),
+            pl.BlockSpec((1, block_k, d), kvmap),
+            pl.BlockSpec((1, block_k, d), kvmap),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), qmap),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,54 @@
+"""jit'd wrapper: padding, layout, and a custom-vjp whose backward falls
+back to the jnp oracle (recompute) — the forward kernel is the serving /
+prefill hot path; training backward reuses XLA's fused attention grad."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                    interpret=False):
+    """q (B, H, Sq, D); k, v (B, KV, Skv, D) -> (B, H, Sq, D)."""
+    qp, sq = _pad_to(q, 2, block_q)
+    kp, skv = _pad_to(k, 2, block_k)
+    vp, _ = _pad_to(v, 2, block_k)
+    # causal offset assumption: ref/causal masks assume aligned ends; the
+    # kernel masks kv-padding via seq_kv and q-padding rows are discarded.
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, block_q=block_q,
+                                 block_k=block_k, seq_kv=skv,
+                                 interpret=interpret)
+    return out[:, :, :sq]
+
+
+def _fwd(q, k, v, causal, block_q, block_k, interpret):
+    return flash_attention(q, k, v, causal, block_q, block_k, interpret), (q, k, v)
+
+
+def _bwd(causal, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda a, b, c: attention_ref(a, b, c, causal=causal),
+                     q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,34 @@
+"""jit'd wrapper matching ``repro.models.rglru.rglru_scan_ref``."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rglru_scan_pallas
+
+__all__ = ["rglru_scan"]
+
+
+def rglru_scan(a, bx, h0=None, block_s: int = 256, block_w: int = 128,
+               interpret: bool = True):
+    """a, bx (B, S, W); optional h0 (B, W).  Returns (h (B,S,W), h_last).
+
+    interpret=True by default on this CPU-only box; pass False on TPU."""
+    b, s, w = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, w), jnp.float32)
+    bs = min(block_s, s) if s % block_s else block_s
+    bw = min(block_w, w) if w % block_w else block_w
+    pad_s = (-s) % bs
+    pad_w = (-w) % bw
+    if pad_s or pad_w:
+        # a=1, b=0 padding is the scan identity -> state passes through
+        a = jnp.pad(a, ((0, 0), (0, pad_s), (0, pad_w)),
+                    constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad_s), (0, pad_w)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_w)))
+    h = rglru_scan_pallas(a.astype(jnp.float32), bx.astype(jnp.float32),
+                          h0, block_s=bs, block_w=bw, interpret=interpret)
+    h = h[:, :s, :w]
+    return h, h[:, -1]

@@ -1,0 +1,4 @@
+"""Pure-jnp oracle: the model's associative-scan RG-LRU is the reference."""
+from repro.models.rglru import rglru_scan_ref
+
+__all__ = ["rglru_scan_ref"]

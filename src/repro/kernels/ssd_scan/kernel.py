@@ -1,0 +1,102 @@
+"""Chunked SSD (Mamba-2) scan as a Pallas TPU kernel.
+
+Grid: (B*H, n_chunks) — chunks innermost (sequential on TPU); the running
+inter-chunk state (N, P) lives in VMEM scratch.  Per grid step, the three
+dense products ((Q,N)x(N,Q), (Q,Q)x(Q,P), (N,Q)x(Q,P)) all hit the MXU
+with hardware-aligned dims at the default Q=128, N=128, P=64.
+
+VMEM at defaults: xb 32 KiB + bm/cm 2*64 KiB + state 32 KiB + y 32 KiB +
+(Q,Q) temporaries ~64 KiB -> well under budget; the B/C blocks are shared
+across the H grid axis (n_groups=1), which the index_map expresses by
+ignoring the head coordinate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_kernel", "ssd_scan_pallas"]
+
+
+def ssd_scan_kernel(al_ref, xb_ref, bm_ref, cm_ref, y_ref, hout_ref,
+                    state_ref, *, nheads: int):
+    c = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    al = al_ref[0, 0].astype(jnp.float32)                  # (Q, 1)
+    l = jnp.cumsum(al[:, 0])                               # (Q,)
+    xb = xb_ref[0, 0].astype(jnp.float32)                  # (Q, P)
+    bm = bm_ref[0, 0].astype(jnp.float32)                  # (Q, N)
+    cm = cm_ref[0, 0].astype(jnp.float32)                  # (Q, N)
+
+    q = l.shape[0]
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    seg = l[:, None] - l[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    seg = jnp.where(kj <= qi, seg, -1e30)
+    att = cb * jnp.exp(seg)
+    y = jax.lax.dot_general(att, xb, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # intra
+
+    h_prev = state_ref[...]                                # (N, P)
+    y += jax.lax.dot_general(cm, h_prev, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32
+                             ) * jnp.exp(l)[:, None]       # inter
+
+    lq = l[q - 1]
+    wb = bm * jnp.exp(lq - l)[:, None]                     # (Q, N)
+    upd = jax.lax.dot_general(wb, xb, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (N, P)
+    state_ref[...] = h_prev * jnp.exp(lq) + upd
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(c == nc - 1)
+    def _finish():
+        hout_ref[0] = state_ref[...].astype(hout_ref.dtype)
+
+
+def ssd_scan_pallas(al, xb, bm, cm, *, nheads: int, interpret: bool = False):
+    """al (BH, NC, Q, 1) log-decay; xb (BH, NC, Q, P); bm/cm (B, NC, Q, N)
+    shared across heads.  Returns (y (BH, NC, Q, P), h (BH, N, P))."""
+    bh, nc, qq, _ = al.shape
+    p = xb.shape[-1]
+    n = bm.shape[-1]
+
+    def bhmap(i, c):
+        return (i, c, 0, 0)
+
+    def bcmap(i, c):
+        return (i // nheads, c, 0, 0)
+
+    y, h = pl.pallas_call(
+        functools.partial(ssd_scan_kernel, nheads=nheads),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, qq, 1), bhmap),
+            pl.BlockSpec((1, 1, qq, p), bhmap),
+            pl.BlockSpec((1, 1, qq, n), bcmap),
+            pl.BlockSpec((1, 1, qq, n), bcmap),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, qq, p), bhmap),
+            pl.BlockSpec((1, n, p), lambda i, c: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nc, qq, p), xb.dtype),
+            jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(al, xb, bm, cm)
+    return y, h

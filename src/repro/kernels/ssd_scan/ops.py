@@ -1,0 +1,45 @@
+"""jit'd wrapper matching ``repro.models.ssm.ssd_chunk_scan_ref``'s
+contract (same inputs/outputs, chunk padding included)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_pallas
+
+__all__ = ["ssd_chunk_scan"]
+
+
+def ssd_chunk_scan(xbar, a_log, Bm, Cm, chunk: int = 128,
+                   interpret: bool = True):
+    """xbar (B,S,H,P); a_log (B,S,H); Bm/Cm (B,S,N) ->
+    (y (B,S,H,P), h_final (B,H,N,P)).
+
+    interpret=True by default: this box is CPU-only; on TPU pass False."""
+    b, s, h, p = xbar.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s) if s % chunk else chunk
+    if s % q:
+        pad = q - s % q
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    sp = xbar.shape[1]
+    nc = sp // q
+
+    # layouts: (B,S,H,P) -> (B*H, NC, Q, P); a_log -> (B*H, NC, Q, 1)
+    xb = xbar.reshape(b, nc, q, h, p).transpose(0, 3, 1, 2, 4).reshape(
+        b * h, nc, q, p)
+    al = a_log.reshape(b, nc, q, h).transpose(0, 3, 1, 2).reshape(
+        b * h, nc, q, 1)
+    bm = Bm.reshape(b, nc, q, n)
+    cm = Cm.reshape(b, nc, q, n)
+
+    y, hfin = ssd_scan_pallas(al, xb, bm, cm, nheads=h, interpret=interpret)
+    y = y.reshape(b, h, nc, q, p).transpose(0, 2, 3, 1, 4).reshape(
+        b, sp, h, p)[:, :s]
+    return y, hfin.reshape(b, h, n, p)

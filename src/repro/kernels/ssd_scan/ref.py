@@ -1,0 +1,4 @@
+"""Pure-jnp oracle: the model's chunked SSD scan is the reference."""
+from repro.models.ssm import ssd_chunk_scan_ref
+
+__all__ = ["ssd_chunk_scan_ref"]

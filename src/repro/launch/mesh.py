@@ -1,0 +1,28 @@
+"""Production meshes.  Functions, never module-level constants — importing
+this module must not touch jax device state."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (16 data x 16 model).  Multi-pod: 2 pods
+    = 512 chips as (2 pod x 16 data x 16 model); the "pod" axis carries
+    either synchronous gradient reduction (the dry-run's proof obligation)
+    or — in the causal-gossip deployment — nothing inside the step, with
+    PC-broadcast handling cross-pod update dissemination out-of-band."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU smoke)."""
+    n = jax.device_count()
+    assert data * model <= n, (data, model, n)
+    types = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=types)

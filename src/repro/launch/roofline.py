@@ -1,0 +1,181 @@
+"""Roofline accounting from compiled dry-run artifacts (DESIGN.md §6).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs        / (chips x 197 TFLOP/s bf16)
+    memory     = HLO_bytes        / (chips x 819 GB/s HBM)
+    collective = collective_bytes / (chips x 50 GB/s link)
+
+``HLO_FLOPs``/``HLO_bytes`` come from ``compiled.cost_analysis()`` of
+*unrolled* layer-count variants (L, L') so per-layer costs are exact
+(XLA counts a while body once, so scanned modules cannot be costed
+directly); collective bytes are parsed from the partitioned HLO text with
+ring-model wire costs.  ``MODEL_FLOPS`` is the analytic 6·N·D (dense) /
+6·N_active·D (MoE) plus attention/SSD terms, so the useful-compute ratio
+exposes remat and dispatch overheads.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+__all__ = ["HW", "parse_collectives", "terms_from", "model_flops",
+           "dominant"]
+
+# TPU v5e hardware model (per chip)
+HW = dict(peak_flops=197e12, hbm_bw=819e9, link_bw=50e9, hbm_bytes=16e9)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
+                "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<types>[^=]*?)\s*(?P<op>all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start)?\(", )
+_TYPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                      r"pred|c64|c128|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_RE2 = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _result_bytes(types: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(types):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_RE2.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def parse_collectives(hlo: str) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind (ring cost model).
+
+    HLO shapes in a partitioned module are per-device, so:
+      all-gather: result x (g-1)/g   (receives g-1 chunks of result/g)
+      all-reduce: 2 x result x (g-1)/g
+      reduce-scatter: result x (g-1)  (result is the 1/g shard)
+      all-to-all: result x (g-1)/g
+      collective-permute: result
+    ``-done`` lines carry no replica_groups and are skipped via -start
+    matching plus plain ops."""
+    out: Dict[str, float] = {}
+    total = 0.0
+    for line in hlo.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        size = _result_bytes(m.group("types"))
+        g = _group_size(line)
+        if op == "collective-permute":
+            # no replica_groups attribute; wire = moved bytes
+            wire = float(size) if "source_target_pairs" in line else 0.0
+            out[op] = out.get(op, 0.0) + wire
+            total += wire
+            continue
+        if g <= 1:
+            wire = 0.0
+        elif op == "all-reduce":
+            wire = 2.0 * size * (g - 1) / g
+        elif op == "all-gather":
+            wire = size * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = float(size) * (g - 1)
+        elif op == "all-to-all":
+            wire = size * (g - 1) / g
+        else:  # collective-permute
+            wire = float(size)
+        out[op] = out.get(op, 0.0) + wire
+        total += wire
+    out["total"] = total
+    return out
+
+
+def terms_from(flops: float, bytes_hbm: float, wire_per_device: float,
+               chips: int) -> Dict[str, float]:
+    """Three roofline terms in seconds.  ``flops``/``bytes_hbm`` are
+    whole-step totals across chips; wire bytes are per-device (HLO is the
+    per-device program) so collective_bytes = wire x chips."""
+    compute = flops / (chips * HW["peak_flops"])
+    memory = bytes_hbm / (chips * HW["hbm_bw"])
+    coll = (wire_per_device * chips) / (chips * HW["link_bw"])
+    return dict(compute=compute, memory=memory, collective=coll)
+
+
+def dominant(terms: Dict[str, float]) -> str:
+    return max(("compute", "memory", "collective"), key=lambda k: terms[k])
+
+
+# ------------------------------------------------------------------ #
+# analytic MODEL_FLOPS
+# ------------------------------------------------------------------ #
+def model_flops(cfg, shape) -> float:
+    """Useful FLOPs per step (global): the 6·N·D convention + attention.
+
+    train: 6 x active-params x tokens + attention/SSD sequence terms
+    prefill: 2 x active-params x tokens + fwd attention
+    decode: 2 x active-params x batch (one token per sequence)."""
+    b, s = shape.global_batch, shape.seq_len
+    n_active = cfg.active_param_count()
+    kinds = cfg.layer_kinds()
+
+    def seq_extra(mult: float, seq: int) -> float:
+        """attention-like S^2 terms; coefficient convention: the causal
+        QK^T+PV pair costs 2*B*S*span*H*hd flops forward (2 matmuls x 2
+        flops / 2 causal), so mult = 2 for fwd-only and 6 for training."""
+        total = 0.0
+        for kind in kinds:
+            if kind == "attn":
+                win = cfg.window or seq
+                kv_span = min(seq, win)
+                total += mult * b * seq * kv_span * cfg.num_heads * \
+                    cfg.head_dim  # QK^T + PV, causal halving folded in
+            elif kind == "ssm":
+                q, n, h, p = (cfg.ssm_chunk, cfg.ssm_state, cfg.ssm_heads,
+                              cfg.ssm_head_dim)
+                fwd = 2 * b * seq * (q * n + h * q * p + 2 * h * n * p)
+                total += fwd * (mult / 2)
+            elif kind == "rec":
+                w = cfg.lru_width or cfg.d_model
+                total += (mult / 2) * 2 * b * seq * 4 * w  # gates+scan, cheap
+        if cfg.is_encdec:
+            # encoder self-attn + decoder cross-attn
+            es = cfg.encoder_seq
+            total += cfg.encoder_layers * mult * b * es * es * \
+                cfg.num_heads * cfg.head_dim
+            total += len(kinds) * mult * b * seq * es * cfg.num_heads * \
+                cfg.head_dim
+        return total
+
+    if shape.kind == "train":
+        return 6.0 * n_active * b * s + seq_extra(6.0, s)
+    if shape.kind == "prefill":
+        return 2.0 * n_active * b * s + seq_extra(2.0, s)
+    # decode: one token per sequence against an s-long context
+    attn_read = 0.0
+    for kind in kinds:
+        if kind == "attn":
+            span = min(s, cfg.window or s)
+            attn_read += 4.0 * b * span * cfg.num_heads * cfg.head_dim
+        elif kind == "ssm":
+            attn_read += 4.0 * b * cfg.ssm_heads * cfg.ssm_state * \
+                cfg.ssm_head_dim
+    return 2.0 * n_active * b + attn_read

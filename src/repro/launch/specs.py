@@ -1,0 +1,170 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every model input.
+
+``input_specs(cfg, shape, mesh)`` returns (abstract_inputs, in_specs) for
+the step function the (arch x shape) cell lowers: train_step for train
+shapes, prefill/decode for serving shapes.  Nothing here allocates device
+memory — params, optimizer state and caches are all abstract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.transformer import (StackSpec, cache_seq_len,
+                                      init_stack_cache, stack_layout)
+from repro.sharding.policy import (batch_spec, build_specs, cache_specs,
+                                   param_policy)
+from repro.training.optimizer import OptState
+
+__all__ = ["input_specs", "shapes_and_axes", "abstract_opt_state",
+           "make_batch", "make_serving_inputs", "param_specs", "opt_specs"]
+
+
+def input_specs(cfg: "ArchConfig", shape: "ShapeSpec", mesh):
+    """ShapeDtypeStruct stand-ins for every model input of a cell
+    (weak-type-correct, shardable, no device allocation).
+
+    train/prefill -> (batch dict, spec dict); decode -> ((token, caches,
+    cur_index), specs).  The dry-run driver composes these with the
+    abstract params/optimizer state (`shapes_and_axes`,
+    `abstract_opt_state`)."""
+    if shape.kind == "decode":
+        return make_serving_inputs(cfg, shape, mesh)
+    return make_batch(cfg, shape, mesh,
+                      with_labels=(shape.kind == "train"))
+
+
+def shapes_and_axes(model, key=None):
+    """(param ShapeDtypeStructs, logical-axes pytree) without allocating.
+
+    The axes tree (pure-python tuples) leaves ``init`` via a side channel
+    so only the array pytree is traced by eval_shape."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    box: Dict[str, Any] = {}
+
+    def f(k):
+        p, a = model.init(k)
+        box["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(f, key)
+    return shapes, box["axes"]
+
+
+def abstract_opt_state(param_shapes, master_weights: bool = False
+                       ) -> OptState:
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return OptState(m=jax.tree.map(f32, param_shapes),
+                    v=jax.tree.map(f32, param_shapes),
+                    step=jax.ShapeDtypeStruct((), jnp.int32),
+                    master=(jax.tree.map(f32, param_shapes)
+                            if master_weights else None))
+
+
+def param_specs(cfg, param_shapes, axes, mesh, policy: Optional[str] = None):
+    return build_specs(param_shapes, axes, policy or param_policy(cfg), mesh)
+
+
+def opt_specs(cfg, param_shapes, axes, mesh, master_weights: bool = False):
+    """ZeRO-1: moments (and the f32 master copy) always use fsdp rules."""
+    mspec = build_specs(param_shapes, axes, "fsdp", mesh)
+    return OptState(m=mspec, v=mspec, step=P(),
+                    master=mspec if master_weights else None)
+
+
+# ------------------------------------------------------------------ #
+# batches (train / prefill)
+# ------------------------------------------------------------------ #
+def make_batch(cfg: ArchConfig, shape: ShapeSpec, mesh,
+               with_labels: bool = True):
+    """(abstract batch dict, spec dict) for train/prefill inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    cd = jnp.dtype(cfg.compute_dtype)
+    dp = batch_spec(mesh, 2, b % _dp_size(mesh) == 0)
+    batch: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        # VLM stub: precomputed patch/text embeddings + 3D M-RoPE positions
+        batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cd)
+        specs["embeds"] = P(dp[0], None, None)
+        batch["positions"] = jax.ShapeDtypeStruct((b, 3, s), jnp.int32)
+        specs["positions"] = P(dp[0], None, None)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["tokens"] = dp
+    if cfg.is_encdec:
+        batch["enc_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), cd)
+        specs["enc_embeds"] = P(dp[0], None, None)
+    if with_labels:
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["labels"] = dp
+    return batch, specs
+
+
+def _dp_size(mesh) -> int:
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                        if a in ("pod", "data")]))
+
+
+# ------------------------------------------------------------------ #
+# serving caches (decode)
+# ------------------------------------------------------------------ #
+def make_serving_inputs(cfg: ArchConfig, shape: ShapeSpec, mesh):
+    """(abstract (token, caches, cur_index), specs) for decode cells."""
+    b, s = shape.global_batch, shape.seq_len
+    cd = jnp.dtype(cfg.compute_dtype)
+    pol = cache_specs(cfg, mesh, b, s)
+    layout = stack_layout(cfg)
+
+    caches = jax.eval_shape(
+        lambda: [_full_stack_cache(cfg, spec, b, s, cd) for spec in layout])
+    specs = [_stack_cache_specs(cfg, spec, pol, s) for spec in layout]
+
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    token_spec = P(pol["batch_axis"])
+    cur = jax.ShapeDtypeStruct((), jnp.int32)
+    return (token, caches, cur), (token_spec, specs, P())
+
+
+def _full_stack_cache(cfg, spec: StackSpec, b: int, s: int, dtype):
+    out = init_stack_cache(cfg, spec, b, s, dtype)
+    if cfg.is_encdec:
+        for i, kind in enumerate(spec.pattern):
+            shp = (spec.n_rep, b, cfg.encoder_seq, cfg.num_kv_heads,
+                   cfg.head_dim)
+            out[f"b{i}_x"] = (jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))
+    return out
+
+
+def _stack_cache_specs(cfg, spec: StackSpec, pol, s: int):
+    out: Dict[str, Any] = {}
+
+    def lift(p: P) -> P:              # prepend the stacked (n_rep) axis
+        return P(None, *p)
+
+    for i, kind in enumerate(spec.pattern):
+        if kind == "attn":
+            cl = cache_seq_len(cfg, "attn", s)
+            sp = lift(pol["attn"](cfg.num_kv_heads, cl))
+            out[f"b{i}"] = (sp, sp)
+        elif kind == "rec":
+            w = cfg.lru_width or cfg.d_model
+            conv = lift(pol["conv"](w))
+            h = lift(pol["lru_h"](w))
+            out[f"b{i}"] = (conv, h)
+        else:  # ssm
+            conv = lift(pol["conv"](cfg.d_inner + 2 * cfg.ssm_state))
+            h = lift(pol["ssm_h"](cfg.ssm_heads))
+            out[f"b{i}"] = (conv, h)
+        if cfg.is_encdec:
+            sp = lift(pol["attn"](cfg.num_kv_heads, cfg.encoder_seq))
+            out[f"b{i}_x"] = (sp, sp)
+    return out

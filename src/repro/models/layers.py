@@ -1,0 +1,311 @@
+"""Core transformer layers: RMSNorm, RoPE/M-RoPE, GQA attention (full /
+causal / local / cross), SwiGLU MLP, KV caches.
+
+Pure-functional JAX: params are nested dicts of arrays; every init returns
+``(params, axes)`` where ``axes`` mirrors the params pytree with *logical
+axis name* tuples consumed by ``repro.sharding.policy``.  All functions are
+shape-polymorphic over batch/seq and safe to trace with ShapeDtypeStructs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm", "init_rms_norm", "rope", "mrope", "init_attention",
+    "attention", "decode_attention", "init_mlp", "mlp", "init_dense",
+    "big_neg", "make_mask",
+]
+
+Params = Dict[str, Any]
+
+
+def big_neg(dtype) -> jnp.ndarray:
+    return jnp.asarray(-0.7 * float(jnp.finfo(dtype).max), dtype)
+
+
+# --------------------------------------------------------------------- #
+# init helpers
+# --------------------------------------------------------------------- #
+def init_dense(key, shape, axes, dtype, scale: Optional[float] = None):
+    """He/Glorot-ish init: normal with 1/sqrt(fan_in)."""
+    fan_in = shape[0] if len(shape) <= 2 else int(np.prod(shape[:-1]))
+    scale = scale if scale is not None else fan_in ** -0.5
+    w = jax.random.normal(key, shape, jnp.float32) * scale
+    return w.astype(dtype), axes
+
+
+def init_rms_norm(d: int, dtype, axis: str = "embed"):
+    return jnp.ones((d,), dtype), (axis,)
+
+
+def rms_norm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-6):
+    """RMSNorm with f32 statistics regardless of activation dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * g.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# rotary embeddings
+# --------------------------------------------------------------------- #
+def _rope_angles(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, head_dim/2), f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4):
+    """Apply rotary embedding.  x: (B, S, H, D), positions: (B, S)."""
+    cos, sin = _rope_angles(positions, x.shape[-1], theta)
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]    # (B,S,1,D/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def mrope(x: jnp.ndarray, positions: jnp.ndarray, sections: Tuple[int, ...],
+          theta: float = 1e4):
+    """Multimodal RoPE (Qwen2-VL): positions (B, 3, S) — one position id
+    stream per section group (temporal/height/width); the head_dim/2
+    frequency axis is partitioned by ``sections``."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # build per-frequency position stream: section i uses positions[:, i]
+    sec_id = np.repeat(np.arange(len(sections)), sections)      # (half,)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),                          # (B,3,S)
+        jnp.asarray(sec_id)[None, :, None] * jnp.ones(
+            (positions.shape[0], half, positions.shape[-1]), jnp.int32),
+        axis=1)                                                  # (B,half,S)
+    ang = jnp.einsum("bfs,f->bsf", pos, freqs)                   # (B,S,half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------- #
+def init_attention(key, cfg, dtype):
+    """QKV + output projections (+ optional per-head qk RMSNorm)."""
+    d, qd, kvd = cfg.d_model, cfg.attn_q_dim, cfg.attn_kv_dim
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["wq"], a["wq"] = init_dense(ks[0], (d, qd), ("embed", "q_proj"), dtype)
+    p["wk"], a["wk"] = init_dense(ks[1], (d, kvd), ("embed", "kv_proj"), dtype)
+    p["wv"], a["wv"] = init_dense(ks[2], (d, kvd), ("embed", "kv_proj"), dtype)
+    p["wo"], a["wo"] = init_dense(ks[3], (qd, d), ("q_proj", "embed"), dtype)
+    if cfg.qk_norm:
+        p["q_norm"], a["q_norm"] = init_rms_norm(cfg.head_dim, dtype, "head_dim")
+        p["k_norm"], a["k_norm"] = init_rms_norm(cfg.head_dim, dtype, "head_dim")
+    return p, a
+
+
+def make_mask(sq: int, skv: int, kind: str, window: int = 0,
+              offset: int = 0):
+    """(sq, skv) boolean mask; True = attend.  ``offset`` shifts query
+    positions (prefill continuation)."""
+    if kind == "full":
+        return jnp.ones((sq, skv), bool)
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(skv)[None, :]
+    m = kj <= qi
+    if kind == "local":
+        m &= kj > qi - window
+    return m
+
+
+def _sdpa(q, k, v, mask, compute_dtype):
+    """q (B,Sq,H,D), k/v (B,Skv,KV,D) GQA; softmax in f32."""
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    qg = q.reshape(b, sq, kv, groups, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (dh ** -0.5)
+    scores = jnp.where(mask, scores, big_neg(jnp.float32))
+    probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, dh)
+
+
+# Query-chunk size for blockwise (flash-style) attention.  Scores are only
+# ever materialized as (B, H, CHUNK, Skv) — the whole (Sq, Skv) matrix
+# never exists, which is what keeps long-sequence training inside HBM.
+ATTN_CHUNK = 512
+
+
+def _sdpa_blockwise(q, k, v, mask_kind: str, window: int, compute_dtype,
+                    chunk: int = ATTN_CHUNK):
+    """Exact chunked attention (python loop over q chunks; each chunk does
+    a full softmax over Skv).  Unrolled rather than scanned so the
+    roofline's cost analysis prices every chunk (DESIGN.md §6); chunks are
+    chained with an optimization barrier so XLA cannot inflate peak memory
+    by batching the chunk score buffers."""
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    kv = k.shape[2]
+    groups = h // kv
+    nq = sq // chunk
+    outs = []
+    carry = jnp.zeros((), q.dtype)
+    for i in range(nq):
+        qc = q[:, i * chunk:(i + 1) * chunk]
+        qc = qc + carry  # sequencing dependency (numerically zero)
+        qg = qc.reshape(b, chunk, kv, groups, dh)
+        # causal KV slicing: chunk i only sees keys < (i+1)*chunk, and for
+        # local attention nothing older than the window — static slices,
+        # so masked-out blocks cost neither FLOPs nor bytes (§Perf)
+        hi = (i + 1) * chunk
+        lo = 0
+        if mask_kind == "local" and window:
+            lo = max(0, ((i * chunk - window + 1) // chunk) * chunk)
+        ks, vs = k[:, lo:hi], v[:, lo:hi]
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, ks,
+                            preferred_element_type=jnp.float32)
+        scores = scores * (dh ** -0.5)
+        qi = i * chunk + jnp.arange(chunk)[:, None]
+        kj = lo + jnp.arange(hi - lo)[None, :]
+        m = kj <= qi
+        if mask_kind == "local":
+            m &= kj > qi - window
+        scores = jnp.where(m[None, None, None], scores, big_neg(jnp.float32))
+        probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", probs, vs)
+        o = o.reshape(b, chunk, h, dh)
+        o, carry = jax.lax.optimization_barrier(
+            (o, jnp.zeros((), q.dtype)))
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(p: Params, cfg, x: jnp.ndarray, positions: jnp.ndarray,
+              mask_kind: str = "causal", xattn_kv: Optional[jnp.ndarray] = None,
+              use_rope: bool = True, seq_shard: bool = False):
+    """Self- or cross-attention over a full sequence (training / prefill).
+
+    Returns (out, kv) where kv = (k, v) for cache construction."""
+    b, s, d = x.shape
+    cd = x.dtype
+    q = (x @ p["wq"].astype(cd)).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    src = xattn_kv if xattn_kv is not None else x
+    skv = src.shape[1]
+    k = (src @ p["wk"].astype(cd)).reshape(b, skv, cfg.num_kv_heads,
+                                           cfg.head_dim)
+    v = (src @ p["wv"].astype(cd)).reshape(b, skv, cfg.num_kv_heads,
+                                           cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope and xattn_kv is None:
+        if cfg.mrope and positions.ndim == 3:
+            q = mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+            k = mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            pos2 = positions if positions.ndim == 2 else positions[:, 0]
+            q = rope(q, pos2, cfg.rope_theta)
+            k = rope(k, pos2, cfg.rope_theta)
+    mk = "full" if xattn_kv is not None else mask_kind
+    if (cfg.attn_impl == "blockwise" and mk in ("causal", "local")
+            and s == skv and s % ATTN_CHUNK == 0 and s > ATTN_CHUNK):
+        if seq_shard:
+            # under a sequence-sharded residual stream, re-gather q/k/v
+            # ONCE here (the Megatron-SP block boundary) rather than per
+            # q-chunk slice (§Perf, cell B4: neutral, kept for intent);
+            # without seq-sharding q/k/v stay head-sharded — constraining
+            # them here would force replication, so this is gated
+            from repro.sharding.policy import constrain
+            q = constrain(q, ("pod", "data"), None, None, None)
+            k = constrain(k, ("pod", "data"), None, None, None)
+            v = constrain(v, ("pod", "data"), None, None, None)
+        out = _sdpa_blockwise(q, k, v, mk, cfg.window, cd)
+    else:
+        mask = make_mask(s, skv, mk, cfg.window)[None, None, None]
+        out = _sdpa(q, k, v, mask, cd)
+    out = out.reshape(b, s, cfg.attn_q_dim) @ p["wo"].astype(cd)
+    return out, (k, v)
+
+
+def decode_attention(p: Params, cfg, x: jnp.ndarray, cache_k, cache_v,
+                     cur_index, window: int = 0):
+    """One-token decode against a KV cache.
+
+    x (B, 1, d); cache_k/v (B, S, KV, D).  ``cur_index`` is a scalar
+    (lock-step decode, the dry-run path) or an (B,) int vector (continuous
+    batching: every slot at its own position).  For windowed layers the
+    cache is a circular buffer of ``window`` slots (RoPE is applied with
+    absolute positions before the write, so slot order does not matter)."""
+    b, _, d = x.shape
+    cd = x.dtype
+    smax = cache_k.shape[1]
+    per_row = hasattr(cur_index, "ndim") and cur_index.ndim == 1
+    q = (x @ p["wq"].astype(cd)).reshape(b, 1, cfg.num_heads, cfg.head_dim)
+    k = (x @ p["wk"].astype(cd)).reshape(b, 1, cfg.num_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"].astype(cd)).reshape(b, 1, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    pos = (cur_index[:, None].astype(jnp.int32) if per_row
+           else jnp.full((b, 1), cur_index, jnp.int32))
+    if cfg.mrope:
+        pos3 = jnp.broadcast_to(pos[:, None, :], (b, 3, 1))
+        q = mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+        k = mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+
+    circular = bool(window) and smax <= window
+    wpos = pos[:, 0] % smax if circular else pos[:, 0]
+    if per_row or circular:
+        rows = jnp.arange(b)
+        cache_k = cache_k.at[rows, wpos].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, wpos].set(v[:, 0].astype(cache_v.dtype))
+    else:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, cur_index, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, cur_index, 0, 0))
+    kj = jnp.arange(smax)[None, :]                      # (1, S)
+    cur = pos[:, :1]                                    # (B, 1)
+    if circular:
+        # every written slot is within the window by construction
+        valid = (kj <= cur) | (cur >= smax)
+    else:
+        valid = kj <= cur
+        if window:
+            valid &= kj > cur - window
+    mask = valid[:, None, None, None, :]                # (B,1,1,1,S)
+    out = _sdpa(q, cache_k.astype(cd), cache_v.astype(cd), mask, cd)
+    out = out.reshape(b, 1, cfg.attn_q_dim) @ p["wo"].astype(cd)
+    return out, cache_k, cache_v
+
+
+# --------------------------------------------------------------------- #
+# MLP (SwiGLU)
+# --------------------------------------------------------------------- #
+def init_mlp(key, d: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["w_gate"], a["w_gate"] = init_dense(ks[0], (d, d_ff), ("embed", "mlp"), dtype)
+    p["w_up"], a["w_up"] = init_dense(ks[1], (d, d_ff), ("embed", "mlp"), dtype)
+    p["w_down"], a["w_down"] = init_dense(ks[2], (d_ff, d), ("mlp", "embed"), dtype)
+    return p, a
+
+
+def mlp(p: Params, x: jnp.ndarray):
+    cd = x.dtype
+    h = jax.nn.silu(x @ p["w_gate"].astype(cd)) * (x @ p["w_up"].astype(cd))
+    return h @ p["w_down"].astype(cd)

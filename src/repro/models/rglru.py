@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block: x -> [W_in -> causal conv -> RG-LRU] * GeLU(W_gate x) -> W_out.
+RG-LRU recurrence (arXiv:2402.19427):
+
+    r_t = sigmoid(w_r * u_t + b_r)          (diagonal recurrence gate)
+    i_t = sigmoid(w_i * u_t + b_i)          (diagonal input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training/prefill evaluates the linear recurrence with an associative scan
+(O(S log S) depth, fully parallel — the TPU-friendly form; the Pallas
+kernel in ``repro.kernels.rglru_scan`` implements the blocked variant).
+Decode is the O(1) step on an ``(B, W)`` state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense
+from .ssm import _causal_conv
+
+__all__ = ["init_rglru", "rglru_forward", "rglru_decode_step",
+           "init_rglru_state", "rglru_scan_ref"]
+
+_C = 8.0
+
+
+def init_rglru(key, cfg, dtype):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["w_in"], a["w_in"] = init_dense(ks[0], (d, w), ("embed", "lru"), dtype)
+    p["w_gate"], a["w_gate"] = init_dense(ks[1], (d, w), ("embed", "lru"), dtype)
+    p["w_out"], a["w_out"] = init_dense(ks[2], (w, d), ("lru", "embed"), dtype)
+    p["conv_w"], a["conv_w"] = init_dense(ks[3], (cfg.conv_width, w),
+                                          (None, "lru"), dtype,
+                                          scale=cfg.conv_width ** -0.5)
+    p["conv_b"] = jnp.zeros((w,), dtype); a["conv_b"] = ("lru",)
+    # Lambda init so that a ~ U[0.9, 0.999] at r = 0.5 (paper's stable range)
+    p["lam"] = jnp.linspace(0.5, 4.0, w).astype(jnp.float32)
+    a["lam"] = ("lru",)
+    p["w_r"] = jnp.ones((w,), jnp.float32); a["w_r"] = ("lru",)
+    p["b_r"] = jnp.zeros((w,), jnp.float32); a["b_r"] = ("lru",)
+    p["w_i"] = jnp.ones((w,), jnp.float32); a["w_i"] = ("lru",)
+    p["b_i"] = jnp.zeros((w,), jnp.float32); a["b_i"] = ("lru",)
+    return p, a
+
+
+def rglru_scan_ref(a: jnp.ndarray, bx: jnp.ndarray,
+                   h0: Optional[jnp.ndarray] = None):
+    """Linear recurrence h_t = a_t h_{t-1} + bx_t via associative scan.
+    a, bx: (B, S, W); h0 optional (B, W).  Returns (h (B,S,W), h_last)."""
+    if h0 is not None:
+        a = jnp.concatenate([jnp.ones_like(h0)[:, None], a], axis=1)
+        bx = jnp.concatenate([h0[:, None], bx], axis=1)
+
+    def combine(x, y):
+        ax, bxx = x
+        ay, byy = y
+        return ax * ay, ay * bxx + byy
+
+    ha, hb = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h = hb
+    if h0 is not None:
+        h = h[:, 1:]
+    return h, h[:, -1]
+
+
+def _gates(p, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * p["w_r"] + p["b_r"])
+    i = jax.nn.sigmoid(uf * p["w_i"] + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    bx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, bx
+
+
+def rglru_forward(p, cfg, x, use_pallas: bool = False,
+                  state: Optional[Tuple] = None):
+    """Full-sequence block.  x (B,S,d) -> (y (B,S,d), (conv_state, h_last))."""
+    cd = x.dtype
+    u = x @ p["w_in"].astype(cd)
+    conv_state = state[0] if state is not None else None
+    u, conv_state = _causal_conv(u, p["conv_w"].astype(cd),
+                                 p["conv_b"].astype(cd), conv_state)
+    a, bx = _gates(p, u)
+    h0 = state[1] if state is not None else None
+    if use_pallas:
+        from repro.kernels.rglru_scan.ops import rglru_scan
+        h, h_last = rglru_scan(a, bx, h0)
+    else:
+        h, h_last = rglru_scan_ref(a, bx, h0)
+    y = h.astype(cd) * jax.nn.gelu(x @ p["w_gate"].astype(cd))
+    return y @ p["w_out"].astype(cd), (conv_state, h_last)
+
+
+def init_rglru_state(cfg, batch: int, dtype):
+    w = cfg.lru_width or cfg.d_model
+    conv = jnp.zeros((batch, cfg.conv_width - 1, w), dtype)
+    h = jnp.zeros((batch, w), jnp.float32)
+    return conv, h
+
+
+def rglru_decode_step(p, cfg, x, state):
+    """One-token step.  x (B,1,d)."""
+    conv_state, h = state
+    cd = x.dtype
+    u = x @ p["w_in"].astype(cd)
+    u, conv_state = _causal_conv(u, p["conv_w"].astype(cd),
+                                 p["conv_b"].astype(cd), conv_state)
+    a, bx = _gates(p, u[:, 0])
+    h = a * h + bx
+    y = h[:, None].astype(cd) * jax.nn.gelu(x @ p["w_gate"].astype(cd))
+    return y @ p["w_out"].astype(cd), (conv_state, h)

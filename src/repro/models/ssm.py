@@ -1,0 +1,210 @@
+"""Mamba-2 (SSD, state-space duality) block.
+
+Training/prefill uses the *chunked* SSD algorithm (arXiv:2405.21060 §6):
+intra-chunk attention-like term + inter-chunk recurrent state passing —
+the formulation whose inner matmuls map onto the MXU (and onto the Pallas
+kernel in ``repro.kernels.ssd_scan``).  Decode is the O(1) recurrence on a
+``(B, H, N, P)`` state.
+
+Layout follows the reference Mamba-2: in_proj -> [z | x | B | C | dt],
+causal conv over (x,B,C), per-head scalar decay A, D skip, gated RMSNorm,
+out_proj.  n_groups = 1.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense, rms_norm
+
+__all__ = ["init_ssm", "ssd_forward", "ssm_block", "ssm_decode_step",
+           "init_ssm_state", "ssd_chunk_scan_ref"]
+
+
+def init_ssm(key, cfg, dtype):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.conv_width
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    in_dim = 2 * di + 2 * n + h
+    p["in_proj"], a["in_proj"] = init_dense(ks[0], (d, in_dim),
+                                            ("embed", "ssm_in"), dtype)
+    p["conv_w"], a["conv_w"] = init_dense(ks[1], (w, di + 2 * n),
+                                          (None, "ssm_conv"), dtype,
+                                          scale=w ** -0.5)
+    p["conv_b"] = jnp.zeros((di + 2 * n,), dtype)
+    a["conv_b"] = ("ssm_conv",)
+    p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32)
+    a["A_log"] = ("ssm_heads",)
+    p["D"] = jnp.ones((h,), jnp.float32)
+    a["D"] = ("ssm_heads",)
+    p["dt_bias"] = jnp.zeros((h,), jnp.float32)
+    a["dt_bias"] = ("ssm_heads",)
+    p["norm"] = jnp.ones((di,), dtype)
+    a["norm"] = ("ssm_inner",)
+    p["out_proj"], a["out_proj"] = init_dense(ks[2], (di, d),
+                                              ("ssm_inner", "embed"), dtype)
+    return p, a
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv.  x (B,S,C), w (W,C).  With ``state``
+    (B, W-1, C) it is a streaming step (S may be 1); returns new state."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                # (B, S+W-1, C)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):, :]
+    return out + b, new_state
+
+
+def ssd_chunk_scan_ref(xbar, a_log, Bm, Cm, h0=None, chunk: int = 128):
+    """Chunked SSD scan — the pure-jnp oracle used by both the model and
+    the Pallas kernel tests.
+
+    xbar (B,S,H,P) — dt-scaled inputs;  a_log (B,S,H) — per-step log decay;
+    Bm, Cm (B,S,N) — input/output projections (shared across heads, G=1);
+    h0 optional (B,H,N,P) initial state.  Returns (y (B,S,H,P),
+    h_final (B,H,N,P))."""
+    b, s, h, p_ = xbar.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s) if s % chunk else chunk
+    if s % q:
+        # pad to a chunk multiple: a_log=0 (decay 1) and xbar=0 keep the
+        # final state exact; padded outputs are sliced off below.
+        pad = q - s % q
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    s_pad = xbar.shape[1]
+    nc = s_pad // q
+    xb = xbar.reshape(b, nc, q, h, p_)
+    al = a_log.reshape(b, nc, q, h).astype(jnp.float32)
+    bm = Bm.reshape(b, nc, q, n)
+    cm = Cm.reshape(b, nc, q, n)
+    s_out = s
+
+    # cumulative log-decay within each chunk
+    l = jnp.cumsum(al, axis=2)                                  # (B,NC,Q,H)
+    # intra-chunk: y_i += C_i . B_j  * exp(l_i - l_j) * xbar_j  (j <= i)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cm, bm)                  # (B,NC,Q,Q)
+    seg = l[:, :, :, None, :] - l[:, :, None, :, :]             # (B,NC,Q,Q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: upper-triangular seg is large-positive and would
+    # overflow, poisoning gradients through the where
+    seg = jnp.where(tri[None, None, :, :, None], seg, -1e30)
+    decay = jnp.exp(seg)
+    att = cb[..., None] * decay                                 # (B,NC,Q,Q,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", att.astype(xb.dtype), xb)
+
+    # chunk-level states: h_c = exp(L_c) h_{c-1} + sum_j exp(L_c - l_j) B_j xbar_j^T
+    lq = l[:, :, -1, :]                                         # (B,NC,H)
+    binp = jnp.einsum(
+        "bcqn,bcqhp->bcnhp", bm.astype(jnp.float32),
+        jnp.exp(lq[:, :, None, :] - l)[..., None]
+        * xb.astype(jnp.float32))                               # (B,NC,N,H,P)
+
+    def scan_fn(hprev, inp):
+        dec, upd = inp                                          # (B,H),(B,N,H,P)
+        hnew = hprev * jnp.exp(dec)[:, None, :, None] + upd
+        return hnew, hprev
+
+    if h0 is None:
+        h0 = jnp.zeros((b, n, h, p_), jnp.float32)
+    else:
+        h0 = jnp.moveaxis(h0, 1, 2).astype(jnp.float32)         # (B,N,H,P)
+    hfin, hprevs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(lq, 1, 0), jnp.moveaxis(binp, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)                         # (B,NC,N,H,P)
+
+    # inter-chunk: y_i += C_i . h_prev * exp(l_i)
+    y_inter = jnp.einsum("bcqn,bcnhp->bcqhp", cm.astype(jnp.float32),
+                         hprevs) * jnp.exp(l)[..., None]
+    y = (y_intra.astype(jnp.float32) + y_inter).astype(xb.dtype)
+    y = y.reshape(b, s_pad, h, p_)[:, :s_out]
+    return y, jnp.moveaxis(hfin, 1, 2)                          # (B,H,N,P)
+
+
+def ssd_forward(p, cfg, x, use_pallas: bool = False):
+    """Full-sequence SSD block body (training / prefill).
+
+    Returns (y (B,S,d), (conv_state, ssm_state)) for cache handoff."""
+    b, s, d = x.shape
+    cd = x.dtype
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = x @ p["in_proj"].astype(cd)
+    z, xc, bm, cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xc, bm, cm], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"].astype(cd),
+                                        p["conv_b"].astype(cd))
+    conv_out = jax.nn.silu(conv_out)
+    xc, bm, cm = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a_log = -jnp.exp(p["A_log"])[None, None, :] * dt             # (B,S,H)
+    xh = xc.reshape(b, s, h, pd)
+    xbar = xh * dt.astype(cd)[..., None]
+
+    if use_pallas:
+        from repro.kernels.ssd_scan.ops import ssd_chunk_scan
+        y, hfin = ssd_chunk_scan(xbar, a_log, bm, cm, chunk=cfg.ssm_chunk)
+    else:
+        y, hfin = ssd_chunk_scan_ref(xbar, a_log, bm, cm, chunk=cfg.ssm_chunk)
+    y = y + xh * p["D"].astype(cd)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(cd), (conv_state, hfin)
+
+
+def ssm_block(p, cfg, x, use_pallas: bool = False):
+    y, _ = ssd_forward(p, cfg, x, use_pallas)
+    return y
+
+
+def init_ssm_state(cfg, batch: int, dtype):
+    """(conv_state (B,W-1,di+2N), ssm_state (B,H,N,P))."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    conv = jnp.zeros((batch, cfg.conv_width - 1, di + 2 * n), dtype)
+    ssm = jnp.zeros((batch, cfg.ssm_heads, n, cfg.ssm_head_dim), dtype)
+    return conv, ssm
+
+
+def ssm_decode_step(p, cfg, x, state):
+    """One-token recurrence.  x (B,1,d); state from init_ssm_state."""
+    conv_state, hstate = state
+    b, _, d = x.shape
+    cd = x.dtype
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = x @ p["in_proj"].astype(cd)
+    z, xc, bm, cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xc, bm, cm], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"].astype(cd),
+                                        p["conv_b"].astype(cd), conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xc, bm, cm = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,1,H)
+    a = jnp.exp(-jnp.exp(p["A_log"])[None, :] * dt[:, 0])        # (B,H)
+    xh = xc.reshape(b, h, pd)
+    xbar = xh * dt[:, 0, :, None].astype(cd)
+    # h <- a h + B (x dt)^T ; y = C h + D x
+    upd = jnp.einsum("bn,bhp->bhnp", bm[:, 0].astype(cd), xbar)
+    hstate = hstate * a[:, :, None, None].astype(cd) + upd
+    y = jnp.einsum("bn,bhnp->bhp", cm[:, 0].astype(cd), hstate)
+    y = y + xh * p["D"].astype(cd)[None, :, None]
+    y = y.reshape(b, 1, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(cd), (conv_state, hstate)

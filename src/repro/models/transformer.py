@@ -1,0 +1,464 @@
+"""Decoder-LM stack (plus whisper-style encoder-decoder) for every
+assigned architecture.
+
+Depth is organized as *superblocks*: the repeating block pattern (e.g.
+RecurrentGemma's (rec, rec, attn)) is stacked ``n_rep`` times and applied
+with one ``lax.scan`` — compile time stays flat in depth, HLO stays small,
+and roofline accounting can price one superblock and multiply (DESIGN §6).
+A partial tail stack covers depths not divisible by the pattern length.
+
+Three entry modes share the same layer code:
+  * ``forward``      — full-sequence logits (training);
+  * ``prefill``      — full-sequence + caches (serving prefill);
+  * ``decode_step``  — one token against caches (serving decode).
+
+Caches are pytrees stacked over the same superblock layout, so the scan
+carries activations while caches stream through as xs/ys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (attention, decode_attention, init_attention, init_mlp,
+                     init_rms_norm, mlp, rms_norm)
+from .moe import init_moe, moe_ffn
+from .rglru import (init_rglru, init_rglru_state, rglru_decode_step,
+                    rglru_forward)
+from .ssm import (init_ssm, init_ssm_state, ssd_forward, ssm_decode_step)
+
+__all__ = ["Model", "build_model"]
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ #
+# single layer
+# ------------------------------------------------------------------ #
+def _has_mlp(cfg, kind: str) -> bool:
+    return cfg.d_ff > 0 and kind != "ssm"
+
+
+def init_layer(key, cfg, kind: str, dtype, cross: bool = False):
+    p: Params = {}
+    a: Params = {}
+    ks = jax.random.split(key, 8)
+    p["ln1"], a["ln1"] = init_rms_norm(cfg.d_model, dtype)
+    if kind == "attn":
+        p["attn"], a["attn"] = init_attention(ks[0], cfg, dtype)
+    elif kind == "rec":
+        p["rec"], a["rec"] = init_rglru(ks[0], cfg, dtype)
+    elif kind == "ssm":
+        p["ssm"], a["ssm"] = init_ssm(ks[0], cfg, dtype)
+    if cross:
+        p["ln_x"], a["ln_x"] = init_rms_norm(cfg.d_model, dtype)
+        p["xattn"], a["xattn"] = init_attention(ks[1], cfg, dtype)
+    if _has_mlp(cfg, kind):
+        p["ln2"], a["ln2"] = init_rms_norm(cfg.d_model, dtype)
+        if cfg.is_moe:
+            p["moe"], a["moe"] = init_moe(ks[2], cfg, dtype)
+        else:
+            p["mlp"], a["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    return p, a
+
+
+def apply_layer(p, cfg, kind: str, x, positions, mode: str,
+                cache=None, cur_index=None, enc_out=None,
+                mask_kind: Optional[str] = None, use_pallas: bool = False,
+                seq_shard: bool = False):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        mk = mask_kind or ("local" if cfg.window else "causal")
+        if mode == "decode":
+            out, ck, cv = decode_attention(p["attn"], cfg, h, cache[0],
+                                           cache[1], cur_index,
+                                           window=cfg.window)
+            new_cache = (ck, cv)
+        else:
+            out, (k, v) = attention(p["attn"], cfg, h, positions,
+                                    mask_kind=mk, seq_shard=seq_shard)
+            new_cache = (k, v)
+    elif kind == "rec":
+        if mode == "decode":
+            out, new_cache = rglru_decode_step(p["rec"], cfg, h, cache)
+        else:
+            out, new_cache = rglru_forward(p["rec"], cfg, h,
+                                           use_pallas=use_pallas)
+    else:  # ssm
+        if mode == "decode":
+            out, new_cache = ssm_decode_step(p["ssm"], cfg, h, cache)
+        else:
+            out, new_cache = ssd_forward(p["ssm"], cfg, h,
+                                         use_pallas=use_pallas)
+    x = x + out
+
+    if "xattn" in p:
+        h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        if mode == "decode":
+            # enc_out here is the per-layer cross KV cache (k, v)
+            from .layers import _sdpa, big_neg
+            b = h.shape[0]
+            cd = h.dtype
+            q = (h @ p["xattn"]["wq"].astype(cd)).reshape(
+                b, 1, cfg.num_heads, cfg.head_dim)
+            k, v = enc_out
+            mask = jnp.ones((1, 1, 1, 1, k.shape[1]), bool)
+            o = _sdpa(q, k.astype(cd), v.astype(cd), mask, cd)
+            out = o.reshape(b, 1, cfg.attn_q_dim) @ p["xattn"]["wo"].astype(cd)
+        else:
+            out, _ = attention(p["xattn"], cfg, h, positions,
+                               xattn_kv=enc_out)
+        x = x + out
+
+    if _has_mlp(cfg, kind):
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, aux = moe_ffn(p["moe"], cfg, h, train=(mode == "train"))
+        else:
+            y = mlp(p["mlp"], h)
+        x = x + y
+    return x, new_cache, aux
+
+
+def init_layer_cache(cfg, kind: str, batch: int, seq: int, dtype):
+    if kind == "attn":
+        shape = (batch, seq, cfg.num_kv_heads, cfg.head_dim)
+        return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    if kind == "rec":
+        return init_rglru_state(cfg, batch, dtype)
+    return init_ssm_state(cfg, batch, dtype)
+
+
+def cache_seq_len(cfg, kind: str, seq: int) -> int:
+    """Attention caches for windowed layers only need ``window`` slots."""
+    if kind == "attn" and cfg.window:
+        return min(seq, cfg.window)
+    return seq
+
+
+# ------------------------------------------------------------------ #
+# superblock stacks
+# ------------------------------------------------------------------ #
+@dataclass(frozen=True)
+class StackSpec:
+    pattern: Tuple[str, ...]   # block kinds within one superblock
+    n_rep: int                 # scan length
+
+
+def stack_layout(cfg) -> List[StackSpec]:
+    kinds = cfg.layer_kinds()
+    pat = cfg.block_pattern or (kinds[0],)
+    plen = len(pat)
+    n_full, rem = divmod(len(kinds), plen)
+    out = []
+    if n_full:
+        out.append(StackSpec(tuple(pat), n_full))
+    if rem:
+        out.append(StackSpec(tuple(pat[:rem]), 1))
+    return out
+
+
+def init_stack(key, cfg, spec: StackSpec, dtype, cross: bool = False):
+    """vmap layer init over the scan axis -> stacked leaves (n_rep, ...)."""
+    def one(k):
+        ps, axs = {}, {}
+        kk = jax.random.split(k, len(spec.pattern))
+        for i, kind in enumerate(spec.pattern):
+            ps[f"b{i}"], axs[f"b{i}"] = init_layer(kk[i], cfg, kind, dtype,
+                                                   cross)
+        return ps, axs
+
+    keys = jax.random.split(key, spec.n_rep)
+    params = jax.vmap(lambda k: one(k)[0])(keys)
+    _, axes = one(keys[0])
+    # prepend the scan ("layers") axis to every leaf's logical axes
+    axes = jax.tree.map(lambda t: ("layers",) + tuple(t), axes,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    return params, axes
+
+
+def init_stack_cache(cfg, spec: StackSpec, batch: int, seq: int, dtype):
+    def one():
+        return {f"b{i}": init_layer_cache(cfg, kind, batch,
+                                          cache_seq_len(cfg, kind, seq),
+                                          dtype)
+                for i, kind in enumerate(spec.pattern)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (spec.n_rep,) + x.shape), one())
+
+
+def apply_stack(params, cfg, spec: StackSpec, x, positions, mode: str,
+                cache=None, cur_index=None, enc_out=None,
+                mask_kind=None, use_pallas=False, remat: str = "none",
+                unroll: bool = False, seq_shard: bool = False):
+    """Scan the superblock over its repeat axis.
+
+    mode="train":   xs = params,          ys = None
+    mode="prefill": xs = params,          ys = fresh caches
+    mode="decode":  xs = (params, cache), ys = updated caches
+                    (cross-KV entries ``b{i}_x`` pass through unchanged)
+    ``unroll=True`` replaces the scan with a python loop (used by the
+    roofline's per-layer cost accounting — XLA's cost analysis counts a
+    while body once regardless of trip count, so costed variants must be
+    unrolled; DESIGN.md §6).
+    Returns (x, new_cache_stacked_or_None, aux_total)."""
+
+    def run_layers(x, aux, p_slice, c_slice):
+        new_c = {}
+        for i, kind in enumerate(spec.pattern):
+            c_in = c_slice[f"b{i}"] if c_slice is not None else None
+            eo = enc_out
+            if c_slice is not None and f"b{i}_x" in c_slice:
+                eo = c_slice[f"b{i}_x"]
+                new_c[f"b{i}_x"] = eo
+            x, c_out, a = apply_layer(p_slice[f"b{i}"], cfg, kind, x,
+                                      positions, mode, cache=c_in,
+                                      cur_index=cur_index, enc_out=eo,
+                                      mask_kind=mask_kind,
+                                      use_pallas=use_pallas,
+                                      seq_shard=seq_shard)
+            if seq_shard and mode != "decode":
+                # sequence-parallel residual (Megatron-SP): norms/residual
+                # live seq-sharded over "model"; XLA turns each block's
+                # all-reduce pair into all-gather + reduce-scatter — half
+                # the activation wire (§Perf)
+                from repro.sharding.policy import constrain
+                x = constrain(x, ("pod", "data"), "model", None)
+            new_c[f"b{i}"] = c_out
+            aux = aux + a
+        return x, aux, new_c
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if mode == "decode":
+        def body(carry, xs):
+            x, aux = carry
+            p_slice, c_slice = xs
+            x, aux, new_c = run_layers(x, aux, p_slice, c_slice)
+            return (x, aux), new_c
+
+        if unroll:
+            aux, ys = aux0, []
+            for r in range(spec.n_rep):
+                sl = jax.tree.map(lambda t: t[r], (params, cache))
+                (x, aux), nc = body((x, aux), sl)
+                ys.append(nc)
+            new_cache = jax.tree.map(lambda *t: jnp.stack(t), *ys)
+            return x, new_cache, aux
+        (x, aux), new_cache = jax.lax.scan(body, (x, aux0), (params, cache))
+        return x, new_cache, aux
+
+    def body(carry, p_slice):
+        x, aux = carry
+        x, aux, new_c = run_layers(x, aux, p_slice, None)
+        return (x, aux), (new_c if mode == "prefill" else None)
+
+    if remat != "none" and mode == "train":
+        policy = (jax.checkpoint_policies.dots_saveable if remat == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+
+    if unroll:
+        aux, ys = aux0, []
+        for r in range(spec.n_rep):
+            sl = jax.tree.map(lambda t: t[r], params)
+            (x, aux), nc = body((x, aux), sl)
+            ys.append(nc)
+        new_cache = (jax.tree.map(lambda *t: jnp.stack(t), *ys)
+                     if mode == "prefill" else None)
+        return x, new_cache, aux
+    (x, aux), new_cache = jax.lax.scan(body, (x, aux0), params)
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------------ #
+# full model
+# ------------------------------------------------------------------ #
+@dataclass
+class Model:
+    cfg: Any
+    use_pallas: bool = False
+    remat: str = "dots"
+    unroll: bool = False       # unrolled layers (roofline cost variants)
+    seq_shard: bool = False    # sequence-parallel residual stream
+
+    # ---------------- init ------------------------------------------- #
+    def init(self, key) -> Tuple[Params, Params]:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 8)
+        p: Params = {}
+        a: Params = {}
+        p["embed"], a["embed"] = jax.random.normal(
+            ks[0], (cfg.vocab_size, cfg.d_model), jnp.float32
+        ).astype(dtype) * 0.02, ("vocab", "embed")
+        for i, spec in enumerate(stack_layout(cfg)):
+            p[f"stack{i}"], a[f"stack{i}"] = init_stack(
+                ks[1 + i], cfg, spec, dtype, cross=cfg.is_encdec)
+        p["final_norm"], a["final_norm"] = init_rms_norm(cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            from .layers import init_dense
+            p["head"], a["head"] = init_dense(
+                ks[5], (cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                dtype)
+        if cfg.is_encdec:
+            enc_spec = StackSpec(("attn",), cfg.encoder_layers)
+            p["enc_stack"], a["enc_stack"] = init_stack(ks[6], cfg, enc_spec,
+                                                        dtype)
+            p["enc_norm"], a["enc_norm"] = init_rms_norm(cfg.d_model, dtype)
+        return p, a
+
+    # ---------------- helpers ----------------------------------------- #
+    def _embed(self, params, tokens):
+        cd = jnp.dtype(self.cfg.compute_dtype)
+        return params["embed"][tokens].astype(cd)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+        return (x @ head.astype(x.dtype)).astype(jnp.float32)
+
+    def _positions(self, tokens_shape, positions):
+        b, s = tokens_shape
+        if positions is not None:
+            return positions
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        if self.cfg.mrope:
+            pos = jnp.broadcast_to(pos[:, None], (b, 3, s))
+        return pos
+
+    def encode(self, params, enc_embeds):
+        """Whisper-style bidirectional encoder over frontend embeddings."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        x = enc_embeds.astype(cd)
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        spec = StackSpec(("attn",), cfg.encoder_layers)
+        x, _, _ = apply_stack(params["enc_stack"], cfg, spec, x, pos,
+                              "train", mask_kind="full",
+                              use_pallas=self.use_pallas, remat=self.remat,
+                              unroll=self.unroll, seq_shard=self.seq_shard)
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # ---------------- entry points ------------------------------------ #
+    def forward(self, params, tokens=None, positions=None, embeds=None,
+                enc_embeds=None, mode: str = "train"):
+        """Full-sequence logits.  ``embeds`` overrides token embedding
+        (VLM stub); ``enc_embeds`` feeds the encoder (whisper stub)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens) if embeds is None else embeds.astype(
+            jnp.dtype(cfg.compute_dtype))
+        b, s, _ = x.shape
+        pos = self._positions((b, s), positions)
+        enc_out = None
+        if cfg.is_encdec:
+            assert enc_embeds is not None
+            enc_out = self.encode(params, enc_embeds)
+        aux_total = jnp.zeros((), jnp.float32)
+        caches = []
+        for i, spec in enumerate(stack_layout(cfg)):
+            x, cache, aux = apply_stack(
+                params[f"stack{i}"], cfg, spec, x, pos, mode,
+                enc_out=enc_out, use_pallas=self.use_pallas,
+                remat=self.remat, unroll=self.unroll,
+                seq_shard=self.seq_shard)
+            caches.append(cache)
+            aux_total = aux_total + aux
+        if mode == "prefill":
+            # serving prefill needs only the last position's logits; the
+            # full (B, S, V) projection is ~T*d*V wasted FLOPs (§Perf)
+            x = x[:, -1:]
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return self._logits(params, x), aux_total, caches, enc_out
+
+    def prefill(self, params, tokens=None, positions=None, embeds=None,
+                enc_embeds=None, pad_to: Optional[int] = None):
+        """Run the prompt; return (last-token logits, serving caches).
+
+        For attention layers the prompt K/V are computed by the forward
+        pass; they are written into fixed-size serving caches sized
+        ``pad_to`` (default: prompt length)."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        logits, _, run_caches, enc_out = self.forward(
+            params, tokens, positions, embeds, enc_embeds, mode="prefill")
+        b = (tokens.shape[0] if tokens is not None else embeds.shape[0])
+        s = (tokens.shape[1] if tokens is not None else embeds.shape[1])
+        pad_to = pad_to or s
+
+        serving = []
+        for spec, cache in zip(stack_layout(cfg), run_caches):
+            def fix(path_kind, c):
+                if path_kind == "attn":
+                    k, v = c            # (n_rep, B, S', KV, D) prompt kv
+                    target = cache_seq_len(cfg, "attn", pad_to)
+
+                    def grow(t):
+                        src = t.shape[2]
+                        if src > target:
+                            # windowed circular buffer: keep the tail and
+                            # roll so position p sits at slot p % target
+                            tail = t[:, :, -target:]
+                            r = src % target
+                            return jnp.roll(tail, r, axis=2) if r else tail
+                        if src == target:
+                            return t
+                        pad = jnp.zeros(t.shape[:2] + (target - src,)
+                                        + t.shape[3:], t.dtype)
+                        return jnp.concatenate([t, pad], axis=2)
+                    return (grow(k), grow(v))
+                return c
+            fixed = {}
+            for i, kind in enumerate(spec.pattern):
+                fixed[f"b{i}"] = fix(kind, cache[f"b{i}"])
+                if cfg.is_encdec and enc_out is not None:
+                    # cross-attention KV, computed once from the encoder
+                    fixed[f"b{i}_x"] = self._cross_kv(params, spec, i,
+                                                      enc_out)
+            serving.append(fixed)
+        return logits[:, -1], serving
+
+    def _cross_kv(self, params, spec, i, enc_out):
+        cfg = self.cfg
+        cd = enc_out.dtype
+        # per-rep cross K/V: vmap projection over the stacked layer params
+        stack_idx = 0  # encdec archs have a single uniform stack
+        pstack = params[f"stack{stack_idx}"]
+        wk = pstack[f"b{i}"]["xattn"]["wk"]          # (n_rep, d, kvd)
+        wv = pstack[f"b{i}"]["xattn"]["wv"]
+        b, s, _ = enc_out.shape
+        k = jnp.einsum("bsd,rde->rbse", enc_out, wk.astype(cd)).reshape(
+            wk.shape[0], b, s, cfg.num_kv_heads, cfg.head_dim)
+        v = jnp.einsum("bsd,rde->rbse", enc_out, wv.astype(cd)).reshape(
+            wv.shape[0], b, s, cfg.num_kv_heads, cfg.head_dim)
+        return (k, v)
+
+    def decode_step(self, params, token, caches, cur_index):
+        """One decode step.  token (B,) int32; returns (logits, caches)."""
+        cfg = self.cfg
+        x = self._embed(params, token[:, None])
+        b = token.shape[0]
+        new_caches = []
+        aux0 = jnp.zeros((), jnp.float32)
+        for i, spec in enumerate(stack_layout(cfg)):
+            x, cache, _ = apply_stack(
+                params[f"stack{i}"], cfg, spec, x, None, "decode",
+                cache=caches[i], cur_index=cur_index,
+                use_pallas=self.use_pallas, unroll=self.unroll)
+            new_caches.append(cache)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return self._logits(params, x)[:, 0], new_caches
+
+
+def build_model(cfg, use_pallas: bool = False, remat: str = "dots",
+                unroll: bool = False, seq_shard: bool = False) -> Model:
+    return Model(cfg=cfg, use_pallas=use_pallas, remat=remat,
+                 unroll=unroll, seq_shard=seq_shard)

@@ -1,0 +1,127 @@
+"""Batched serving engine: prefill + decode with slot-based continuous
+batching.
+
+A fixed pool of ``batch`` slots decodes in lock-step (one jitted
+decode_step per tick).  Finished sequences (EOS or max_len) free their
+slot; queued requests are admitted by re-prefilling the slot's cache
+entries.  Greedy or temperature sampling.  This is the single-host
+serving path; the dry-run's decode cells prove the same step function
+shards across the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Request", "ServeConfig", "ServingEngine"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0      # 0 = greedy
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServeConfig:
+    batch: int = 4                # decode slots
+    max_len: int = 256            # cache length
+    eos_id: int = -1              # -1: never stops early
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.queue: List[Request] = []
+        self.slots: List[Optional[Request]] = [None] * cfg.batch
+        self.pos = np.zeros(cfg.batch, np.int32)      # next write index
+        self.caches = None
+        self.key = jax.random.PRNGKey(cfg.seed)
+        self._decode = jax.jit(model.decode_step)
+        self.ticks = 0
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    # ---------------- internals --------------------------------------- #
+    def _admit(self) -> None:
+        """Fill free slots: prefill the prompt, merge its caches in."""
+        for i in range(self.cfg.batch):
+            if self.slots[i] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            last, caches = self.model.prefill(
+                self.params, req.prompt[None, :].astype(np.int32),
+                pad_to=self.cfg.max_len)
+            tok = self._sample(last, req)[0]
+            req.out_tokens.append(int(tok))
+            if self.caches is None:
+                self.caches = jax.tree.map(
+                    lambda c: jnp.repeat(jnp.zeros_like(c), self.cfg.batch,
+                                         axis=1), caches)
+            self.caches = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), i, axis=1),
+                self.caches, caches)
+            self.slots[i] = req
+            self.pos[i] = len(req.prompt)
+
+    def _sample(self, logits, req: Request):
+        if req.temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(
+            sub, logits / req.temperature, axis=-1))
+
+    def _retire(self, i: int) -> None:
+        self.slots[i] = None
+        self.pos[i] = 0
+
+    # ---------------- main loop ---------------------------------------- #
+    def step(self) -> int:
+        """One engine tick: admit + one decode step for all active slots.
+        Each slot decodes at its own position (per-row cur_index vector).
+        Returns the number of active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        tokens = np.zeros(self.cfg.batch, np.int32)
+        for i in active:
+            tokens[i] = self.slots[i].out_tokens[-1]
+        logits, self.caches = self._decode(self.params,
+                                           jnp.asarray(tokens),
+                                           self.caches,
+                                           jnp.asarray(self.pos))
+        self.ticks += 1
+        for i in active:
+            req = self.slots[i]
+            nxt = int(self._sample(logits[i:i + 1], req)[0])
+            req.out_tokens.append(nxt)
+            self.pos[i] += 1
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or nxt == self.cfg.eos_id
+                    or self.pos[i] >= self.cfg.max_len - 1):
+                req.done = True
+                self._retire(i)
+        return len(active)
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        while (self.queue or any(self.slots)) and self.ticks < max_ticks:
+            self.step()
+            done.extend(r for r in self.slots if r is not None and r.done)
+        return done

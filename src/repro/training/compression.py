@@ -1,0 +1,68 @@
+"""Gradient/update compression for the cross-pod gossip plane.
+
+Top-k sparsification with error feedback (memory): the residual of what
+was not transmitted is carried into the next round, so the compressed
+gossip remains unbiased over time.  Payloads shrink by ~(1 - k/n) x 2
+(values + int32 indices vs dense f32), which is what keeps outer-update
+dissemination cheap at fleet scale.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["topk_compress", "topk_decompress", "ErrorFeedback",
+           "payload_bytes"]
+
+
+def topk_compress(tree, frac: float):
+    """Keep the largest-|value| ``frac`` of entries per leaf.
+
+    Returns a compressed pytree of (indices, values, shape) per leaf."""
+    def one(x):
+        x = jnp.asarray(x)
+        n = x.size
+        k = max(1, int(n * frac))
+        flat = x.reshape(-1)
+        idx = jnp.argsort(jnp.abs(flat))[-k:]
+        return (idx.astype(jnp.int32), flat[idx], x.shape)
+    return jax.tree.map(one, tree)
+
+
+def topk_decompress(ctree):
+    def one(t):
+        idx, vals, shape = t
+        n = int(np.prod(shape))
+        return jnp.zeros((n,), vals.dtype).at[idx].set(vals).reshape(shape)
+    return jax.tree.map(one, ctree,
+                        is_leaf=lambda t: isinstance(t, tuple)
+                        and len(t) == 3)
+
+
+def payload_bytes(ctree) -> int:
+    total = 0
+    for idx, vals, _ in jax.tree.leaves(
+            ctree, is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3):
+        total += idx.size * 4 + vals.size * vals.dtype.itemsize
+    return total
+
+
+class ErrorFeedback:
+    """Residual memory: compress(update + residual); residual carries the
+    untransmitted remainder."""
+
+    def __init__(self, frac: float):
+        self.frac = frac
+        self.residual = None
+
+    def compress(self, tree):
+        if self.residual is not None:
+            tree = jax.tree.map(jnp.add, tree, self.residual)
+        ctree = topk_compress(tree, self.frac)
+        sent = topk_decompress(ctree)
+        self.residual = jax.tree.map(jnp.subtract, tree, sent)
+        return ctree

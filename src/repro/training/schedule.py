@@ -1,0 +1,43 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "warmup_linear", "constant"]
+
+
+def constant(value: float = 1.0) -> Callable:
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Callable:
+    """Linear warmup 0->1 then cosine decay 1->final_frac (as a multiplier
+    on AdamWConfig.lr)."""
+
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        t = (s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(
+            jnp.pi * t))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return fn
+
+
+def warmup_linear(warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.0) -> Callable:
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        t = (s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        lin = 1.0 - (1.0 - final_frac) * jnp.clip(t, 0.0, 1.0)
+        return jnp.where(s < warmup_steps, warm, lin)
+
+    return fn

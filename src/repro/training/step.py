@@ -1,0 +1,131 @@
+"""Train/serve step builders: loss, gradient accumulation, optimizer.
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+suitable for ``jax.jit`` with in/out shardings from
+``repro.sharding.policy``.  Microbatching (gradient accumulation) runs as
+a ``lax.scan`` over leading splits of the batch so the HLO stays compact.
+
+``make_prefill_step`` / ``make_decode_step`` wrap the model's serving
+entry points with the same signature discipline.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, OptState, adamw_update
+
+__all__ = ["cross_entropy", "make_loss_fn", "make_train_step",
+           "make_prefill_step", "make_decode_step"]
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token-mean CE; logits f32 (B, S, V), labels (B, S) int."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return nll.mean()
+
+
+def make_loss_fn(model, aux_coef: float = 1e-2):
+    def loss_fn(params, batch):
+        logits, aux, _, _ = model.forward(
+            params,
+            tokens=batch.get("tokens"),
+            positions=batch.get("positions"),
+            embeds=batch.get("embeds"),
+            enc_embeds=batch.get("enc_embeds"))
+        ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+        return ce + aux_coef * aux, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def _split_batch(batch: Dict[str, Any], n: int):
+    """(B, ...) -> (n, B//n, ...) for every array in the batch dict."""
+    return {k: v.reshape((n, v.shape[0] // n) + v.shape[1:])
+            for k, v in batch.items() if v is not None}
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, microbatches: int = 1,
+                    aux_coef: float = 1e-2,
+                    lr_schedule: Optional[Callable] = None,
+                    unroll: bool = False,
+                    param_axes=None, compute_policy: Optional[str] = None):
+    """``unroll`` replaces the microbatch scan with a python loop so the
+    dry-run's cost variants price every microbatch (DESIGN.md §6).
+
+    ``param_axes`` + ``compute_policy='tp'``: re-shard FSDP params to the
+    TP layout once at step entry, so the forward/backward's parameter
+    all-gather happens once per step instead of once per microbatch."""
+    loss_fn = make_loss_fn(model, aux_coef)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: OptState, batch):
+        if param_axes is not None and compute_policy is not None:
+            from repro.sharding.policy import reshard_tree
+            params = reshard_tree(params, param_axes, compute_policy)
+        if microbatches <= 1:
+            (loss, parts), grads = grad_fn(params, batch)
+        else:
+            mb = _split_batch(batch, microbatches)
+
+            def body(acc, one):
+                (l, p), g = grad_fn(params, one)
+                acc = jax.tree.map(jnp.add, acc,
+                                   (g, {"loss": l, "ce": p["ce"],
+                                        "aux": p["aux"]}))
+                return acc, None
+
+            zero_g = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            zero_m = {"loss": jnp.zeros(()), "ce": jnp.zeros(()),
+                      "aux": jnp.zeros(())}
+            acc = (zero_g, zero_m)
+            if unroll:
+                for i in range(microbatches):
+                    one = jax.tree.map(lambda t: t[i], mb)
+                    acc, _ = body(acc, one)
+                gsum, msum = acc
+            else:
+                (gsum, msum), _ = jax.lax.scan(body, acc, mb)
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, gsum)
+            loss = msum["loss"] * inv
+            parts = {"ce": msum["ce"] * inv, "aux": msum["aux"] * inv}
+
+        lr_scale = (lr_schedule(opt_state.step) if lr_schedule is not None
+                    else 1.0)
+        params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                             opt_state, lr_scale)
+        metrics = {"loss": loss, **parts, **om,
+                   "step": opt_state.step.astype(jnp.float32)}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch, pad_to: Optional[int] = None):
+        return model.prefill(params,
+                             tokens=batch.get("tokens"),
+                             positions=batch.get("positions"),
+                             embeds=batch.get("embeds"),
+                             enc_embeds=batch.get("enc_embeds"),
+                             pad_to=pad_to)
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, token, caches, cur_index):
+        logits, caches = model.decode_step(params, token, caches, cur_index)
+        return logits, caches
+    return decode_step

@@ -1,0 +1,98 @@
+"""Algorithm 3: bounded buffers, stale-pong discard, retries, timeouts,
+silent crashes (Fig. 5 failure scenarios, Fig. 6 walkthrough)."""
+
+import pytest
+
+from repro.core import BoundedPCBroadcast, Network, check_trace
+
+
+def chain_net(oob_loss=0.0, **kw):
+    """A -> B -> D slow chain (delay 5), plus reverse links; oob pongs."""
+    net = Network(seed=11, default_delay=5.0, oob_delay=0.1, oob_loss=oob_loss)
+    for pid in range(3):
+        net.add_process(BoundedPCBroadcast(pid, **kw))
+    A, B, D = 0, 1, 2
+    for (a, b) in [(A, B), (B, D), (B, A), (D, B)]:
+        net.connect(a, b)
+    return net, (A, B, D)
+
+
+def test_fig6_buffer_bound_resets_phase_and_discards_stale_pong():
+    net, (A, B, D) = chain_net(max_size=2, max_retry=10)
+    net.procs[A].broadcast("a")
+    net.run(until=1.0)
+    net.connect(A, D, delay=0.1)               # phase 1: ping pi_1
+    first_ctr = net.procs[A].B[D][0]
+    # Deliver 3 messages at A during the phase -> exceeds maxSize=2.
+    for i in range(3):
+        net.procs[A].broadcast(f"m{i}")
+    assert net.procs[A].B[D][0] > first_ctr, "buffer must reset w/ new counter"
+    assert len(net.procs[A].B[D][1]) == 0, "reset buffer starts empty"
+    net.run()
+    rep = check_trace(net.trace, all_pids={A, B, D})
+    assert rep.ok, rep.summary()
+    assert D in net.procs[A].Q                  # eventually safe
+    assert net.procs[A].R.get(D) is None        # retry state cleared
+
+
+def test_lost_pong_timeout_retry_recovers():
+    """Fig. 5c: the pong is lost; the timeout retries and succeeds once
+    the oob channel recovers."""
+    net, (A, B, D) = chain_net(oob_loss=1.0, max_retry=50, ping_timeout=30.0)
+    net.procs[A].broadcast("a")
+    net.run(until=1.0)
+    net.connect(A, D, delay=0.1)
+    net.run(until=40.0)                          # first pong lost; timeout hit
+    assert D not in net.procs[A].Q
+    assert net.procs[A].R[D] >= 1                # at least one retry
+    net.oob_loss = 0.0                           # channel recovers
+    net.run()
+    rep = check_trace(net.trace, all_pids={A, B, D})
+    assert rep.ok, rep.summary()
+    assert D in net.procs[A].Q
+
+
+def test_silent_crash_exhausts_retries_and_closes_link():
+    """Fig. 5b: the target departs silently; maxRetry bounds the buffer's
+    lifetime and the link is abandoned."""
+    net, (A, B, D) = chain_net(max_retry=2, ping_timeout=20.0)
+    net.procs[A].broadcast("a")
+    net.run(until=1.0)
+    net.crash(D)                                 # silent: no close() events
+    net.connect(A, D, delay=0.1)
+    net.run(until=500.0)
+    assert D not in net.procs[A].Q
+    assert D not in net.procs[A].B               # buffer reclaimed
+    assert D in net.procs[A].gave_up
+    rep = check_trace(net.trace, crashed={D}, all_pids={A, B, D})
+    assert rep.causal_ok and not rep.double_deliveries, rep.summary()
+
+
+def test_buffer_never_exceeds_bound():
+    net, (A, B, D) = chain_net(max_size=4, max_retry=100)
+    net.procs[A].broadcast("a")
+    net.run(until=1.0)
+    net.connect(A, D, delay=0.1)
+    worst = 0
+    for i in range(20):
+        net.procs[A].broadcast(f"m{i}")
+        if D in net.procs[A].B:
+            worst = max(worst, len(net.procs[A].B[D][1]))
+    assert worst <= 4 + 1  # checked after insertion (paper: > maxSize)
+    net.run()
+    rep = check_trace(net.trace, all_pids={A, B, D})
+    assert rep.ok, rep.summary()
+
+
+def test_defaults_degenerate_to_plain_pc():
+    """With infinite bounds Algorithm 3 == Algorithm 2 (no retries)."""
+    net, (A, B, D) = chain_net()
+    net.procs[A].broadcast("a")
+    net.run(until=1.0)
+    net.connect(A, D, delay=0.1)
+    for i in range(10):
+        net.procs[A].broadcast(f"m{i}")
+    net.run()
+    assert net.procs[A].R == {} and net.procs[A].I == {}
+    rep = check_trace(net.trace, all_pids={A, B, D})
+    assert rep.ok, rep.summary()

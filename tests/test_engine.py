@@ -1,0 +1,143 @@
+"""Tensorized engine: exact equivalence with the numpy oracle, Fig. 3 at
+the round level, delivery = shortest paths on static nets, scale smoke,
+and the sharded (multi-device) runner."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.engine import (EngineConfig, Schedule, analyze,
+                               random_instance, run_engine, run_ref)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_engine_matches_numpy_oracle(seed):
+    cfg, sched, adj0, delay0 = random_instance(
+        seed, n=16, k=4, m_app=8, n_adds=5, n_rms=4, rounds=48,
+        mode="pc", always_gate=bool(seed % 2), pong_delay=1 + seed % 3)
+    d_ref = run_ref(cfg, sched, adj0.copy(), delay0.copy())
+    d_jax = run_engine(cfg, sched, adj0, delay0)
+    np.testing.assert_array_equal(d_ref, d_jax)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_engine_matches_oracle_r_mode(seed):
+    cfg, sched, adj0, delay0 = random_instance(
+        seed + 100, n=12, k=3, m_app=6, n_adds=4, n_rms=2, rounds=40,
+        mode="r")
+    d_ref = run_ref(cfg, sched, adj0.copy(), delay0.copy())
+    d_jax = run_engine(cfg, sched, adj0, delay0)
+    np.testing.assert_array_equal(d_ref, d_jax)
+
+
+def fig3_instance(mode):
+    """A(0) -> B(1) -> D(2) slow chain; fast link A->D added mid-flight."""
+    n, k = 3, 3
+    adj0 = np.full((n, k), -1, np.int64)
+    delay0 = np.ones((n, k), np.int64)
+    adj0[0, 0], delay0[0, 0] = 1, 5   # A -> B slow
+    adj0[1, 0], delay0[1, 0] = 2, 5   # B -> D slow
+    adj0[1, 1], delay0[1, 1] = 0, 5   # B -> A
+    adj0[2, 0], delay0[2, 0] = 1, 5   # D -> B
+    sched = Schedule(
+        bcast_round=np.array([0, 3], np.int32),
+        bcast_origin=np.array([0, 0], np.int32),   # A broadcasts a, a'
+        add_round=np.array([2], np.int32),
+        add_p=np.array([0], np.int32),
+        add_k=np.array([2], np.int32),
+        add_q=np.array([2], np.int32),             # new fast link A -> D
+        add_delay=np.array([1], np.int32),
+        rm_round=np.zeros(0, np.int32),
+        rm_p=np.zeros(0, np.int32),
+        rm_k=np.zeros(0, np.int32),
+    )
+    cfg = EngineConfig(n=n, k=k, rounds=40, mode=mode, pong_delay=1)
+    return cfg, sched, adj0, delay0
+
+
+def test_fig3_r_mode_violates():
+    cfg, sched, adj0, delay0 = fig3_instance("r")
+    d = run_engine(cfg, sched, adj0, delay0)
+    rep = analyze(d, sched)
+    assert rep["violations"] > 0
+    # D receives a' (slot 1) before a (slot 0)
+    assert d[2, 1] < d[2, 0]
+
+
+def test_fig3_pc_mode_safe():
+    cfg, sched, adj0, delay0 = fig3_instance("pc")
+    d = run_engine(cfg, sched, adj0, delay0)
+    rep = analyze(d, sched)
+    assert rep["violations"] == 0 and rep["missing"] == 0
+    assert rep["delivered_frac"] == 1.0
+    assert d[2, 0] < d[2, 1]
+
+
+def test_static_delivery_equals_bfs_distance():
+    """With unit delays and no churn, delivery round == hop distance."""
+    rng = np.random.default_rng(0)
+    n, k = 32, 4
+    adj0 = np.full((n, k), -1, np.int64)
+    adj0[:, 0] = (np.arange(n) + 1) % n
+    for i in range(n):
+        adj0[i, 1:] = rng.choice(n, size=k - 1, replace=False)
+    delay0 = np.ones((n, k), np.int64)
+    sched = Schedule.empty_churn([0], [0])
+    cfg = EngineConfig(n=n, k=k, rounds=n + 2, mode="pc")
+    d = run_engine(cfg, sched, adj0, delay0)
+
+    # BFS over the same digraph (self-loops possible via rng; harmless)
+    from collections import deque
+    dist = {0: 0}
+    dq = deque([0])
+    while dq:
+        u = dq.popleft()
+        for v in adj0[u]:
+            v = int(v)
+            if v >= 0 and v not in dist:
+                dist[v] = dist[u] + 1
+                dq.append(v)
+    for q in range(n):
+        assert d[q, 0] == dist[q]
+
+
+def test_pc_no_violations_at_scale():
+    """2k processes, heavy churn: PC mode stays violation-free."""
+    cfg, sched, adj0, delay0 = random_instance(
+        7, n=2000, k=6, m_app=32, n_adds=24, n_rms=24, rounds=64,
+        mode="pc")
+    d = run_engine(cfg, sched, adj0, delay0)
+    rep = analyze(d, sched)
+    assert rep["violations"] == 0 and rep["missing"] == 0, rep
+    assert rep["delivered_frac"] == 1.0
+
+
+_SHARDED_SNIPPET = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.core.engine import random_instance, run_ref
+    from repro.core.engine.sharded import run_engine_sharded
+
+    cfg, sched, adj0, delay0 = random_instance(
+        3, n=50, k=4, m_app=8, n_adds=5, n_rms=3, rounds=40, mode="pc")
+    d_ref = run_ref(cfg, sched, adj0.copy(), delay0.copy())
+    d_sh = run_engine_sharded(cfg, sched, adj0, delay0)
+    np.testing.assert_array_equal(d_ref, d_sh[:50])
+    # padded rows never deliver anything
+    assert (d_sh[50:] < 0).all()
+    print("SHARDED_OK")
+""")
+
+
+def test_sharded_engine_matches_oracle_subprocess():
+    """8 forced host devices in a subprocess (flag must precede jax init)."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SNIPPET],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "SHARDED_OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,64 @@
+"""Spray-like overlay dynamics driving the protocol's open/close path."""
+
+import pytest
+
+from repro.core import (BoundedPCBroadcast, Network, PCBroadcast,
+                        SprayOverlay, check_trace, ring_plus_random)
+from repro.core.metrics import (full_graph, mean_shortest_path, safe_graph,
+                                unsafe_link_stats)
+
+
+def spray_net(n=40, seed=5, delay=0.5, period=20.0):
+    net = Network(seed=seed, default_delay=delay, oob_delay=delay / 2)
+    for pid in range(n):
+        net.add_process(BoundedPCBroadcast(
+            pid, ping_mode="route", max_size=64, max_retry=10,
+            ping_timeout=60.0))
+    ring_plus_random(net, range(n), k=4)
+    overlay = SprayOverlay(net, range(n), period=period)
+    return net, overlay
+
+
+def test_spray_exchanges_churn_links_and_stay_causal():
+    net, overlay = spray_net()
+    overlay.start()
+    # Broadcast while the overlay churns.
+    for i, t in enumerate(range(5, 65, 5)):
+        net.run(until=float(t))
+        net.procs[i % 40].broadcast(("m", i))
+    overlay.stop()
+    net.run(until=net.time + 500.0)
+    assert overlay.exchanges > 20
+    assert overlay.links_added > 0 and overlay.links_removed > 0
+    rep = check_trace(net.trace, all_pids=set(range(40)), check_agreement=False)
+    assert rep.causal_ok and not rep.double_deliveries, rep.summary()
+
+
+def test_safe_graph_path_length_close_to_full_graph():
+    """Fig. 7's core observation: excluding unsafe links barely stretches
+    paths on random-graph overlays.  Unreachable pairs are charged a large
+    penalty so the subgraph relation sp_safe >= sp_full is preserved."""
+    net, overlay = spray_net(n=60, delay=0.2, period=30.0)
+    for p in net.procs.values():
+        p.ping_timeout = 10.0  # recover quickly from dropped routed pings
+    overlay.start()
+    net.run(until=100.0)
+    g_safe = safe_graph(net)
+    g_full = full_graph(net)
+    sources = list(range(0, 60, 6))
+    penalty = 60.0
+    sp_safe = mean_shortest_path(g_safe, sources, unreachable_penalty=penalty)
+    sp_full = mean_shortest_path(g_full, sources, unreachable_penalty=penalty)
+    assert sp_full <= sp_safe < sp_full + 2.0, (sp_safe, sp_full)
+    mean_unsafe, mean_buf, mx = unsafe_link_stats(net)
+    assert mean_unsafe < 8.0
+
+
+def test_unsafe_links_drain_when_churn_stops():
+    net, overlay = spray_net(n=30, delay=0.3, period=15.0)
+    overlay.start()
+    net.run(until=40.0)
+    overlay.stop()
+    net.run(until=net.time + 300.0)
+    mean_unsafe, _, _ = unsafe_link_stats(net)
+    assert mean_unsafe == 0.0, "all ping phases must settle once churn stops"
