@@ -1,18 +1,56 @@
 """Benchmark harness — one module per paper table/figure + substrate
-benches.  Prints ``name,us_per_call,derived`` CSV."""
+benches.  Prints ``name,us_per_call,derived`` CSV.
+
+``--engine exact`` (default) runs the paper-scale reproductions on the
+discrete-event simulator; ``--engine vec`` runs the Table 1 / Fig. 7
+sweeps on the vectorized lockstep engine at large N (``--n`` overrides
+the population); ``--engine both`` runs the two back to back.  The
+substrate benches (engine/train) are engine-independent and always run.
+"""
 
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import traceback
+
+# allow `python benchmarks/run.py` from the repo root
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
     from benchmarks import bench_engine, bench_fig7, bench_table1, \
         bench_train
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--engine", choices=("exact", "vec", "both"),
+                    default="exact")
+    ap.add_argument("--n", type=int, default=None,
+                    help="population override for the protocol benches")
+    ap.add_argument("--backend", choices=("numpy", "jax", "auto"),
+                    default="numpy", help="vec-engine backend")
+    args = ap.parse_args()
+    engines = ("exact", "vec") if args.engine == "both" else (args.engine,)
+
     print("name,us_per_call,derived")
     failed = 0
-    for mod in (bench_table1, bench_fig7, bench_engine, bench_train):
+    for eng in engines:
+        # keep the historical row names in single-engine runs; disambiguate
+        # with an engine prefix only when both engines emit the same rows
+        prefix = f"{eng}/" if len(engines) > 1 else ""
+        # in "both" mode a large --n meant for the vec engine would drive
+        # the event simulator far past its ~2k ceiling — vec only there
+        n = args.n if (eng == "vec" or len(engines) == 1) else None
+        for mod in (bench_table1, bench_fig7):
+            try:
+                for name, us, derived in mod.rows(engine=eng, n=n,
+                                                  backend=args.backend):
+                    print(f"{prefix}{name},{us:.2f},{derived:.3f}",
+                          flush=True)
+            except Exception:                  # noqa: BLE001
+                failed += 1
+                traceback.print_exc()
+    for mod in (bench_engine, bench_train):
         try:
             for name, us, derived in mod.rows():
                 print(f"{name},{us:.2f},{derived:.3f}", flush=True)

@@ -1,0 +1,87 @@
+"""Breaking the scalability barrier, demonstrated: the same PC-broadcast
+churn scenario swept from N=1k to N=100k on the vectorized lockstep
+engine (``repro.core.vecsim``), with the exact discrete-event simulator
+timed alongside at the small sizes it can still reach.
+
+Per population size the sweep reports wall-clock, simulated message
+volume, delivered fraction, mean delivery latency (rounds), peak unsafe
+links/process during churn, and — because the protocol's control
+information is O(1) — a constant bytes/message column that does not grow
+with N (the vector-clock baseline's modeled overhead is printed next to
+it for contrast).
+
+    PYTHONPATH=src python examples/large_scale_sweep.py \
+        [--sizes 1000 5000 20000 50000] [--exact-max 2000] [--backend numpy]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import BoundedPCBroadcast, Network, check_trace, \
+    ring_plus_random
+from repro.core.vecsim import (churn_scenario, run_vec, unsafe_link_stats_vec,
+                               vc_overhead_model)
+
+
+def exact_point(n: int, n_bcast: int = 12) -> float:
+    """Wall-clock for a comparable broadcast run on the event simulator."""
+    net = Network(seed=1, default_delay=1.0, oob_delay=0.5)
+    for pid in range(n):
+        net.add_process(BoundedPCBroadcast(pid, ping_mode="route"))
+    ring_plus_random(net, range(n), k=8)
+    t0 = time.perf_counter()
+    for i in range(n_bcast):
+        net.procs[(i * 13) % n].broadcast(("m", i))
+        net.run(until=net.time + 1.0)
+    net.run()
+    dt = time.perf_counter() - t0
+    rep = check_trace(net.trace, check_agreement=False)
+    assert rep.causal_ok, rep.summary()
+    return dt
+
+
+def vec_point(n: int, backend: str):
+    scn = churn_scenario(seed=n, n=n, k=9, m_app=12,
+                         n_adds=max(8, n // 400), n_rms=max(8, n // 400),
+                         max_delay=2, churn_window=8)
+    snap = int(scn.add_round[-1])
+    t0 = time.perf_counter()
+    res = run_vec(scn, backend=backend, snapshot_round=snap)
+    dt = time.perf_counter() - t0
+    unsafe, _, _ = unsafe_link_stats_vec(res.snapshot, snap, scn.m_app)
+    pc_bytes = res.stats.control_bytes / max(res.stats.sent_messages, 1)
+    vc_bytes, _ = vc_overhead_model(res)
+    return dt, res, unsafe, pc_bytes, vc_bytes
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", type=int, nargs="+",
+                    default=[1000, 5000, 20000, 50000])
+    ap.add_argument("--exact-max", type=int, default=2000,
+                    help="run the event simulator up to this N for contrast")
+    ap.add_argument("--backend", choices=("numpy", "jax", "auto"),
+                    default="numpy")
+    args = ap.parse_args()
+
+    print(f"{'N':>7} {'vec(s)':>7} {'exact(s)':>9} {'msgs':>11} "
+          f"{'frac':>5} {'lat(rd)':>7} {'unsafe/p':>8} "
+          f"{'pc B/msg':>8} {'vc B/msg':>8}")
+    for n in args.sizes:
+        dt, res, unsafe, pc_bytes, vc_bytes = vec_point(n, args.backend)
+        exact_s = (f"{exact_point(n):9.1f}" if n <= args.exact_max
+                   else f"{'--':>9}")
+        assert res.delivered_frac() == 1.0
+        print(f"{n:7d} {dt:7.1f} {exact_s} {res.stats.sent_messages:11d} "
+              f"{res.delivered_frac():5.2f} {res.mean_latency():7.2f} "
+              f"{unsafe:8.4f} {pc_bytes:8.1f} {vc_bytes:8.1f}")
+    print("\npc B/msg stays constant while vc B/msg grows with the number "
+          "of broadcasters — the paper's Table 1 separation, at scale.")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,21 +4,26 @@ Discrete-event implementations of the paper's three algorithms plus the
 vector-clock baseline, the Spray-like dynamic overlay, and a
 happens-before oracle validating the broadcast specification.
 
-The TPU-native tensorized adaptation lives in ``repro.core.engine``.
+The TPU-native tensorized adaptation lives in ``repro.core.engine``;
+the scenario-driven vectorized large-N simulator (50k-100k processes,
+cross-validated against the exact engine) in ``repro.core.vecsim``.
+Shared stats/delay types live in ``repro.core.types``.
 """
 
 from .base import AppMsg, Ping, Pong, Protocol, control_bytes, msg_id
 from .bounded import BoundedPCBroadcast
-from .events import Link, NetStats, Network
+from .events import Link, Network
 from .oracle import OracleReport, check_trace
 from .overlay import SprayOverlay, ring_plus_random, view_size
 from .pcbroadcast import PCBroadcast
 from .rbroadcast import RBroadcast
+from .types import DelayFn, NetStats, constant_delay, uniform_delay
 from .vector_clock import VCBroadcast
 
 __all__ = [
     "AppMsg", "Ping", "Pong", "Protocol", "control_bytes", "msg_id",
     "BoundedPCBroadcast", "Link", "NetStats", "Network",
+    "DelayFn", "constant_delay", "uniform_delay",
     "OracleReport", "check_trace",
     "SprayOverlay", "ring_plus_random", "view_size",
     "PCBroadcast", "RBroadcast", "VCBroadcast",

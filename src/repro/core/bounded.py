@@ -10,6 +10,26 @@ Extends PC-broadcast with:
 State (paper, Algorithm 3):
   ``I`` — ping id  -> link awaiting that ping's pong,
   ``R`` — link     -> number of retries so far.
+
+Method map (paper, Algorithm 3; hooks are invoked by Algorithm 2's
+implementation in ``pcbroadcast.py``):
+
+  ``on_ping_sent``    upon ping(from, to, id), lines 5-9: if to not in R:
+                      R[to] <- 0; I[id] <- to; arm the retry timeout
+  ``on_link_safe``    upon receiveAck(from, to, id), lines 10-12:
+                      I <- I \\ id ; R <- R \\ to  (stale pongs never get
+                      here — Algorithm 2 drops them on the buffer-counter
+                      mismatch, Fig. 6c)
+  ``on_pc_deliver``   upon PC-deliver(m), lines 13-16: any buffer with
+                      |B[q]| > maxSize resets its phase via retry(q)
+  ``retry``           function retry(q), lines 17-25: drop pending ping
+                      ids for q; R[q] += 1; re-open the phase (fresh
+                      counter + empty buffer) while R[q] <= maxRetry,
+                      else close(q) and let the overlay replace the link
+  ``on_timeout``      HANDLING FAILURES, lines 26-28: a ping whose id is
+                      still in I when the timer fires lost its pong
+                      (Fig. 5b-c) -> retry(to)
+  ``on_close``        upon close(q): clear B[q] (Alg. 2) plus I/R entries
 """
 
 from __future__ import annotations

@@ -22,27 +22,22 @@ import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from .types import DelayFn, NetStats, constant_delay, uniform_delay
+
 __all__ = [
     "Network",
     "Link",
     "NetStats",
     "EPS",
+    "DelayFn",
+    "constant_delay",
+    "uniform_delay",
 ]
 
 # Minimal spacing between two arrivals on the same FIFO link.  Keeps the
 # arrival order on a link identical to the send order even when the delay
 # function is time-varying or jittered (FIFO discipline).
 EPS = 1e-9
-
-DelayFn = Callable[[float, random.Random], float]
-
-
-def constant_delay(d: float) -> DelayFn:
-    return lambda t, rng: d
-
-
-def uniform_delay(lo: float, hi: float) -> DelayFn:
-    return lambda t, rng: rng.uniform(lo, hi)
 
 
 @dataclass
@@ -59,18 +54,6 @@ class Link:
     # in-flight traffic when the link is removed.
     in_flight: int = 0
     alive: bool = True
-
-
-@dataclass
-class NetStats:
-    """Traffic accounting, fed by the protocol's ``control_bytes`` hooks."""
-
-    sent_messages: int = 0
-    sent_control: int = 0  # ping/pong count
-    control_bytes: int = 0  # causality-control bytes piggybacked on app msgs
-    oob_messages: int = 0
-    deliveries: int = 0
-    duplicate_receipts: int = 0
 
 
 class Network:

@@ -5,6 +5,26 @@ its neighborhood ``Q`` and a ``received`` set; on first receipt it forwards
 the message on **all** outgoing links and delivers it.  Over FIFO links and a
 *static* overlay this is causal (Theorem 1, Friedman-Manor); over a dynamic
 overlay it may violate causal order (Fig. 3) — which our tests demonstrate.
+
+Method map (paper, Algorithm 1):
+
+  ``__init__``        INITIALLY lines 1-3: ``Q`` <- neighborhood,
+                      ``received`` <- empty set
+  ``broadcast``       function R-broadcast(m), lines 4-7:
+                      received <- received U m; foreach q in Q: sendTo(q, m);
+                      R-deliver(m)
+  ``on_receive``      upon receive(m), lines 8-12: first receipt only —
+                      received <- received U m; forward to every q in Q;
+                      R-deliver(m)
+  ``on_open/on_close``the membership layer's open(q)/close(q) signals:
+                      Q <- Q U q / Q \\ q.  R-broadcast uses a link the
+                      moment it exists — exactly what breaks causal order
+                      under dynamicity (Fig. 3) and what Algorithm 2 gates.
+  ``r_deliver``       R-deliver(m); PC-broadcast (Algorithm 2) overrides
+                      this hook to buffer into unsafe links first.
+
+``prune_received`` implements the paper's §6 future-work item for *static*
+networks (received-set space reclamation; see the class docstring).
 """
 
 from __future__ import annotations

@@ -1,0 +1,47 @@
+"""Shared simulation types: traffic stats and link-delay models.
+
+These are the types every simulation substrate speaks, whatever its
+execution model:
+
+  * ``repro.core.events.Network``  — the exact discrete-event simulator
+    (one Python object + heap event per process/message);
+  * ``repro.core.vecsim``          — the vectorized lockstep-round engine
+    (whole network as dense arrays, DESIGN.md §2.4).
+
+``NetStats`` is the common accounting schema: both engines fill the same
+fields, so ``benchmarks/`` and ``examples/`` consume either engine's
+output unchanged.  Field semantics that differ between the engines (only
+``duplicate_receipts``, which the vec engine derives rather than counts)
+are documented in DESIGN.md §2.4.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Callable
+
+__all__ = ["NetStats", "DelayFn", "constant_delay", "uniform_delay"]
+
+# A transmission-delay model: (current time, rng) -> delay.
+DelayFn = Callable[[float, random.Random], float]
+
+
+def constant_delay(d: float) -> DelayFn:
+    return lambda t, rng: d
+
+
+def uniform_delay(lo: float, hi: float) -> DelayFn:
+    return lambda t, rng: rng.uniform(lo, hi)
+
+
+@dataclass
+class NetStats:
+    """Traffic accounting, fed by the protocol's ``control_bytes`` hooks."""
+
+    sent_messages: int = 0
+    sent_control: int = 0  # ping/pong count
+    control_bytes: int = 0  # causality-control bytes piggybacked on app msgs
+    oob_messages: int = 0
+    deliveries: int = 0
+    duplicate_receipts: int = 0

@@ -1,0 +1,39 @@
+"""repro.core.vecsim — vectorized large-N protocol simulation.
+
+The exact event simulator (``repro.core.events``) keeps one Python object
+and one heap event per process/message and tops out around a few thousand
+processes.  This package represents the *whole network* as dense arrays —
+per-process delivery rounds, ``(N, K)`` link-slot tables, ping-phase state
+— and advances all processes in lockstep rounds with ``jax.numpy`` (jitted
+``lax.scan``) or a NumPy fallback, reaching N = 50k-100k processes on one
+CPU: the population sizes at which the paper's constant-size control
+information actually separates from the O(N) vector-clock baseline.
+
+Modules:
+  scenario  — preplanned runs (topology + broadcast/churn/crash schedules)
+  sim       — the lockstep engine, both backends, NetStats emission
+  metrics   — Fig. 7 metrics, oracle-compatible traces, multisets
+  crossval  — replay the same scenario on the exact engine and compare
+
+Semantics and fidelity limits vs. the exact simulator: DESIGN.md §2.4.
+"""
+
+from .crossval import cross_validate, delivered_multiset_exact, run_exact
+from .metrics import (build_trace, delivered_multiset, full_out_mask,
+                      mean_shortest_path_vec, safe_out_mask,
+                      unsafe_link_stats_vec, vc_overhead_model)
+from .scenario import (INF, VecScenario, churn_scenario, crash_scenario,
+                       link_add_scenario, ring_topology, settle_rounds,
+                       static_scenario)
+from .sim import SERIES_FIELDS, VecRunResult, run_vec
+
+__all__ = [
+    "INF", "VecScenario", "ring_topology", "settle_rounds",
+    "static_scenario", "link_add_scenario", "churn_scenario",
+    "crash_scenario",
+    "SERIES_FIELDS", "VecRunResult", "run_vec",
+    "safe_out_mask", "full_out_mask", "mean_shortest_path_vec",
+    "unsafe_link_stats_vec", "build_trace", "delivered_multiset",
+    "vc_overhead_model",
+    "run_exact", "delivered_multiset_exact", "cross_validate",
+]

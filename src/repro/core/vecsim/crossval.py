@@ -1,0 +1,127 @@
+"""Cross-validation harness: one scenario, two engines, same deliveries.
+
+``run_exact`` replays a :class:`VecScenario` event-by-event on the exact
+discrete-event simulator (``repro.core.events.Network`` driving the
+paper-faithful ``PCBroadcast``/``RBroadcast`` processes), mapping
+
+  * one lockstep round              -> one unit of simulated time,
+  * a slot's integer delay          -> a constant link delay,
+  * the scenario's add/rm/crash/broadcast schedule -> ``call_later``
+    callbacks registered in phase order (removals, additions, crashes,
+    broadcasts) so same-timestamp events fire in the lockstep engine's
+    phase order (setup-registered callbacks outrank in-flight arrivals
+    in the event heap's tie-break).
+
+``cross_validate`` then runs both engines to quiescence and compares the
+(pid, origin, counter) delivered-message multisets byte-for-byte, plus
+happens-before oracle reports on both traces.  Equality of the multisets
+is a strong end-to-end check: it requires both engines to agree on which
+broadcasts happened, which processes were reachable, and that neither
+lost or duplicated a delivery — while leaving the engines free to differ
+in sub-round timing, which the lockstep model deliberately does not
+reproduce (DESIGN.md §2.4).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Set, Tuple
+
+import numpy as np
+
+from ..events import Network
+from ..oracle import OracleReport, check_trace
+from ..pcbroadcast import PCBroadcast
+from ..rbroadcast import RBroadcast
+from .metrics import build_trace, delivered_multiset
+from .scenario import VecScenario
+from .sim import VecRunResult, run_vec
+
+__all__ = ["run_exact", "delivered_multiset_exact", "cross_validate"]
+
+
+def run_exact(scn: VecScenario, seed: int = 0) -> Network:
+    """Replay ``scn`` on the exact event simulator and run to quiescence."""
+    net = Network(seed=seed, default_delay=1.0,
+                  oob_delay=float(scn.pong_delay))
+    for pid in range(scn.n):
+        if scn.mode == "pc":
+            proc = PCBroadcast(pid, ping_mode="flood",
+                               always_gate=scn.always_gate)
+        else:
+            proc = RBroadcast(pid)
+        net.add_process(proc)
+    for p in range(scn.n):
+        for kk in range(scn.k):
+            q = int(scn.adj0[p, kk])
+            if q >= 0:
+                net.connect(p, q, delay=float(scn.delay0[p, kk]))
+
+    # Replay slot occupancy so each vec slot removal maps to the one
+    # (p, q) link it deactivates at that point in time.
+    slot_target = scn.adj0.astype(np.int64).copy()
+    slot_active = scn.adj0 >= 0
+
+    def do_broadcast(o: int) -> None:
+        proc = net.procs[o]
+        if not proc.crashed:
+            proc.broadcast()
+
+    events = sorted(
+        [(int(t), 0, e) for e, t in enumerate(scn.rm_round)]
+        + [(int(t), 1, e) for e, t in enumerate(scn.add_round)]
+        + [(int(t), 2, e) for e, t in enumerate(scn.crash_round)]
+        + [(int(t), 3, i) for i, t in enumerate(scn.bcast_round)],
+        key=lambda ev: (ev[0], ev[1], ev[2]))
+    for t, phase, e in events:
+        if phase == 0:
+            p, kk = int(scn.rm_p[e]), int(scn.rm_k[e])
+            if slot_active[p, kk]:
+                q = int(slot_target[p, kk])
+                slot_active[p, kk] = False
+                net.call_later(float(t), lambda p=p, q=q: net.disconnect(p, q))
+        elif phase == 1:
+            p, kk, q = (int(scn.add_p[e]), int(scn.add_k[e]),
+                        int(scn.add_q[e]))
+            d = float(scn.add_delay[e])
+            slot_target[p, kk] = q
+            slot_active[p, kk] = True
+            net.call_later(float(t),
+                           lambda p=p, q=q, d=d: net.connect(p, q, delay=d))
+        elif phase == 2:
+            pid = int(scn.crash_pid[e])
+            net.call_later(float(t), lambda pid=pid: net.crash(pid))
+        else:
+            net.call_later(float(t), lambda o=int(scn.bcast_origin[e]):
+                           do_broadcast(o))
+    net.run()
+    assert net.idle(), "exact replay did not quiesce"
+    return net
+
+
+def delivered_multiset_exact(net: Network) -> List[Tuple[int, int, int]]:
+    """Sorted (pid, origin, counter) triples from the exact engine's logs."""
+    out = [(pid, m.origin, m.counter)
+           for pid, proc in net.procs.items()
+           for m in proc.delivered_log]
+    out.sort()
+    return out
+
+
+def cross_validate(scn: VecScenario, seed: int = 0,
+                   backend: str = "numpy") -> Dict[str, object]:
+    """Run both engines on ``scn``; return multisets + oracle reports."""
+    res = run_vec(scn, backend=backend)
+    net = run_exact(scn, seed=seed)
+    crashed: Set[int] = set(np.nonzero(res.state["crashed"])[0].tolist())
+    vec_rep = check_trace(build_trace(res), crashed=crashed,
+                          all_pids=set(range(scn.n)))
+    exact_rep = check_trace(net.trace, crashed=crashed,
+                            all_pids=set(range(scn.n)))
+    return dict(
+        vec=res,
+        exact=net,
+        vec_multiset=delivered_multiset(res),
+        exact_multiset=delivered_multiset_exact(net),
+        vec_report=vec_rep,
+        exact_report=exact_rep,
+    )

@@ -1,0 +1,313 @@
+"""Preplanned large-N scenarios for the vectorized lockstep simulator.
+
+A :class:`VecScenario` is the dense-array twin of a scripted run on the
+exact event simulator (``repro.core.events``): an initial ``(N, K)``
+out-link table plus integer-round schedules for broadcasts, link churn
+and crashes.  The same scenario object drives both engines —
+``vecsim.sim.run_vec`` executes it in lockstep rounds, while
+``vecsim.crossval.run_exact`` replays it event-by-event on ``Network`` —
+which is what makes byte-level cross-validation of delivered-message
+multisets possible (DESIGN.md §2.4).
+
+Builder invariants (asserted by :meth:`VecScenario.validate`):
+
+  * slot 0 holds a directed ring that is never removed, so the overlay
+    stays strongly connected and flooding reaches everyone;
+  * a process's active out-targets are distinct at all times, so a vec
+    slot removal maps to exactly one ``Network.disconnect``;
+  * at most one broadcast per (origin, round), so per-origin message
+    counters are identical across engines;
+  * same-round link additions touch distinct processes (the lockstep
+    engine evaluates all of a round's additions against the same
+    pre-round state).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = ["INF", "VecScenario", "ring_topology", "settle_rounds",
+           "static_scenario", "link_add_scenario", "churn_scenario",
+           "crash_scenario"]
+
+INF = np.int32(2 ** 30)
+
+
+def _i32(a) -> np.ndarray:
+    return np.asarray(a, np.int32)
+
+
+def _empty() -> np.ndarray:
+    return np.zeros((0,), np.int32)
+
+
+@dataclass(frozen=True, eq=False)
+class VecScenario:
+    """A fully preplanned run: topology + integer-round schedules."""
+
+    n: int                       # processes
+    k: int                       # out-link slots per process
+    rounds: int                  # lockstep rounds to simulate
+    adj0: np.ndarray             # (N, K) initial out-targets, -1 = empty
+    delay0: np.ndarray           # (N, K) per-link delay in rounds (>= 1)
+    bcast_round: np.ndarray      # (M,) sorted broadcast rounds
+    bcast_origin: np.ndarray     # (M,)
+    add_round: np.ndarray = field(default_factory=_empty)   # (E,)
+    add_p: np.ndarray = field(default_factory=_empty)
+    add_k: np.ndarray = field(default_factory=_empty)
+    add_q: np.ndarray = field(default_factory=_empty)
+    add_delay: np.ndarray = field(default_factory=_empty)
+    rm_round: np.ndarray = field(default_factory=_empty)    # (R,)
+    rm_p: np.ndarray = field(default_factory=_empty)
+    rm_k: np.ndarray = field(default_factory=_empty)
+    crash_round: np.ndarray = field(default_factory=_empty)  # (C,)
+    crash_pid: np.ndarray = field(default_factory=_empty)
+    mode: str = "pc"             # "pc" (link-safety gating) | "r" (none)
+    pong_delay: int = 1          # rounds for the pong rho to return
+    always_gate: bool = False    # paper-faithful unconditional gating
+
+    @property
+    def m_app(self) -> int:
+        return len(self.bcast_round)
+
+    @property
+    def n_adds(self) -> int:
+        return len(self.add_round)
+
+    @property
+    def m_total(self) -> int:
+        """App slots + one ping slot per link addition."""
+        return self.m_app + self.n_adds
+
+    def msg_counters(self) -> np.ndarray:
+        """Per-origin sequential counter of each app slot (1-based), i.e.
+        the ``AppMsg.counter`` the exact engine assigns to that broadcast."""
+        counters = np.zeros(self.m_app, np.int32)
+        seen: dict = {}
+        for i, o in enumerate(self.bcast_origin):
+            o = int(o)
+            seen[o] = seen.get(o, 0) + 1
+            counters[i] = seen[o]
+        return counters
+
+    def validate(self) -> "VecScenario":
+        assert self.mode in ("pc", "r")
+        assert self.adj0.shape == (self.n, self.k)
+        assert self.delay0.shape == (self.n, self.k)
+        assert (self.delay0[self.adj0 >= 0] >= 1).all()
+        assert (np.diff(self.bcast_round) >= 0).all(), "broadcasts unsorted"
+        pairs = set(zip(self.bcast_origin.tolist(), self.bcast_round.tolist()))
+        assert len(pairs) == self.m_app, "duplicate (origin, round) broadcast"
+        # same-round adds must touch distinct processes (lockstep batching)
+        for t in np.unique(self.add_round):
+            ps = self.add_p[self.add_round == t]
+            assert len(set(ps.tolist())) == len(ps)
+        # distinct out-targets per process, so every (p, slot) maps to one
+        # (p, q) link in the exact-engine replay
+        for p in range(self.n):
+            tgt = [int(q) for q in self.adj0[p] if q >= 0]
+            assert len(set(tgt)) == len(tgt), f"duplicate out-target at {p}"
+            assert p not in tgt, f"self-link at {p}"
+        add_pk = list(zip(self.add_p.tolist(), self.add_k.tolist()))
+        assert len(set(add_pk)) == len(add_pk), "slot added twice (reuse " \
+            "of a slot mid-run is not modeled)"
+        for e in range(self.n_adds):
+            p, q = int(self.add_p[e]), int(self.add_q[e])
+            assert q != p, "add self-link"
+            init = {int(x) for x in self.adj0[p] if x >= 0}
+            assert q not in init, f"add duplicates an initial target of {p}"
+        # removals never touch the connectivity ring (slot 0) or overwrite
+        # a scheduled addition's slot
+        if len(self.rm_k):
+            assert (self.rm_k > 0).all(), "removal targets the ring slot"
+            add_slots = set(zip(self.add_p.tolist(), self.add_k.tolist()))
+            rm_slots = set(zip(self.rm_p.tolist(), self.rm_k.tolist()))
+            assert not (add_slots & rm_slots), "removal races an addition"
+        return self
+
+
+def settle_rounds(n: int, k: int, max_delay: int, pong_delay: int = 1) -> int:
+    """Rounds needed after the last scheduled event for a broadcast to
+    flood the overlay and all ping phases to resolve (generous bound:
+    flooding diameter ~ log_{k-1} N hops, each up to ``max_delay``)."""
+    diam = math.ceil(math.log(max(n, 2)) / math.log(max(k - 1, 2))) + 3
+    return (diam + 2) * max_delay + 2 * pong_delay + 6
+
+
+def ring_topology(seed: int, n: int, k: int, max_delay: int = 3,
+                  free_slots: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+    """Directed ring on slot 0 plus random distinct extra out-links on
+    slots ``1 .. k-1-free_slots``; the last ``free_slots`` slots stay
+    empty for scheduled additions.  Targets are distinct per process so
+    every (p, slot) maps to a unique (p, q) link."""
+    rng = np.random.default_rng(seed)
+    adj0 = np.full((n, k), -1, np.int32)
+    adj0[:, 0] = (np.arange(n) + 1) % n
+    n_extra = max(0, k - 1 - free_slots)
+    for p in range(n):
+        used = {p, int(adj0[p, 0])}
+        j = 1
+        while j <= n_extra and len(used) < n:
+            q = int(rng.integers(0, n))
+            if q not in used:
+                adj0[p, j] = q
+                used.add(q)
+                j += 1
+    delay0 = rng.integers(1, max_delay + 1, size=(n, k)).astype(np.int32)
+    return adj0, delay0
+
+
+def _spread_broadcasts(rng, n: int, m_app: int, lo: int, hi: int):
+    """Sorted broadcast schedule over [lo, hi) with unique (origin, round)."""
+    seen = set()
+    rounds, origins = [], []
+    while len(rounds) < m_app:
+        t, o = int(rng.integers(lo, hi)), int(rng.integers(0, n))
+        if (o, t) not in seen:
+            seen.add((o, t))
+            rounds.append(t)
+            origins.append(o)
+    order = np.argsort(np.asarray(rounds), kind="stable")
+    return (_i32(np.asarray(rounds)[order]), _i32(np.asarray(origins)[order]))
+
+
+def static_scenario(seed: int, n: int, k: int = 4, m_app: int = 8,
+                    max_delay: int = 3, mode: str = "pc",
+                    pong_delay: int = 1) -> VecScenario:
+    """Broadcast-only run on a static ring+random overlay."""
+    adj0, delay0 = ring_topology(seed, n, k, max_delay, free_slots=1)
+    rng = np.random.default_rng(seed + 1)
+    window = max(2 * m_app, 8)
+    bc_round, bc_origin = _spread_broadcasts(rng, n, m_app, 0, window)
+    rounds = window + settle_rounds(n, k, max_delay, pong_delay)
+    return VecScenario(n=n, k=k, rounds=rounds, adj0=adj0, delay0=delay0,
+                       bcast_round=bc_round, bcast_origin=bc_origin,
+                       mode=mode, pong_delay=pong_delay).validate()
+
+
+def _plan_adds(rng, n: int, k: int, adj0: np.ndarray, n_adds: int,
+               lo: int, hi: int, max_delay: int):
+    """Schedule link additions on the free slot ``k-1`` of distinct
+    processes, each targeting a process not currently in p's out-view."""
+    hi = max(hi, lo + 1)
+    procs = rng.choice(n, size=min(n_adds, n), replace=False)
+    add_round, add_p, add_k, add_q, add_delay = [], [], [], [], []
+    for p in procs:
+        p = int(p)
+        used = {p} | {int(q) for q in adj0[p] if q >= 0}
+        if len(used) >= n:
+            continue
+        while True:
+            q = int(rng.integers(0, n))
+            if q not in used:
+                break
+        add_round.append(int(rng.integers(lo, hi)))
+        add_p.append(p)
+        add_k.append(k - 1)
+        add_q.append(q)
+        add_delay.append(int(rng.integers(1, max_delay + 1)))
+    order = np.argsort(np.asarray(add_round), kind="stable")
+    return tuple(_i32(np.asarray(a)[order]) for a in
+                 (add_round, add_p, add_k, add_q, add_delay))
+
+
+def link_add_scenario(seed: int, n: int, k: int = 4, m_app: int = 10,
+                      n_adds: Optional[int] = None, max_delay: int = 3,
+                      pong_delay: int = 1) -> VecScenario:
+    """Static bootstrap, early broadcasts, then a batch of link additions
+    that race with later broadcasts — the Fig. 3 shortcut situation that
+    PC-broadcast's ping gating exists to make safe.  Additions happen
+    after every process has delivered the early traffic, so the gating
+    condition (Algorithm 2 with the delivered-something fast-path)
+    engages identically in both engines."""
+    n_adds = n_adds if n_adds is not None else max(2, n // 8)
+    adj0, delay0 = ring_topology(seed, n, k, max_delay, free_slots=1)
+    rng = np.random.default_rng(seed + 2)
+    settle = settle_rounds(n, k, max_delay, pong_delay)
+    early = max(2, m_app // 3)
+    bc_round_a, bc_origin_a = _spread_broadcasts(rng, n, early, 0, 2 * early)
+    t_add_lo = 2 * early + settle          # early traffic fully delivered
+    t_add_hi = t_add_lo + max(4, n_adds)
+    adds = _plan_adds(rng, n, k, adj0, n_adds, t_add_lo, t_add_hi, max_delay)
+    bc_round_b, bc_origin_b = _spread_broadcasts(
+        rng, n, m_app - early, t_add_lo, t_add_hi + 4)
+    bc_round = np.concatenate([bc_round_a, bc_round_b])
+    bc_origin = np.concatenate([bc_origin_a, bc_origin_b])
+    rounds = int(t_add_hi) + 4 + settle
+    return VecScenario(n=n, k=k, rounds=rounds, adj0=adj0, delay0=delay0,
+                       bcast_round=_i32(bc_round), bcast_origin=_i32(bc_origin),
+                       add_round=adds[0], add_p=adds[1], add_k=adds[2],
+                       add_q=adds[3], add_delay=adds[4],
+                       pong_delay=pong_delay).validate()
+
+
+def churn_scenario(seed: int, n: int, k: int = 5, m_app: int = 12,
+                   n_adds: Optional[int] = None, n_rms: Optional[int] = None,
+                   max_delay: int = 3, pong_delay: int = 1,
+                   churn_window: Optional[int] = None) -> VecScenario:
+    """Broadcasts interleaved with batched link additions *and* removals
+    (the ring is never removed, so the overlay stays connected).
+
+    ``churn_window`` — rounds the add/remove batch is spread over; adds
+    land on distinct processes, so packing several into one round is
+    valid for the lockstep batching rule."""
+    n_adds = n_adds if n_adds is not None else max(2, n // 8)
+    n_rms = n_rms if n_rms is not None else max(2, n // 8)
+    adj0, delay0 = ring_topology(seed, n, k, max_delay, free_slots=1)
+    rng = np.random.default_rng(seed + 3)
+    settle = settle_rounds(n, k, max_delay, pong_delay)
+    early = max(2, m_app // 3)
+    bc_round_a, bc_origin_a = _spread_broadcasts(rng, n, early, 0, 2 * early)
+    lo = 2 * early + settle
+    hi = lo + (churn_window if churn_window is not None
+               else max(6, n_adds, n_rms))
+    adds = _plan_adds(rng, n, k, adj0, n_adds, lo, hi, max_delay)
+    # removals: random non-ring, non-add slots that are populated initially
+    rm_round, rm_p, rm_k = [], [], []
+    for _ in range(n_rms):
+        p = int(rng.integers(0, n))
+        kk = int(rng.integers(1, max(2, k - 1)))
+        if adj0[p, kk] >= 0:
+            rm_round.append(int(rng.integers(lo, hi)))
+            rm_p.append(p)
+            rm_k.append(kk)
+    if rm_round:
+        order = np.argsort(np.asarray(rm_round), kind="stable")
+        rm = tuple(_i32(np.asarray(a)[order]) for a in (rm_round, rm_p, rm_k))
+    else:
+        rm = (_empty(), _empty(), _empty())
+    bc_round_b, bc_origin_b = _spread_broadcasts(rng, n, m_app - early,
+                                                 lo, hi + 4)
+    bc_round = np.concatenate([bc_round_a, bc_round_b])
+    bc_origin = np.concatenate([bc_origin_a, bc_origin_b])
+    rounds = int(hi) + 4 + settle
+    return VecScenario(n=n, k=k, rounds=rounds, adj0=adj0, delay0=delay0,
+                       bcast_round=_i32(bc_round), bcast_origin=_i32(bc_origin),
+                       add_round=adds[0], add_p=adds[1], add_k=adds[2],
+                       add_q=adds[3], add_delay=adds[4],
+                       rm_round=rm[0], rm_p=rm[1], rm_k=rm[2],
+                       pong_delay=pong_delay).validate()
+
+
+def crash_scenario(seed: int, n: int, k: int = 6, m_app: int = 10,
+                   n_crashes: int = 2, max_delay: int = 2,
+                   pong_delay: int = 1) -> VecScenario:
+    """Silent crashes (Fig. 5b) mid-broadcast on a well-connected overlay
+    (k large enough that the correct subgraph almost surely stays
+    connected).  Crashed processes freeze; correct ones keep delivering."""
+    base = static_scenario(seed, n, k=k, m_app=m_app, max_delay=max_delay,
+                           pong_delay=pong_delay)
+    rng = np.random.default_rng(seed + 4)
+    mid = int(base.bcast_round[m_app // 2])
+    pids = rng.choice(n, size=n_crashes, replace=False)
+    # crashed processes never broadcast afterwards: drop their later slots
+    keep = ~(np.isin(base.bcast_origin, pids) & (base.bcast_round >= mid))
+    return replace(base,
+                   bcast_round=base.bcast_round[keep],
+                   bcast_origin=base.bcast_origin[keep],
+                   crash_round=_i32(np.full(n_crashes, mid)),
+                   crash_pid=_i32(pids)).validate()

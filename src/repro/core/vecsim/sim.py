@@ -1,0 +1,428 @@
+"""Vectorized lockstep-round execution of a :class:`VecScenario`.
+
+The whole network is dense arrays (DESIGN.md §2.4):
+
+  * ``arr[q, m]``       — earliest known arrival round of message ``m`` at
+    process ``q`` (INF = never);
+  * ``delivered[q, m]`` — delivery round (-1 = not yet);
+  * ``adj/delay/active``— the ``(N, K)`` out-link slot table;
+  * ``gate/flush/ping`` — per-slot ping-phase machinery (Algorithm 2):
+    ``gate`` is the round the link was gated (-1 = safe), ``ping`` the
+    message slot its ping floods under, ``flush`` the round at which the
+    pong arrives and the per-link buffer is flushed;
+  * ``crashed[p]``      — silent-crash flag (Fig. 5b): the process stops
+    delivering and forwarding, its links die silently.
+
+Each round applies, in order: link removals, link additions (with the
+Algorithm 2 gating decision), crashes, broadcasts, arrival deliveries,
+pong detection, buffer flushes, and flood-forwarding of this round's
+deliveries over safe links.  The phase order matches the event engine's
+same-timestamp event order, which is what the cross-validation harness
+(``crossval.py``) relies on.
+
+Two backends execute the identical semantics:
+
+  * ``numpy``  — readable reference, mutation + ``np.minimum.at`` scatter;
+  * ``jax``    — one ``lax.scan`` over rounds, jitted; the process axis is
+    pure scatter/gather so the body matches ``repro.core.engine.step``.
+
+Tests assert the two backends produce byte-identical ``delivered``
+matrices and per-round stats series on random scenarios.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..types import NetStats
+from .scenario import INF, VecScenario
+
+__all__ = ["VecRunResult", "run_vec", "SERIES_FIELDS"]
+
+# Wire-size model shared with repro.core.base.control_bytes.
+_CTRL_APP = 16    # AppMsg: (origin, counter)
+_CTRL_PING = 24   # Ping:   (frm, to, id)
+
+# Per-round stats emitted by both backends (int64 numpy (rounds, 6)).
+SERIES_FIELDS = ("deliveries", "sent_app", "sent_ping", "flush_sent",
+                 "pongs", "gated")
+
+
+@dataclass
+class VecRunResult:
+    scenario: VecScenario
+    delivered: np.ndarray          # (N, M_total) delivery round, -1 = never
+    state: Dict[str, np.ndarray]   # final arrays (numpy)
+    stats: NetStats
+    series: np.ndarray             # (rounds, len(SERIES_FIELDS))
+    snapshot: Optional[Dict[str, np.ndarray]] = None  # state after snap round
+    backend: str = "numpy"
+
+    @property
+    def delivered_app(self) -> np.ndarray:
+        return self.delivered[:, : self.scenario.m_app]
+
+    def delivered_frac(self) -> float:
+        """Fraction of (correct process, app message) pairs delivered."""
+        ok = ~self.state["crashed"]
+        d = self.delivered_app[ok]
+        return float((d >= 0).mean()) if d.size else 1.0
+
+    def mean_latency(self) -> float:
+        """Mean rounds from broadcast to delivery over delivered pairs."""
+        d = self.delivered_app
+        got = d >= 0
+        if not got.any():
+            return float("nan")
+        lat = d - self.scenario.bcast_round[None, :]
+        return float(lat[got].mean())
+
+
+def _init_state(scn: VecScenario) -> Dict[str, np.ndarray]:
+    n, k, m = scn.n, scn.k, scn.m_total
+    return dict(
+        arr=np.full((n, m), INF, np.int32),
+        delivered=np.full((n, m), -1, np.int32),
+        adj=scn.adj0.astype(np.int32).copy(),
+        delay=scn.delay0.astype(np.int32).copy(),
+        active=(scn.adj0 >= 0).copy(),
+        gate=np.full((n, k), -1, np.int32),
+        flush=np.full((n, k), INF, np.int32),
+        ping=np.full((n, k), -1, np.int32),
+        crashed=np.zeros(n, bool),
+    )
+
+
+def _stats_from_series(series: np.ndarray, arr: np.ndarray,
+                       rounds: int) -> NetStats:
+    tot = series.sum(axis=0)
+    deliveries, sent_app, sent_ping, flush_sent, pongs, _ = (
+        int(x) for x in tot)
+    sent = sent_app + sent_ping + flush_sent
+    # arr only records the EARLIEST arrival per (q, m); later copies are
+    # duplicates by construction (the vec engine never drops in-flight
+    # traffic — fidelity note in DESIGN.md §2.4).
+    first_receipts = int((arr < rounds).sum())
+    return NetStats(
+        sent_messages=sent,
+        sent_control=sent_ping + pongs,
+        control_bytes=_CTRL_APP * (sent_app + flush_sent)
+        + _CTRL_PING * sent_ping,
+        oob_messages=pongs,
+        deliveries=deliveries,
+        duplicate_receipts=max(0, sent - first_receipts),
+    )
+
+
+# --------------------------------------------------------------------- #
+# NumPy backend
+# --------------------------------------------------------------------- #
+def _run_np(scn: VecScenario, snapshot_round: Optional[int]):
+    st = _init_state(scn)
+    arr, delivered = st["arr"], st["delivered"]
+    adj, delay, active = st["adj"], st["delay"], st["active"]
+    gate, flush, ping = st["gate"], st["flush"], st["ping"]
+    crashed = st["crashed"]
+    n, k, m_app = scn.n, scn.k, scn.m_app
+    pc = scn.mode == "pc"
+    series = np.zeros((scn.rounds, len(SERIES_FIELDS)), np.int64)
+    snapshot = None
+
+    for t in range(scn.rounds):
+        # -- 1. removals ------------------------------------------------ #
+        for e in np.nonzero(scn.rm_round == t)[0]:
+            p, kk = int(scn.rm_p[e]), int(scn.rm_k[e])
+            active[p, kk] = False
+            gate[p, kk], flush[p, kk], ping[p, kk] = -1, INF, -1
+        # -- 2. additions (+ Algorithm 2 gating decision) ---------------- #
+        adds = np.nonzero(scn.add_round == t)[0]
+        for e in adds:
+            p, kk = int(scn.add_p[e]), int(scn.add_k[e])
+            adj[p, kk] = int(scn.add_q[e])
+            delay[p, kk] = int(scn.add_delay[e])
+            active[p, kk] = True
+            gate[p, kk], flush[p, kk], ping[p, kk] = -1, INF, -1
+        if pc:
+            for e in adds:
+                p, kk = int(scn.add_p[e]), int(scn.add_k[e])
+                if crashed[p]:
+                    continue
+                other_safe = any(active[p, j] and gate[p, j] < 0
+                                 for j in range(k) if j != kk)
+                has_del = bool((delivered[p, :m_app] >= 0).any())
+                if other_safe and (scn.always_gate or has_del):
+                    slot = m_app + int(e)
+                    gate[p, kk], ping[p, kk] = t, slot
+                    delivered[p, slot] = t   # own ping floods from phase 8
+        # -- 3. crashes (silent; links die with the process) ------------- #
+        for e in np.nonzero(scn.crash_round == t)[0]:
+            crashed[int(scn.crash_pid[e])] = True
+        # -- 4. broadcasts ----------------------------------------------- #
+        for i in np.nonzero(scn.bcast_round == t)[0]:
+            o = int(scn.bcast_origin[i])
+            if not crashed[o] and delivered[o, i] < 0:
+                delivered[o, i] = t
+        # -- 5. arrivals -> deliveries ------------------------------------ #
+        newly = (arr == t) & (delivered < 0) & ~crashed[:, None]
+        delivered[newly] = t
+        # -- 6. pong detection -------------------------------------------- #
+        if pc:
+            q_ = np.clip(adj, 0, n - 1)
+            s_ = np.clip(ping, 0, delivered.shape[1] - 1)
+            fire = ((gate >= 0) & (flush == INF) & (ping >= 0)
+                    & (delivered[q_, s_] >= 0) & ~crashed[:, None])
+            flush[fire] = t + scn.pong_delay
+            series[t, 4] = int(fire.sum())
+        # -- 7. flush buffered app messages over now-safe links ----------- #
+        if pc:
+            flushing = np.nonzero((flush == t) & active & ~crashed[:, None])
+            for p, kk in zip(*flushing):
+                p, kk = int(p), int(kk)
+                q, g, d = int(adj[p, kk]), int(gate[p, kk]), int(delay[p, kk])
+                win = (delivered[p, :m_app] >= g) & (delivered[p, :m_app] < t)
+                series[t, 3] += int(win.sum())
+                arr[q, :m_app] = np.minimum(
+                    arr[q, :m_app],
+                    np.where(win, np.int32(t + d), INF))
+            cleared = flush == t
+            gate[cleared], ping[cleared], flush[cleared] = -1, -1, INF
+        # -- 8. forward this round's deliveries over safe links ----------- #
+        # Sparse scatter: only the (process, message) cells delivered this
+        # round generate sends, so scatter-min over their flat indices
+        # instead of materializing dense (N, M) value planes per slot.
+        new_del = delivered == t
+        napp = new_del[:, :m_app].sum(axis=1)
+        nping = new_del[:, m_app:].sum(axis=1)
+        series[t, 0] = int(napp.sum())
+        rows_idx, cols_idx = np.nonzero(new_del)
+        arr_flat = arr.reshape(-1)
+        m_total = arr.shape[1]
+        elig_cnt = np.zeros(n, np.int64)
+        for kk in range(k):
+            ok = (active[:, kk] & (gate[:, kk] < 0) & (adj[:, kk] >= 0)
+                  & ~crashed)
+            elig_cnt += ok
+            if rows_idx.size == 0:
+                continue
+            sel = ok[rows_idx]
+            if not sel.any():
+                continue
+            r, c = rows_idx[sel], cols_idx[sel]
+            lin = adj[r, kk].astype(np.int64) * m_total + c
+            np.minimum.at(arr_flat, lin,
+                          (t + delay[r, kk]).astype(np.int32))
+        series[t, 1] = int((napp * elig_cnt).sum())
+        series[t, 2] = int((nping * elig_cnt).sum())
+        series[t, 5] = int((gate >= 0).sum())
+        if snapshot_round is not None and t == snapshot_round:
+            snapshot = {key: v.copy() for key, v in st.items()}
+
+    return st, series, snapshot
+
+
+# --------------------------------------------------------------------- #
+# JAX backend — one jitted lax.scan over rounds
+# --------------------------------------------------------------------- #
+def _run_jax(scn: VecScenario, snapshot_round: Optional[int]):
+    import jax
+    import jax.numpy as jnp
+
+    m_app = scn.m_app
+    bc_round = jnp.asarray(scn.bcast_round)
+    bc_origin = jnp.asarray(scn.bcast_origin)
+    add_round = jnp.asarray(scn.add_round)
+    add_p = jnp.asarray(scn.add_p)
+    add_k = jnp.asarray(scn.add_k)
+    add_q = jnp.asarray(scn.add_q)
+    add_delay = jnp.asarray(scn.add_delay)
+    add_slot = jnp.asarray(m_app + np.arange(scn.n_adds, dtype=np.int32))
+    rm_round = jnp.asarray(scn.rm_round)
+    rm_p = jnp.asarray(scn.rm_p)
+    rm_k = jnp.asarray(scn.rm_k)
+    cr_round = jnp.asarray(scn.crash_round)
+    cr_pid = jnp.asarray(scn.crash_pid)
+    K, pc = scn.k, scn.mode == "pc"
+    pong_delay = scn.pong_delay
+    inf = jnp.int32(INF)
+
+    def scatter_min(arr, rows, vals, valid):
+        n = arr.shape[0]
+        rows = jnp.where(valid, rows, n)          # out of bounds -> dropped
+        return arr.at[rows, :].min(vals, mode="drop")
+
+    def step(state, t):
+        (arr, delivered, adj, delay, active, gate, flush, ping,
+         crashed) = state
+        n = arr.shape[0]
+        t = t.astype(jnp.int32)
+        stats = jnp.zeros(len(SERIES_FIELDS), jnp.int32)
+
+        # -- 1. removals -------------------------------------------------- #
+        if rm_round.shape[0]:
+            sel = rm_round == t
+            p_, k_ = jnp.where(sel, rm_p, n), rm_k
+            active = active.at[p_, k_].set(False, mode="drop")
+            gate = gate.at[p_, k_].set(-1, mode="drop")
+            flush = flush.at[p_, k_].set(inf, mode="drop")
+            ping = ping.at[p_, k_].set(-1, mode="drop")
+
+        # -- 2. additions -------------------------------------------------- #
+        if add_round.shape[0]:
+            sel = add_round == t
+            p_ = jnp.where(sel, add_p, n)
+            adj = adj.at[p_, add_k].set(add_q, mode="drop")
+            delay = delay.at[p_, add_k].set(add_delay, mode="drop")
+            active = active.at[p_, add_k].set(True, mode="drop")
+            if pc:
+                safe_links = active & (gate < 0)
+                safe_cnt = safe_links.sum(axis=1)
+                pcl = jnp.clip(add_p, 0, n - 1)
+                own_slot_safe = safe_links[pcl, add_k]
+                other_safe = (safe_cnt[pcl]
+                              - own_slot_safe.astype(jnp.int32)) >= 1
+                if scn.always_gate:
+                    want = other_safe
+                else:
+                    has_del = (delivered[:, :m_app] >= 0).any(axis=1)
+                    want = other_safe & has_del[pcl]
+                want = want & ~crashed[pcl]
+                gsel = sel & want
+                pg = jnp.where(gsel, add_p, n)
+                gate = gate.at[pg, add_k].set(t, mode="drop")
+                flush = flush.at[pg, add_k].set(inf, mode="drop")
+                ping = ping.at[pg, add_k].set(add_slot, mode="drop")
+                delivered = delivered.at[pg, add_slot].set(t, mode="drop")
+                csel = sel & ~want
+                pc_ = jnp.where(csel, add_p, n)
+                gate = gate.at[pc_, add_k].set(-1, mode="drop")
+                flush = flush.at[pc_, add_k].set(inf, mode="drop")
+                ping = ping.at[pc_, add_k].set(-1, mode="drop")
+
+        # -- 3. crashes ----------------------------------------------------- #
+        if cr_round.shape[0]:
+            sel = cr_round == t
+            p_ = jnp.where(sel, cr_pid, n)
+            crashed = crashed.at[p_].set(True, mode="drop")
+
+        # -- 4. broadcasts -------------------------------------------------- #
+        if bc_round.shape[0]:
+            sel = (bc_round == t) & ~crashed[jnp.clip(bc_origin, 0, n - 1)]
+            o_ = jnp.where(sel, bc_origin, n)
+            slots = jnp.arange(m_app, dtype=jnp.int32)
+            delivered = delivered.at[o_, slots].max(t, mode="drop")
+
+        # -- 5. arrivals -> deliveries -------------------------------------- #
+        newly = (arr == t) & (delivered < 0) & ~crashed[:, None]
+        delivered = jnp.where(newly, t, delivered)
+
+        # -- 6. pong detection ---------------------------------------------- #
+        if pc:
+            q_ = jnp.clip(adj, 0, n - 1)
+            s_ = jnp.clip(ping, 0, delivered.shape[1] - 1)
+            tgt_del = delivered[q_, s_]
+            fire = ((gate >= 0) & (flush == inf) & (ping >= 0)
+                    & (tgt_del >= 0) & ~crashed[:, None])
+            flush = jnp.where(fire, t + pong_delay, flush)
+            stats = stats.at[4].set(fire.sum().astype(jnp.int32))
+
+        # -- 7. flush buffered app messages over now-safe links ------------- #
+        if pc:
+            d_app = delivered[:, :m_app]
+            flush_sent = jnp.int32(0)
+            for kk in range(K):
+                do = (flush[:, kk] == t) & active[:, kk] & ~crashed
+                win = ((d_app >= gate[:, kk][:, None])
+                       & (d_app < t) & do[:, None])
+                flush_sent += win.sum().astype(jnp.int32)
+                vals = jnp.where(
+                    win, (t + delay[:, kk])[:, None].astype(jnp.int32), inf)
+                pad = jnp.full((n, delivered.shape[1] - m_app), inf,
+                               jnp.int32)
+                arr = scatter_min(arr, adj[:, kk],
+                                  jnp.concatenate([vals, pad], axis=1), do)
+            stats = stats.at[3].set(flush_sent)
+            cleared = flush == t
+            gate = jnp.where(cleared, -1, gate)
+            ping = jnp.where(cleared, -1, ping)
+            flush = jnp.where(cleared, inf, flush)
+
+        # -- 8. forward this round's deliveries over safe links ------------- #
+        new_del = delivered == t
+        napp = new_del[:, :m_app].sum(axis=1)
+        nping = new_del[:, m_app:].sum(axis=1)
+        has_new = new_del.any(axis=1) & ~crashed
+        elig_cnt = jnp.zeros(n, jnp.int32)
+        for kk in range(K):
+            ok = (active[:, kk] & (gate[:, kk] < 0) & (adj[:, kk] >= 0)
+                  & ~crashed)
+            elig_cnt += ok.astype(jnp.int32)
+            fwd = ok & has_new
+            vals = jnp.where(new_del & fwd[:, None],
+                             (t + delay[:, kk])[:, None].astype(jnp.int32),
+                             inf)
+            arr = scatter_min(arr, adj[:, kk], vals, fwd)
+        stats = stats.at[0].set(napp.sum().astype(jnp.int32))
+        stats = stats.at[1].set((napp * elig_cnt).sum().astype(jnp.int32))
+        stats = stats.at[2].set((nping * elig_cnt).sum().astype(jnp.int32))
+        stats = stats.at[5].set((gate >= 0).sum().astype(jnp.int32))
+
+        return (arr, delivered, adj, delay, active, gate, flush, ping,
+                crashed), stats
+
+    def to_device(st):
+        return (jnp.asarray(st["arr"]), jnp.asarray(st["delivered"]),
+                jnp.asarray(st["adj"]), jnp.asarray(st["delay"]),
+                jnp.asarray(st["active"]), jnp.asarray(st["gate"]),
+                jnp.asarray(st["flush"]), jnp.asarray(st["ping"]),
+                jnp.asarray(st["crashed"]))
+
+    def to_host(state):
+        keys = ("arr", "delivered", "adj", "delay", "active", "gate",
+                "flush", "ping", "crashed")
+        return {key: np.asarray(v) for key, v in zip(keys, state)}
+
+    @jax.jit
+    def run(state, rounds_arr):
+        return jax.lax.scan(step, state, rounds_arr)
+
+    state0 = to_device(_init_state(scn))
+    if snapshot_round is None:
+        final, series = run(state0, jnp.arange(scn.rounds, dtype=jnp.int32))
+        return to_host(final), np.asarray(series, np.int64), None
+    # split the scan at the snapshot and resume from it — no re-simulation
+    snap_state, series_a = run(
+        state0, jnp.arange(snapshot_round + 1, dtype=jnp.int32))
+    snapshot = to_host(snap_state)
+    final, series_b = run(
+        snap_state, jnp.arange(snapshot_round + 1, scn.rounds,
+                               dtype=jnp.int32))
+    series = np.concatenate([np.asarray(series_a, np.int64),
+                             np.asarray(series_b, np.int64)])
+    return to_host(final), series, snapshot
+
+
+def run_vec(scn: VecScenario, backend: str = "auto",
+            snapshot_round: Optional[int] = None) -> VecRunResult:
+    """Execute ``scn`` in lockstep rounds; returns delivery matrix, final
+    state, ``NetStats`` (same schema as the exact simulator) and a
+    per-round stats series.  ``snapshot_round`` additionally captures the
+    full state right after that round (for mid-churn topology metrics)."""
+    if backend == "auto":
+        try:
+            import jax  # noqa: F401
+            backend = "jax"
+        except ImportError:
+            backend = "numpy"
+    if backend == "jax":
+        st, series, snapshot = _run_jax(scn, snapshot_round)
+    elif backend == "numpy":
+        st, series, snapshot = _run_np(scn, snapshot_round)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    stats = _stats_from_series(series, st["arr"], scn.rounds)
+    return VecRunResult(scenario=scn, delivered=st["delivered"], state=st,
+                        stats=stats, series=series, snapshot=snapshot,
+                        backend=backend)

@@ -10,6 +10,27 @@ Unlike PC-broadcast it needs neither FIFO links nor link-safety gating, so
 it tolerates dynamic overlays out of the box — at the price of overhead
 that grows with the fleet.  ``comparisons`` counts vector-entry comparisons
 so benchmarks can expose the W·N behaviour directly.
+
+Method map (classic causal broadcast, the family Table 1's first row
+summarizes; there is no paper algorithm listing for the baseline):
+
+  ``broadcast``             stamp the message with the local clock
+                            (sender entry pre-incremented), gossip it to
+                            the current view, deliver immediately — the
+                            O(N) piggyback Table 1 charges per message
+  ``on_receive``            gossip-forward on first receipt (dedup on
+                            message id), then park in ``pending`` (W)
+  ``_ready``                the delivery condition: every clock entry
+                            satisfied, sender entry off by exactly one —
+                            one O(N) scan per check
+  ``_drain``                re-scan pending after every delivery until a
+                            fixpoint: the O(W·N) delivery execution time
+  ``local_space_entries``   Table 1's local-space metric: clock entries
+                            plus the clocks of parked messages
+
+The vec engine's ``--engine vec`` Table 1 column models this baseline's
+overhead analytically from a causal run instead of simulating the
+pending-set mechanics (``repro.core.vecsim.vc_overhead_model``).
 """
 
 from __future__ import annotations

@@ -4,8 +4,12 @@ and quiescent connected runs deliver everything everywhere."""
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' "
+    "extra (pip install -r requirements.txt)")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core.engine import (analyze, random_instance, run_engine,
                                run_ref)

@@ -14,8 +14,12 @@ Invariants checked (the broadcast specification, §3.1):
 import random
 
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' "
+    "extra (pip install -r requirements.txt)")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import (BoundedPCBroadcast, Network, PCBroadcast, RBroadcast,
                         VCBroadcast, check_trace, ring_plus_random)

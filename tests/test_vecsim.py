@@ -1,0 +1,188 @@
+"""Vectorized lockstep simulator: cross-validation against the exact
+event simulator (same scenario, byte-identical delivered-message
+multisets, oracle-clean traces), numpy/jax backend parity, Fig. 3 at the
+round level, crash semantics, and NetStats schema sanity."""
+
+import numpy as np
+import pytest
+
+from repro.core import NetStats, check_trace
+from repro.core.vecsim import (VecScenario, build_trace, churn_scenario,
+                               crash_scenario, cross_validate,
+                               delivered_multiset, full_out_mask,
+                               link_add_scenario, mean_shortest_path_vec,
+                               run_vec, safe_out_mask, static_scenario,
+                               unsafe_link_stats_vec, vc_overhead_model)
+
+SCENARIOS = {
+    "static": static_scenario,
+    "link_add": link_add_scenario,
+    "churn": churn_scenario,
+}
+
+
+# --------------------------------------------------------------------- #
+# Cross-validation: one scenario, two engines, same deliveries
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("n", [64, 256])
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_vec_matches_exact_engine(name, n):
+    scn = SCENARIOS[name](seed=n + 17, n=n)
+    out = cross_validate(scn)
+    # byte-identical delivered-message multisets across the two engines
+    assert out["vec_multiset"] == out["exact_multiset"]
+    # every correct process delivered every message (connected overlay)
+    assert len(out["vec_multiset"]) == n * scn.m_app
+    # zero causal violations (and full broadcast spec) on both traces
+    assert out["vec_report"].ok, out["vec_report"].summary()
+    assert out["exact_report"].ok, out["exact_report"].summary()
+
+
+@pytest.mark.parametrize("name", ["link_add", "churn"])
+def test_gating_scenarios_exercise_ping_phases(name):
+    """The equivalence above must not be vacuous: the dynamic scenarios
+    really do put links through unsafe (gated) phases."""
+    scn = SCENARIOS[name](seed=5, n=64)
+    res = run_vec(scn, backend="numpy")
+    assert int(res.series[:, 5].sum()) > 0          # gated link-rounds
+    assert res.stats.oob_messages > 0               # pongs flowed
+    assert res.stats.sent_control > 0               # pings flowed
+
+
+def test_crossval_catches_a_lost_delivery():
+    """Sanity of the harness itself: corrupting one delivery breaks
+    multiset equality."""
+    scn = static_scenario(seed=0, n=64)
+    out = cross_validate(scn)
+    res = out["vec"]
+    pid = 7
+    res.delivered[pid, 0] = -1
+    assert delivered_multiset(res) != out["exact_multiset"]
+
+
+# --------------------------------------------------------------------- #
+# Backend parity: numpy reference vs jitted jax scan
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", sorted(SCENARIOS) + ["crash"])
+def test_numpy_jax_backend_parity(name):
+    builder = SCENARIOS.get(name, crash_scenario)
+    scn = builder(seed=3, n=48)
+    r_np = run_vec(scn, backend="numpy")
+    r_jx = run_vec(scn, backend="jax")
+    np.testing.assert_array_equal(r_np.delivered, r_jx.delivered)
+    np.testing.assert_array_equal(r_np.series, r_jx.series)
+    assert r_np.stats == r_jx.stats
+
+
+def test_snapshot_round_matches_between_backends():
+    scn = churn_scenario(seed=9, n=48)
+    snap = int(scn.add_round[-1])
+    r_np = run_vec(scn, backend="numpy", snapshot_round=snap)
+    r_jx = run_vec(scn, backend="jax", snapshot_round=snap)
+    for key in r_np.snapshot:
+        np.testing.assert_array_equal(r_np.snapshot[key],
+                                      r_jx.snapshot[key], err_msg=key)
+
+
+# --------------------------------------------------------------------- #
+# Fig. 3 at the round level (mirrors tests/test_engine.py)
+# --------------------------------------------------------------------- #
+def fig3_scenario(mode):
+    """A(0) -> B(1) -> D(2) slow chain; fast link A->D added mid-flight."""
+    n, k = 3, 3
+    adj0 = np.full((n, k), -1, np.int32)
+    delay0 = np.ones((n, k), np.int32) * 5
+    adj0[0, 0] = 1   # A -> B slow
+    adj0[1, 0] = 2   # B -> D slow
+    adj0[1, 1] = 0   # B -> A
+    adj0[2, 0] = 1   # D -> B
+    i32 = lambda *a: np.asarray(a, np.int32)  # noqa: E731
+    return VecScenario(
+        n=n, k=k, rounds=40, adj0=adj0, delay0=delay0,
+        bcast_round=i32(0, 3), bcast_origin=i32(0, 0),
+        add_round=i32(2), add_p=i32(0), add_k=i32(2), add_q=i32(2),
+        add_delay=i32(1), mode=mode).validate()
+
+
+def test_fig3_r_mode_violates_causal_order():
+    res = run_vec(fig3_scenario("r"), backend="numpy")
+    rep = check_trace(build_trace(res), all_pids={0, 1, 2})
+    assert rep.causal_violations
+    assert res.delivered[2, 1] < res.delivered[2, 0]   # a' before a at D
+
+
+def test_fig3_pc_mode_gates_the_shortcut():
+    res = run_vec(fig3_scenario("pc"), backend="numpy")
+    rep = check_trace(build_trace(res), all_pids={0, 1, 2})
+    assert rep.ok, rep.summary()
+    assert res.delivered[2, 0] < res.delivered[2, 1]
+
+
+# --------------------------------------------------------------------- #
+# Crashes (Fig. 5b silent departures)
+# --------------------------------------------------------------------- #
+def test_crash_freezes_process_and_spares_the_rest():
+    scn = crash_scenario(seed=5, n=64)
+    res = run_vec(scn, backend="numpy")
+    crashed = np.nonzero(res.state["crashed"])[0]
+    assert crashed.size == len(scn.crash_pid)
+    t_crash = int(scn.crash_round[0])
+    # crashed processes deliver nothing at or after their crash round
+    assert (res.delivered[crashed] < t_crash).all()
+    # correct processes still deliver everything that was broadcast
+    assert res.delivered_frac() == 1.0
+    rep = check_trace(build_trace(res), crashed=set(crashed.tolist()),
+                      all_pids=set(range(scn.n)))
+    assert rep.ok, rep.summary()
+
+
+# --------------------------------------------------------------------- #
+# NetStats schema + metrics
+# --------------------------------------------------------------------- #
+def test_netstats_schema_on_static_run():
+    n, m_app = 64, 8
+    scn = static_scenario(seed=1, n=n, m_app=m_app)
+    res = run_vec(scn, backend="numpy")
+    s = res.stats
+    assert isinstance(s, NetStats)
+    assert s.deliveries == n * m_app
+    # static pc run: no gating -> no pings/pongs, O(1) overhead exactly
+    assert s.sent_control == 0 and s.oob_messages == 0
+    assert s.control_bytes == 16 * s.sent_messages
+    # flooding sends one copy per (delivery, out-link); receipts can't
+    # exceed sends
+    assert s.sent_messages >= s.deliveries - m_app
+    assert s.duplicate_receipts < s.sent_messages
+
+
+def test_static_metrics_safe_equals_full_graph():
+    scn = static_scenario(seed=2, n=128, k=5)
+    res = run_vec(scn, backend="numpy", snapshot_round=scn.rounds - 1)
+    snap = res.snapshot
+    srcs = list(range(0, 128, 16))
+    sp_safe = mean_shortest_path_vec(snap["adj"], safe_out_mask(snap), srcs)
+    sp_all = mean_shortest_path_vec(snap["adj"], full_out_mask(snap), srcs)
+    assert sp_safe == sp_all > 1.0
+    unsafe, buffered, mx = unsafe_link_stats_vec(snap, scn.rounds - 1,
+                                                 scn.m_app)
+    assert unsafe == buffered == mx == 0
+
+
+def test_vc_overhead_model_grows_with_broadcasters():
+    small = run_vec(static_scenario(seed=3, n=64, m_app=4), backend="numpy")
+    large = run_vec(static_scenario(seed=3, n=64, m_app=24), backend="numpy")
+    b_small, _ = vc_overhead_model(small)
+    b_large, _ = vc_overhead_model(large)
+    assert b_large > b_small >= 16.0
+    # PC-broadcast's overhead is O(1) regardless
+    for res in (small, large):
+        assert res.stats.control_bytes / res.stats.sent_messages == 16.0
+
+
+def test_msg_counters_are_per_origin_sequential():
+    scn = churn_scenario(seed=11, n=32)
+    counters = scn.msg_counters()
+    seen = {}
+    for origin, c in zip(scn.bcast_origin.tolist(), counters.tolist()):
+        seen[origin] = seen.get(origin, 0) + 1
+        assert c == seen[origin]
