@@ -64,10 +64,13 @@ def rows_exact(n: int = 300, horizon: float = 90.0):
 
 
 def rows_vec(n: int = 50_000, backend: str = "numpy", m_app: int = 12,
-             churn: int = 128):
+             churn: int = 128, window: int | None = None):
     """The same sweep on the vectorized engine at large N.  Integer link
     delays 1..5 rounds stand in for the transmission-delay axis; the
-    snapshot is taken at the last churn round, where gating is busiest."""
+    snapshot is taken at the last churn round, where gating is busiest.
+    ``window`` routes execution through the streaming windowed engine
+    (O(N·window) memory); the snapshot then carries the live buffer and
+    its ``is_app`` mask, which the metrics consume transparently."""
     from repro.core.vecsim import (churn_scenario, full_out_mask,
                                    mean_shortest_path_vec, run_vec,
                                    safe_out_mask, unsafe_link_stats_vec)
@@ -79,7 +82,8 @@ def rows_vec(n: int = 50_000, backend: str = "numpy", m_app: int = 12,
                              churn_window=16)
         snap = int(scn.add_round[-1]) if scn.n_adds else scn.rounds // 2
         t0 = time.perf_counter()
-        res = run_vec(scn, backend=backend, snapshot_round=snap)
+        res = run_vec(scn, backend=backend, snapshot_round=snap,
+                      window=window)
         wall = (time.perf_counter() - t0) * 1e6
         assert res.delivered_frac() == 1.0, "vec run did not quiesce"
         srcs = list(range(0, n, max(1, n // 10)))
@@ -99,9 +103,10 @@ def rows_vec(n: int = 50_000, backend: str = "numpy", m_app: int = 12,
 
 
 def rows(engine: str = "exact", n: int | None = None,
-         backend: str = "numpy"):
+         backend: str = "numpy", window: int | None = None):
     if engine == "vec":
-        return rows_vec(n if n is not None else 50_000, backend=backend)
+        return rows_vec(n if n is not None else 50_000, backend=backend,
+                        window=window)
     return rows_exact(n if n is not None else 300)
 
 
@@ -114,8 +119,12 @@ def main():
                     default="numpy",
                     help="vec-engine backend (numpy is fastest on CPU; "
                          "jax is the accelerator/sharding path)")
+    ap.add_argument("--window", type=int, default=None,
+                    help="run the vec sweep through the streaming "
+                         "windowed engine with this many live columns")
     args = ap.parse_args()
-    for name, us, derived in rows(args.engine, args.n, args.backend):
+    for name, us, derived in rows(args.engine, args.n, args.backend,
+                                  args.window):
         print(f"{name},{us:.0f},{derived:.3f}")
 
 

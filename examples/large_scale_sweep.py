@@ -44,13 +44,14 @@ def exact_point(n: int, n_bcast: int = 12) -> float:
     return dt
 
 
-def vec_point(n: int, backend: str):
+def vec_point(n: int, backend: str, window: int | None = None):
     scn = churn_scenario(seed=n, n=n, k=9, m_app=12,
                          n_adds=max(8, n // 400), n_rms=max(8, n // 400),
                          max_delay=2, churn_window=8)
     snap = int(scn.add_round[-1])
     t0 = time.perf_counter()
-    res = run_vec(scn, backend=backend, snapshot_round=snap)
+    res = run_vec(scn, backend=backend, snapshot_round=snap, window=window,
+                  collect=None if window is None else "full")
     dt = time.perf_counter() - t0
     unsafe, _, _ = unsafe_link_stats_vec(res.snapshot, snap, scn.m_app)
     pc_bytes = res.stats.control_bytes / max(res.stats.sent_messages, 1)
@@ -66,13 +67,19 @@ def main():
                     help="run the event simulator up to this N for contrast")
     ap.add_argument("--backend", choices=("numpy", "jax", "auto"),
                     default="numpy")
+    ap.add_argument("--window", type=int, default=None,
+                    help="stream each point through the windowed engine "
+                         "with this many live message columns (O(N·window) "
+                         "memory; see benchmarks/bench_throughput.py for "
+                         "the sustained-traffic story)")
     args = ap.parse_args()
 
     print(f"{'N':>7} {'vec(s)':>7} {'exact(s)':>9} {'msgs':>11} "
           f"{'frac':>5} {'lat(rd)':>7} {'unsafe/p':>8} "
           f"{'pc B/msg':>8} {'vc B/msg':>8}")
     for n in args.sizes:
-        dt, res, unsafe, pc_bytes, vc_bytes = vec_point(n, args.backend)
+        dt, res, unsafe, pc_bytes, vc_bytes = vec_point(n, args.backend,
+                                                        args.window)
         exact_s = (f"{exact_point(n):9.1f}" if n <= args.exact_max
                    else f"{'--':>9}")
         assert res.delivered_frac() == 1.0

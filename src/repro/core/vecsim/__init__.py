@@ -9,9 +9,17 @@ per-process delivery rounds, ``(N, K)`` link-slot tables, ping-phase state
 CPU: the population sizes at which the paper's constant-size control
 information actually separates from the O(N) vector-clock baseline.
 
+For *sustained* traffic the monolithic ``(N, M)`` matrices are replaced by
+the streaming windowed engine (``stream``): messages flow through a fixed
+O(N·W) live-column buffer and retire into online aggregates once nothing
+can touch them, so one host sustains millions of broadcasts at N ≥ 10k.
+
 Modules:
-  scenario  — preplanned runs (topology + broadcast/churn/crash schedules)
+  scenario  — preplanned runs (topologies + broadcast/churn/crash/traffic
+              schedules: ring/k-regular/small-world, Poisson/bursty load,
+              partition-heal, churn waves, sustained streams)
   sim       — the lockstep engine, both backends, NetStats emission
+  stream    — streaming windowed execution in O(N·window) memory
   metrics   — Fig. 7 metrics, oracle-compatible traces, multisets
   crossval  — replay the same scenario on the exact engine and compare
 
@@ -22,16 +30,24 @@ from .crossval import cross_validate, delivered_multiset_exact, run_exact
 from .metrics import (build_trace, delivered_multiset, full_out_mask,
                       mean_shortest_path_vec, safe_out_mask,
                       unsafe_link_stats_vec, vc_overhead_model)
-from .scenario import (INF, VecScenario, churn_scenario, crash_scenario,
-                       link_add_scenario, ring_topology, settle_rounds,
-                       static_scenario)
-from .sim import SERIES_FIELDS, VecRunResult, run_vec
+from .scenario import (INF, VecScenario, bursty_traffic, churn_scenario,
+                       churn_wave_scenario, crash_scenario,
+                       kregular_topology, link_add_scenario,
+                       partition_heal_scenario, poisson_traffic,
+                       ring_topology, settle_rounds, smallworld_topology,
+                       static_scenario, sustained_scenario)
+from .sim import SERIES_FIELDS, SlotSchedule, VecRunResult, run_vec
+from .stream import WindowedRunResult, WindowOverflowError, run_vec_windowed
 
 __all__ = [
-    "INF", "VecScenario", "ring_topology", "settle_rounds",
+    "INF", "VecScenario", "ring_topology", "kregular_topology",
+    "smallworld_topology", "settle_rounds",
+    "poisson_traffic", "bursty_traffic",
     "static_scenario", "link_add_scenario", "churn_scenario",
-    "crash_scenario",
-    "SERIES_FIELDS", "VecRunResult", "run_vec",
+    "crash_scenario", "partition_heal_scenario", "churn_wave_scenario",
+    "sustained_scenario",
+    "SERIES_FIELDS", "SlotSchedule", "VecRunResult", "run_vec",
+    "WindowedRunResult", "WindowOverflowError", "run_vec_windowed",
     "safe_out_mask", "full_out_mask", "mean_shortest_path_vec",
     "unsafe_link_stats_vec", "build_trace", "delivered_multiset",
     "vc_overhead_model",

@@ -24,7 +24,7 @@ reproduce (DESIGN.md §2.4).
 
 from __future__ import annotations
 
-from typing import Dict, List, Set, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -108,9 +108,14 @@ def delivered_multiset_exact(net: Network) -> List[Tuple[int, int, int]]:
 
 
 def cross_validate(scn: VecScenario, seed: int = 0,
-                   backend: str = "numpy") -> Dict[str, object]:
-    """Run both engines on ``scn``; return multisets + oracle reports."""
-    res = run_vec(scn, backend=backend)
+                   backend: str = "numpy",
+                   window: Optional[int] = None) -> Dict[str, object]:
+    """Run both engines on ``scn``; return multisets + oracle reports.
+    ``window`` routes the vec run through the streaming windowed engine
+    (with the full delivered matrix collected), so windowed execution is
+    cross-validated against the exact simulator the same way."""
+    res = run_vec(scn, backend=backend, window=window,
+                  collect=None if window is None else "full")
     net = run_exact(scn, seed=seed)
     crashed: Set[int] = set(np.nonzero(res.state["crashed"])[0].tolist())
     vec_rep = check_trace(build_trace(res), crashed=crashed,

@@ -103,14 +103,23 @@ def unsafe_link_stats_vec(state: Dict[str, np.ndarray], t: int,
     """(mean unsafe links/process, mean buffered msgs/process, max buffer)
     at a state snapshot taken right after round ``t`` — the same tuple as
     ``repro.core.metrics.unsafe_link_stats``.  A gated slot's buffer holds
-    every app message its owner delivered in ``[gate, t]``."""
+    every app message its owner delivered in ``[gate, t]``.
+
+    Works on monolithic snapshots (app messages are the first ``m_app``
+    columns) and on windowed-engine snapshots, which carry an ``is_app``
+    mask because live buffer columns interleave app and ping slots; the
+    windowed buffer retains every flush-relevant column by construction,
+    so the stats are identical."""
     gate, delivered, crashed = state["gate"], state["delivered"], state["crashed"]
     alive = ~crashed
     gated = (gate >= 0) & alive[:, None]
     n_alive = max(1, int(alive.sum()))
     if not gated.any():
         return 0.0, 0.0, 0
-    d_app = delivered[:, :m_app]
+    if "is_app" in state:
+        d_app = delivered[:, state["is_app"]]
+    else:
+        d_app = delivered[:, :m_app]
     # buffered[p, kk] = #app msgs delivered by p in [gate, t] on that slot
     win = (d_app >= 0) & (d_app <= t)
     buf = ((d_app[:, None, :] >= gate[:, :, None])
@@ -130,7 +139,13 @@ def _app_msgs(scn: VecScenario) -> List[AppMsg]:
 def build_trace(res: VecRunResult) -> List[Tuple[float, str, int, AppMsg]]:
     """Oracle-compatible trace: per round, broadcasts first (the lockstep
     broadcast phase precedes the arrival-delivery phase), then deliveries
-    ordered by message slot."""
+    ordered by message slot.  Accepts monolithic and windowed results —
+    the latter must have collected the full delivered matrix
+    (``collect="full"``)."""
+    if res.delivered is None:
+        raise ValueError("trace reconstruction needs the full delivered "
+                         "matrix; rerun the windowed engine with "
+                         "collect='full'")
     scn = res.scenario
     msgs = _app_msgs(scn)
     d_app = res.delivered[:, : scn.m_app]
@@ -152,6 +167,10 @@ def build_trace(res: VecRunResult) -> List[Tuple[float, str, int, AppMsg]]:
 
 def delivered_multiset(res: VecRunResult) -> List[Tuple[int, int, int]]:
     """Sorted (pid, origin, counter) triples over all app deliveries."""
+    if res.delivered is None:
+        raise ValueError("delivered multiset needs the full delivered "
+                         "matrix; rerun the windowed engine with "
+                         "collect='full'")
     scn = res.scenario
     counters = scn.msg_counters()
     d_app = res.delivered[:, : scn.m_app]
@@ -171,6 +190,10 @@ def vc_overhead_model(res: VecRunResult) -> Tuple[float, float]:
     broadcaster had delivered from before broadcasting (plus itself) —
     exactly what ``VCBroadcast`` piggybacks — and every delivery rescans
     that clock once (Table 1's O(N) terms).  DESIGN.md §2.4."""
+    if res.delivered is None:
+        raise ValueError("the VC overhead model needs the full delivered "
+                         "matrix; rerun the windowed engine with "
+                         "collect='full'")
     scn = res.scenario
     d_app = res.delivered[:, : scn.m_app]
     origins = scn.bcast_origin

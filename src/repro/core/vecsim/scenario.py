@@ -30,9 +30,11 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-__all__ = ["INF", "VecScenario", "ring_topology", "settle_rounds",
-           "static_scenario", "link_add_scenario", "churn_scenario",
-           "crash_scenario"]
+__all__ = ["INF", "VecScenario", "ring_topology", "kregular_topology",
+           "smallworld_topology", "settle_rounds", "poisson_traffic",
+           "bursty_traffic", "static_scenario", "link_add_scenario",
+           "churn_scenario", "crash_scenario", "partition_heal_scenario",
+           "churn_wave_scenario", "sustained_scenario"]
 
 INF = np.int32(2 ** 30)
 
@@ -311,3 +313,395 @@ def crash_scenario(seed: int, n: int, k: int = 6, m_app: int = 10,
                    bcast_origin=base.bcast_origin[keep],
                    crash_round=_i32(np.full(n_crashes, mid)),
                    crash_pid=_i32(pids)).validate()
+
+
+# --------------------------------------------------------------------- #
+# Topology builders beyond ring+random
+# --------------------------------------------------------------------- #
+def _perm_avoiding(rng, n: int, forbidden: np.ndarray) -> np.ndarray:
+    """Random permutation of ``range(n)`` with ``perm[p] != p`` and
+    ``perm[p]`` not in ``forbidden[p]`` (an ``(n, j)`` column stack of
+    already-used targets).  Repairs conflicts by reshuffling the
+    conflicted positions among themselves, which converges quickly while
+    the forbidden sets stay small relative to ``n``."""
+    perm = rng.permutation(n).astype(np.int64)
+    me = np.arange(n)
+    for it in range(1000):
+        bad = perm == me
+        for c in range(forbidden.shape[1]):
+            bad |= perm == forbidden[:, c]
+        idx = np.nonzero(bad)[0]
+        if not len(idx):
+            return perm
+        if len(idx) == 1 or it % 7 == 6:
+            # a lone conflict (or a cycling set) needs fresh material:
+            # swap each conflicted position with a random other one
+            others = rng.integers(0, n, size=len(idx))
+            for i, j in zip(idx, others):
+                perm[i], perm[j] = perm[j], perm[i]
+        else:
+            perm[idx] = perm[idx[rng.permutation(len(idx))]]
+    raise RuntimeError("could not build a conflict-free permutation "
+                       f"(n={n}, {forbidden.shape[1]} forbidden/row)")
+
+
+def kregular_topology(seed: int, n: int, k: int, max_delay: int = 3,
+                      free_slots: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+    """Random k-regular digraph: slot 0 is the directed ring (a cyclic
+    permutation, kept for the never-removed connectivity invariant) and
+    each further populated slot is an independent random permutation, so
+    every process has equal out- AND in-degree — the paper's uniform
+    peer-sampling ideal, without ring+random's in-degree skew."""
+    assert n >= k + 2, "need n >= k + 2 distinct targets per process"
+    rng = np.random.default_rng(seed)
+    adj0 = np.full((n, k), -1, np.int64)
+    adj0[:, 0] = (np.arange(n) + 1) % n
+    n_extra = max(0, k - 1 - free_slots)
+    for j in range(1, n_extra + 1):
+        adj0[:, j] = _perm_avoiding(rng, n, adj0[:, :j])
+    delay0 = rng.integers(1, max_delay + 1, size=(n, k)).astype(np.int32)
+    return adj0.astype(np.int32), delay0
+
+
+def smallworld_topology(seed: int, n: int, k: int, beta: float = 0.2,
+                        max_delay: int = 3, free_slots: int = 1
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Watts-Strogatz-style overlay: a directed ring lattice (slot ``j``
+    points ``j+1`` positions ahead) whose non-ring slots are rewired to a
+    uniform random target with probability ``beta``.  ``beta=0`` is a
+    pure lattice (long paths), ``beta=1`` approaches ring+random; small
+    ``beta`` gives the clustered/short-diameter regime in between."""
+    rng = np.random.default_rng(seed)
+    adj0 = np.full((n, k), -1, np.int64)
+    n_used = max(1, k - free_slots)
+    assert n > n_used + 1, "lattice needs n > k - free_slots + 1"
+    for j in range(n_used):
+        adj0[:, j] = (np.arange(n) + j + 1) % n
+    for j in range(1, n_used):            # slot 0 ring is never rewired
+        for p in np.nonzero(rng.random(n) < beta)[0]:
+            p = int(p)
+            used = {p} | {int(q) for q in adj0[p] if q >= 0}
+            if len(used) >= n:
+                continue
+            while True:
+                q = int(rng.integers(0, n))
+                if q not in used:
+                    break
+            adj0[p, j] = q
+    delay0 = rng.integers(1, max_delay + 1, size=(n, k)).astype(np.int32)
+    return adj0.astype(np.int32), delay0
+
+
+# --------------------------------------------------------------------- #
+# Traffic schedules: sustained load instead of a fixed broadcast batch
+# --------------------------------------------------------------------- #
+def _per_round_origins(rng, n: int, counts: np.ndarray, t0: int):
+    rounds, origins = [], []
+    for off, c in enumerate(counts):
+        c = int(min(c, n))
+        if c <= 0:
+            continue
+        rounds.extend([t0 + off] * c)
+        origins.extend(rng.choice(n, size=c, replace=False).tolist())
+    return _i32(rounds), _i32(origins)
+
+
+def poisson_traffic(seed: int, n: int, rate: float, t0: int, t1: int,
+                    max_messages: Optional[int] = None):
+    """Poisson(rate) broadcasts per round over ``[t0, t1)``; origins are
+    drawn without replacement per round, so the (origin, round) pairs
+    are unique as the lockstep batching rule requires.  Truncates to
+    ``max_messages`` if given."""
+    rng = np.random.default_rng(seed)
+    counts = rng.poisson(rate, size=max(0, t1 - t0))
+    bc_round, bc_origin = _per_round_origins(rng, n, counts, t0)
+    if max_messages is not None:
+        bc_round, bc_origin = bc_round[:max_messages], bc_origin[:max_messages]
+    return bc_round, bc_origin
+
+
+def bursty_traffic(seed: int, n: int, rate_hi: float, rate_lo: float,
+                   period: int, duty: float, t0: int, t1: int,
+                   max_messages: Optional[int] = None):
+    """On/off traffic: rounds in the first ``duty`` fraction of each
+    ``period`` draw Poisson(rate_hi) broadcasts, the rest Poisson(rate_lo)
+    — the heavy-tailed load pattern large deployments actually see."""
+    rng = np.random.default_rng(seed)
+    ts = np.arange(t0, t1)
+    hot = (ts % max(1, period)) < duty * period
+    counts = rng.poisson(np.where(hot, rate_hi, rate_lo))
+    bc_round, bc_origin = _per_round_origins(rng, n, counts, t0)
+    if max_messages is not None:
+        bc_round, bc_origin = bc_round[:max_messages], bc_origin[:max_messages]
+    return bc_round, bc_origin
+
+
+_TOPOLOGIES = {"ring": ring_topology, "kregular": kregular_topology,
+               "smallworld": smallworld_topology}
+
+
+def _build_topology(topology: str, seed: int, n: int, k: int,
+                    max_delay: int, free_slots: int, beta: float):
+    if topology == "smallworld":
+        return smallworld_topology(seed, n, k, beta=beta,
+                                   max_delay=max_delay,
+                                   free_slots=free_slots)
+    try:
+        builder = _TOPOLOGIES[topology]
+    except KeyError:
+        raise ValueError(f"unknown topology {topology!r}; "
+                         f"choose from {sorted(_TOPOLOGIES)}") from None
+    return builder(seed, n, k, max_delay=max_delay, free_slots=free_slots)
+
+
+# --------------------------------------------------------------------- #
+# Partition / heal
+# --------------------------------------------------------------------- #
+def partition_heal_scenario(seed: int, n: int, k: int = 5, m_app: int = 12,
+                            n_cross: Optional[int] = None,
+                            n_heal: Optional[int] = None,
+                            n_bridge: int = 1,
+                            max_delay: int = 2, pong_delay: int = 1,
+                            traffic_during_partition: bool = False
+                            ) -> VecScenario:
+    """Two halves, each internally ringed on slot 0, joined by cross
+    links on slot ``k-2``.  The partition removes all but ``n_bridge``
+    cross links per direction in one round; after a quiet interval,
+    fresh cross links are added on the free slot ``k-1`` (the heal) and
+    race the tail of the traffic, so the healed links re-enter through
+    the Algorithm 2 ping phase exactly like any other addition.
+
+    The surviving bridge makes this a *brownout* rather than a total
+    partition, and deliberately so: pings travel over safe links only,
+    so after a total partition a healed link's ping could never reach
+    its target — the gate would hang forever in both engines and nothing
+    would ever heal.  The thin bridge keeps the ping phase functional
+    (and Algorithm 2 exercised end-to-end) while cross-half capacity
+    collapses; traffic broadcast during the brownout (opt-in) squeezes
+    through the bridge at much higher latency."""
+    assert k >= 4 and n >= 8
+    assert n_bridge >= 1, "a total partition cannot re-gate (see docstring)"
+    half = n // 2
+    rng = np.random.default_rng(seed)
+    n_cross = n_cross if n_cross is not None else max(2, n // 8)
+    n_cross = max(n_cross, n_bridge + 1)
+    n_heal = n_heal if n_heal is not None else max(2, n // 8)
+
+    adj0 = np.full((n, k), -1, np.int64)
+    sides = (np.arange(half), np.arange(half, n))
+    for side in sides:
+        m = len(side)
+        adj0[side, 0] = side[(np.arange(m) + 1) % m]       # intra-half ring
+        for p in side:
+            p = int(p)
+            used = {p, int(adj0[p, 0])}
+            for j in range(1, k - 2):
+                if len(used) >= m:
+                    break
+                while True:
+                    q = int(side[rng.integers(0, m)])
+                    if q not in used:
+                        break
+                adj0[p, j] = q
+                used.add(q)
+    # cross links, slot k-2; the first n_bridge per *direction* survive
+    # the partition as the brownout bridge (a direction can contribute
+    # fewer than n_cross links when n_cross exceeds the half size, so
+    # survivors are tracked per direction, not by modulo)
+    cross_p, cross_q, sever = [], [], []
+    for a, b in ((sides[0], sides[1]), (sides[1], sides[0])):
+        ps = a[rng.permutation(len(a))[:n_cross]]
+        qs = b[rng.integers(0, len(b), size=len(ps))]
+        assert len(ps) > n_bridge, \
+            "half too small to keep a bridge and still partition"
+        cross_p.extend(int(x) for x in ps)
+        cross_q.extend(int(x) for x in qs)
+        sever.extend(int(x) for x in ps[n_bridge:])
+    adj0[cross_p, k - 2] = cross_q
+    delay0 = rng.integers(1, max_delay + 1, size=(n, k)).astype(np.int32)
+
+    settle = settle_rounds(n, k, max_delay, pong_delay)
+    m1 = max(2, m_app // 3)
+    m2 = max(1, m_app // 4) if traffic_during_partition else 0
+    m3 = m_app - m1 - m2
+    bc_r1, bc_o1 = _spread_broadcasts(rng, n, m1, 0, 2 * m1)
+    t_part = 2 * m1 + settle
+    rm_round = _i32(np.full(len(sever), t_part))
+    rm_p = _i32(sever)
+    rm_k = _i32(np.full(len(sever), k - 2))
+    if m2:
+        bc_r2, bc_o2 = _spread_broadcasts(rng, n, m2, t_part + 2,
+                                          t_part + 2 + 2 * m2)
+    t_heal = t_part + (2 * m2 + 2 if m2 else 0) + settle
+    # heal: distinct processes, fresh cross targets on the free slot k-1
+    heal_p_pool = np.concatenate([sides[0][rng.permutation(half)[:n_heal]],
+                                  sides[1][rng.permutation(n - half)[:n_heal]]])
+    add_round, add_p, add_k, add_q, add_delay = [], [], [], [], []
+    for p in heal_p_pool:
+        p = int(p)
+        other = sides[1] if p < half else sides[0]
+        used = {p} | {int(q) for q in adj0[p] if q >= 0}
+        while True:
+            q = int(other[rng.integers(0, len(other))])
+            if q not in used:
+                break
+        add_round.append(t_heal + len(add_round) % 4)
+        add_p.append(p)
+        add_k.append(k - 1)
+        add_q.append(q)
+        add_delay.append(int(rng.integers(1, max_delay + 1)))
+    order = np.argsort(np.asarray(add_round), kind="stable")
+    adds = tuple(_i32(np.asarray(a)[order]) for a in
+                 (add_round, add_p, add_k, add_q, add_delay))
+    bc_r3, bc_o3 = _spread_broadcasts(rng, n, m3, t_heal, t_heal + 4 + m3)
+    parts_r = [bc_r1] + ([bc_r2] if m2 else []) + [bc_r3]
+    parts_o = [bc_o1] + ([bc_o2] if m2 else []) + [bc_o3]
+    bc_round = _i32(np.concatenate(parts_r))
+    bc_origin = _i32(np.concatenate(parts_o))
+    rounds = int(t_heal) + 4 + m3 + settle
+    return VecScenario(n=n, k=k, rounds=rounds,
+                       adj0=adj0.astype(np.int32), delay0=delay0,
+                       bcast_round=bc_round, bcast_origin=bc_origin,
+                       add_round=adds[0], add_p=adds[1], add_k=adds[2],
+                       add_q=adds[3], add_delay=adds[4],
+                       rm_round=rm_round, rm_p=rm_p, rm_k=rm_k,
+                       pong_delay=pong_delay).validate()
+
+
+# --------------------------------------------------------------------- #
+# Churn waves
+# --------------------------------------------------------------------- #
+def churn_wave_scenario(seed: int, n: int, k: int = 6, m_app: int = 18,
+                        waves: int = 3, adds_per_wave: Optional[int] = None,
+                        rms_per_wave: Optional[int] = None,
+                        wave_gap: Optional[int] = None, max_delay: int = 2,
+                        pong_delay: int = 1) -> VecScenario:
+    """Churn arriving in periodic waves — each wave batches link
+    additions (on distinct processes drawn from a shared pool, so no
+    slot is reused) and removals, with traffic flowing throughout.  The
+    dynamic-membership pattern of diurnal or flash-crowd systems."""
+    adds_per_wave = adds_per_wave if adds_per_wave is not None \
+        else max(2, n // (8 * waves))
+    rms_per_wave = rms_per_wave if rms_per_wave is not None \
+        else max(2, n // (8 * waves))
+    adj0, delay0 = ring_topology(seed, n, k, max_delay, free_slots=1)
+    rng = np.random.default_rng(seed + 5)
+    settle = settle_rounds(n, k, max_delay, pong_delay)
+    wave_gap = wave_gap if wave_gap is not None else settle // 2 + 4
+    early = max(2, m_app // (waves + 1))
+    bc_round, bc_origin = _spread_broadcasts(rng, n, early, 0, 2 * early)
+    bc_round, bc_origin = [bc_round], [bc_origin]
+    lo = 2 * early + settle
+
+    pool = rng.permutation(n)          # distinct add-processes across ALL waves
+    pool_at = 0
+    add_round, add_p, add_k, add_q, add_delay = [], [], [], [], []
+    rm_round, rm_p, rm_k = [], [], []
+    rm_seen = set()
+    m_left = m_app - early
+    for wv in range(waves):
+        w_lo = lo + wv * wave_gap
+        w_hi = w_lo + max(3, adds_per_wave)
+        for _ in range(adds_per_wave):
+            if pool_at >= n:
+                break
+            p = int(pool[pool_at])
+            pool_at += 1
+            used = {p} | {int(q) for q in adj0[p] if q >= 0}
+            if len(used) >= n:
+                continue
+            while True:
+                q = int(rng.integers(0, n))
+                if q not in used:
+                    break
+            add_round.append(int(rng.integers(w_lo, w_hi)))
+            add_p.append(p)
+            add_k.append(k - 1)
+            add_q.append(q)
+            add_delay.append(int(rng.integers(1, max_delay + 1)))
+        for _ in range(rms_per_wave):
+            p = int(rng.integers(0, n))
+            kk = int(rng.integers(1, max(2, k - 1)))
+            if adj0[p, kk] >= 0 and (p, kk) not in rm_seen:
+                rm_seen.add((p, kk))
+                rm_round.append(int(rng.integers(w_lo, w_hi)))
+                rm_p.append(p)
+                rm_k.append(kk)
+        m_wave = m_left // (waves - wv)
+        m_left -= m_wave
+        if m_wave:
+            r, o = _spread_broadcasts(rng, n, m_wave, w_lo, w_hi + 4)
+            bc_round.append(r)
+            bc_origin.append(o)
+    order = np.argsort(np.asarray(add_round), kind="stable")
+    adds = tuple(_i32(np.asarray(a)[order]) for a in
+                 (add_round, add_p, add_k, add_q, add_delay))
+    if rm_round:
+        order = np.argsort(np.asarray(rm_round), kind="stable")
+        rms = tuple(_i32(np.asarray(a)[order])
+                    for a in (rm_round, rm_p, rm_k))
+    else:
+        rms = (_empty(), _empty(), _empty())
+    bc_all = np.concatenate(bc_round)
+    bo_all = np.concatenate(bc_origin)
+    order = np.argsort(bc_all, kind="stable")
+    rounds = lo + waves * wave_gap + adds_per_wave + 8 + settle
+    return VecScenario(n=n, k=k, rounds=rounds, adj0=adj0, delay0=delay0,
+                       bcast_round=_i32(bc_all[order]),
+                       bcast_origin=_i32(bo_all[order]),
+                       add_round=adds[0], add_p=adds[1], add_k=adds[2],
+                       add_q=adds[3], add_delay=adds[4],
+                       rm_round=rms[0], rm_p=rms[1], rm_k=rms[2],
+                       pong_delay=pong_delay).validate()
+
+
+# --------------------------------------------------------------------- #
+# Sustained heavy traffic (the streaming engine's home scenario)
+# --------------------------------------------------------------------- #
+def sustained_scenario(seed: int, n: int, k: int = 8,
+                       rate: float = 4.0, messages: int = 1000,
+                       topology: str = "kregular",
+                       traffic: str = "poisson", beta: float = 0.2,
+                       burst_period: int = 64, burst_duty: float = 0.25,
+                       rate_lo: Optional[float] = None,
+                       max_delay: int = 1, mode: str = "pc",
+                       pong_delay: int = 1) -> VecScenario:
+    """Open-ended sustained load: ``messages`` broadcasts at ``rate`` per
+    round on a static well-connected overlay.  Built for the streaming
+    windowed engine — the monolithic engine would need O(N·messages)
+    memory — but emits the same ``VecScenario`` schema as every other
+    builder, so small instances still cross-validate on the exact
+    engine."""
+    free_slots = 0
+    adj0, delay0 = _build_topology(topology, seed, n, k, max_delay,
+                                   free_slots, beta)
+    if traffic == "poisson":
+        eff_rate = rate
+    elif traffic == "bursty":
+        lo_rate = rate / 8 if rate_lo is None else rate_lo
+        eff_rate = burst_duty * rate + (1 - burst_duty) * lo_rate
+    else:
+        raise ValueError(f"unknown traffic model {traffic!r}")
+    # size the span by the *effective* mean rate (bursty spends most
+    # rounds at rate_lo), then grow it if the Poisson draw fell short
+    span = max(8, int(np.ceil(messages / max(eff_rate, 1e-9) * 1.25)))
+    for _ in range(16):
+        if traffic == "poisson":
+            bc_round, bc_origin = poisson_traffic(seed + 1, n, rate, 0,
+                                                  span,
+                                                  max_messages=messages)
+        else:
+            bc_round, bc_origin = bursty_traffic(seed + 1, n, rate, lo_rate,
+                                                 burst_period, burst_duty,
+                                                 0, span,
+                                                 max_messages=messages)
+        if len(bc_round) == messages:
+            break
+        span *= 2
+    assert len(bc_round) == messages, \
+        f"traffic span too short: {len(bc_round)} < {messages}"
+    last = int(bc_round[-1]) if len(bc_round) else 0
+    rounds = last + 1 + settle_rounds(n, k, max_delay, pong_delay)
+    return VecScenario(n=n, k=k, rounds=rounds, adj0=adj0, delay0=delay0,
+                       bcast_round=bc_round, bcast_origin=bc_origin,
+                       mode=mode, pong_delay=pong_delay).validate()

@@ -20,6 +20,14 @@ deliveries over safe links.  The phase order matches the event engine's
 same-timestamp event order, which is what the cross-validation harness
 (``crossval.py``) relies on.
 
+The round body is written in *slot space*: schedules name the message
+**column** each broadcast/ping occupies, and an ``is_app`` mask replaces
+``[:, :m_app]`` prefix slicing.  The monolithic entry point
+(:func:`run_vec`) uses the identity mapping (column ``i`` = message
+``i``); the streaming windowed engine (``vecsim.stream``) reuses the
+same spans over a fixed-width live-column buffer, which is what makes
+windowed and monolithic runs byte-identical wherever both can run.
+
 Two backends execute the identical semantics:
 
   * ``numpy``  — readable reference, mutation + ``np.minimum.at`` scatter;
@@ -32,6 +40,7 @@ matrices and per-round stats series on random scenarios.
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Dict, Optional
 
@@ -40,7 +49,8 @@ import numpy as np
 from ..types import NetStats
 from .scenario import INF, VecScenario
 
-__all__ = ["VecRunResult", "run_vec", "SERIES_FIELDS"]
+__all__ = ["VecRunResult", "run_vec", "SERIES_FIELDS", "SlotSchedule",
+           "full_schedule"]
 
 # Wire-size model shared with repro.core.base.control_bytes.
 _CTRL_APP = 16    # AppMsg: (origin, counter)
@@ -49,6 +59,50 @@ _CTRL_PING = 24   # Ping:   (frm, to, id)
 # Per-round stats emitted by both backends (int64 numpy (rounds, 6)).
 SERIES_FIELDS = ("deliveries", "sent_app", "sent_ping", "flush_sent",
                  "pongs", "gated")
+
+
+@dataclass
+class SlotSchedule:
+    """Slot-space schedules for a span of rounds.
+
+    ``bc_slot``/``add_slot`` name the message *column* of each broadcast
+    / link-addition ping; ``is_app`` marks which columns carry app
+    messages.  Rounds are absolute.  The monolithic run uses the
+    identity mapping (:func:`full_schedule`); the windowed engine remaps
+    onto live buffer columns per segment."""
+
+    is_app: np.ndarray       # (W,) bool
+    bc_round: np.ndarray     # (B,)
+    bc_origin: np.ndarray    # (B,)
+    bc_slot: np.ndarray      # (B,)
+    add_round: np.ndarray    # (E,)
+    add_p: np.ndarray
+    add_k: np.ndarray
+    add_q: np.ndarray
+    add_delay: np.ndarray
+    add_slot: np.ndarray     # (E,) ping column of each addition
+    rm_round: np.ndarray     # (R,)
+    rm_p: np.ndarray
+    rm_k: np.ndarray
+    cr_round: np.ndarray     # (C,)
+    cr_pid: np.ndarray
+
+
+def full_schedule(scn: VecScenario) -> SlotSchedule:
+    """Identity slot mapping: column ``i`` is message ``i``, ping of
+    addition ``e`` is column ``m_app + e``."""
+    m_app = scn.m_app
+    is_app = np.zeros(scn.m_total, bool)
+    is_app[:m_app] = True
+    return SlotSchedule(
+        is_app=is_app,
+        bc_round=scn.bcast_round, bc_origin=scn.bcast_origin,
+        bc_slot=np.arange(m_app, dtype=np.int32),
+        add_round=scn.add_round, add_p=scn.add_p, add_k=scn.add_k,
+        add_q=scn.add_q, add_delay=scn.add_delay,
+        add_slot=(m_app + np.arange(scn.n_adds)).astype(np.int32),
+        rm_round=scn.rm_round, rm_p=scn.rm_p, rm_k=scn.rm_k,
+        cr_round=scn.crash_round, cr_pid=scn.crash_pid)
 
 
 @dataclass
@@ -81,11 +135,12 @@ class VecRunResult:
         return float(lat[got].mean())
 
 
-def _init_state(scn: VecScenario) -> Dict[str, np.ndarray]:
-    n, k, m = scn.n, scn.k, scn.m_total
+def init_topo_state(scn: VecScenario, width: int) -> Dict[str, np.ndarray]:
+    """Topology/gating state plus a ``width``-column message buffer."""
+    n, k = scn.n, scn.k
     return dict(
-        arr=np.full((n, m), INF, np.int32),
-        delivered=np.full((n, m), -1, np.int32),
+        arr=np.full((n, width), INF, np.int32),
+        delivered=np.full((n, width), -1, np.int32),
         adj=scn.adj0.astype(np.int32).copy(),
         delay=scn.delay0.astype(np.int32).copy(),
         active=(scn.adj0 >= 0).copy(),
@@ -93,19 +148,22 @@ def _init_state(scn: VecScenario) -> Dict[str, np.ndarray]:
         flush=np.full((n, k), INF, np.int32),
         ping=np.full((n, k), -1, np.int32),
         crashed=np.zeros(n, bool),
+        # app-delivery memory of columns already retired by the windowed
+        # engine; always all-False on monolithic runs (the live columns
+        # hold the complete history there).
+        ever_del=np.zeros(n, bool),
     )
 
 
-def _stats_from_series(series: np.ndarray, arr: np.ndarray,
-                       rounds: int) -> NetStats:
+def _init_state(scn: VecScenario) -> Dict[str, np.ndarray]:
+    return init_topo_state(scn, scn.m_total)
+
+
+def stats_from_series(series: np.ndarray, first_receipts: int) -> NetStats:
     tot = series.sum(axis=0)
     deliveries, sent_app, sent_ping, flush_sent, pongs, _ = (
         int(x) for x in tot)
     sent = sent_app + sent_ping + flush_sent
-    # arr only records the EARLIEST arrival per (q, m); later copies are
-    # duplicates by construction (the vec engine never drops in-flight
-    # traffic — fidelity note in DESIGN.md §2.4).
-    first_receipts = int((arr < rounds).sum())
     return NetStats(
         sent_messages=sent,
         sent_control=sent_ping + pongs,
@@ -118,74 +176,86 @@ def _stats_from_series(series: np.ndarray, arr: np.ndarray,
 
 
 # --------------------------------------------------------------------- #
-# NumPy backend
+# NumPy backend — one span of rounds over a slot-space schedule
 # --------------------------------------------------------------------- #
-def _run_np(scn: VecScenario, snapshot_round: Optional[int]):
-    st = _init_state(scn)
+def np_span(st: Dict[str, np.ndarray], sched: SlotSchedule, t0: int, t1: int,
+            series: np.ndarray, *, pc: bool, always_gate: bool,
+            pong_delay: int, gating: bool = True) -> None:
+    """Advance ``st`` through rounds ``[t0, t1)`` in place, writing
+    per-round stats into ``series[t0:t1]``.
+
+    ``gating=False`` asserts the *whole scenario* schedules no link
+    additions — the only source of gates — letting the span skip the
+    pong/flush phases entirely (they are half the dense work per round
+    on churn-free sustained traffic).  It must NOT be derived from a
+    windowed segment's schedule: a segment without additions can still
+    carry gates opened by an earlier segment."""
     arr, delivered = st["arr"], st["delivered"]
     adj, delay, active = st["adj"], st["delay"], st["active"]
     gate, flush, ping = st["gate"], st["flush"], st["ping"]
-    crashed = st["crashed"]
-    n, k, m_app = scn.n, scn.k, scn.m_app
-    pc = scn.mode == "pc"
-    series = np.zeros((scn.rounds, len(SERIES_FIELDS)), np.int64)
-    snapshot = None
+    crashed, ever_del = st["crashed"], st["ever_del"]
+    n, k = adj.shape
+    app_idx = np.nonzero(sched.is_app)[0]
+    is_app = sched.is_app
 
-    for t in range(scn.rounds):
+    for t in range(t0, t1):
+        row = series[t]
         # -- 1. removals ------------------------------------------------ #
-        for e in np.nonzero(scn.rm_round == t)[0]:
-            p, kk = int(scn.rm_p[e]), int(scn.rm_k[e])
+        for e in np.nonzero(sched.rm_round == t)[0]:
+            p, kk = int(sched.rm_p[e]), int(sched.rm_k[e])
             active[p, kk] = False
             gate[p, kk], flush[p, kk], ping[p, kk] = -1, INF, -1
         # -- 2. additions (+ Algorithm 2 gating decision) ---------------- #
-        adds = np.nonzero(scn.add_round == t)[0]
+        adds = np.nonzero(sched.add_round == t)[0]
         for e in adds:
-            p, kk = int(scn.add_p[e]), int(scn.add_k[e])
-            adj[p, kk] = int(scn.add_q[e])
-            delay[p, kk] = int(scn.add_delay[e])
+            p, kk = int(sched.add_p[e]), int(sched.add_k[e])
+            adj[p, kk] = int(sched.add_q[e])
+            delay[p, kk] = int(sched.add_delay[e])
             active[p, kk] = True
             gate[p, kk], flush[p, kk], ping[p, kk] = -1, INF, -1
         if pc:
             for e in adds:
-                p, kk = int(scn.add_p[e]), int(scn.add_k[e])
+                p, kk = int(sched.add_p[e]), int(sched.add_k[e])
                 if crashed[p]:
                     continue
                 other_safe = any(active[p, j] and gate[p, j] < 0
                                  for j in range(k) if j != kk)
-                has_del = bool((delivered[p, :m_app] >= 0).any())
-                if other_safe and (scn.always_gate or has_del):
-                    slot = m_app + int(e)
+                has_del = bool(ever_del[p]) or bool(
+                    (delivered[p, app_idx] >= 0).any())
+                if other_safe and (always_gate or has_del):
+                    slot = int(sched.add_slot[e])
                     gate[p, kk], ping[p, kk] = t, slot
                     delivered[p, slot] = t   # own ping floods from phase 8
         # -- 3. crashes (silent; links die with the process) ------------- #
-        for e in np.nonzero(scn.crash_round == t)[0]:
-            crashed[int(scn.crash_pid[e])] = True
+        for e in np.nonzero(sched.cr_round == t)[0]:
+            crashed[int(sched.cr_pid[e])] = True
         # -- 4. broadcasts ----------------------------------------------- #
-        for i in np.nonzero(scn.bcast_round == t)[0]:
-            o = int(scn.bcast_origin[i])
-            if not crashed[o] and delivered[o, i] < 0:
-                delivered[o, i] = t
+        for i in np.nonzero(sched.bc_round == t)[0]:
+            o, s = int(sched.bc_origin[i]), int(sched.bc_slot[i])
+            if not crashed[o] and delivered[o, s] < 0:
+                delivered[o, s] = t
         # -- 5. arrivals -> deliveries ------------------------------------ #
         newly = (arr == t) & (delivered < 0) & ~crashed[:, None]
         delivered[newly] = t
         # -- 6. pong detection -------------------------------------------- #
-        if pc:
+        if pc and gating:
             q_ = np.clip(adj, 0, n - 1)
             s_ = np.clip(ping, 0, delivered.shape[1] - 1)
             fire = ((gate >= 0) & (flush == INF) & (ping >= 0)
                     & (delivered[q_, s_] >= 0) & ~crashed[:, None])
-            flush[fire] = t + scn.pong_delay
-            series[t, 4] = int(fire.sum())
+            flush[fire] = t + pong_delay
+            row[4] = int(fire.sum())
         # -- 7. flush buffered app messages over now-safe links ----------- #
-        if pc:
+        if pc and gating:
             flushing = np.nonzero((flush == t) & active & ~crashed[:, None])
             for p, kk in zip(*flushing):
                 p, kk = int(p), int(kk)
                 q, g, d = int(adj[p, kk]), int(gate[p, kk]), int(delay[p, kk])
-                win = (delivered[p, :m_app] >= g) & (delivered[p, :m_app] < t)
-                series[t, 3] += int(win.sum())
-                arr[q, :m_app] = np.minimum(
-                    arr[q, :m_app],
+                dp = delivered[p, app_idx]
+                win = (dp >= g) & (dp < t)
+                row[3] += int(win.sum())
+                arr[q, app_idx] = np.minimum(
+                    arr[q, app_idx],
                     np.where(win, np.int32(t + d), INF))
             cleared = flush == t
             gate[cleared], ping[cleared], flush[cleared] = -1, -1, INF
@@ -194,12 +264,12 @@ def _run_np(scn: VecScenario, snapshot_round: Optional[int]):
         # round generate sends, so scatter-min over their flat indices
         # instead of materializing dense (N, M) value planes per slot.
         new_del = delivered == t
-        napp = new_del[:, :m_app].sum(axis=1)
-        nping = new_del[:, m_app:].sum(axis=1)
-        series[t, 0] = int(napp.sum())
+        napp = (new_del & is_app[None, :]).sum(axis=1)
+        nping = (new_del & ~is_app[None, :]).sum(axis=1)
+        row[0] = int(napp.sum())
         rows_idx, cols_idx = np.nonzero(new_del)
         arr_flat = arr.reshape(-1)
-        m_total = arr.shape[1]
+        width = arr.shape[1]
         elig_cnt = np.zeros(n, np.int64)
         for kk in range(k):
             ok = (active[:, kk] & (gate[:, kk] < 0) & (adj[:, kk] >= 0)
@@ -211,41 +281,67 @@ def _run_np(scn: VecScenario, snapshot_round: Optional[int]):
             if not sel.any():
                 continue
             r, c = rows_idx[sel], cols_idx[sel]
-            lin = adj[r, kk].astype(np.int64) * m_total + c
+            lin = adj[r, kk].astype(np.int64) * width + c
             np.minimum.at(arr_flat, lin,
                           (t + delay[r, kk]).astype(np.int32))
-        series[t, 1] = int((napp * elig_cnt).sum())
-        series[t, 2] = int((nping * elig_cnt).sum())
-        series[t, 5] = int((gate >= 0).sum())
-        if snapshot_round is not None and t == snapshot_round:
-            snapshot = {key: v.copy() for key, v in st.items()}
+        row[1] = int((napp * elig_cnt).sum())
+        row[2] = int((nping * elig_cnt).sum())
+        row[5] = int((gate >= 0).sum())
 
+
+def _run_np(scn: VecScenario, snapshot_round: Optional[int]):
+    st = _init_state(scn)
+    sched = full_schedule(scn)
+    series = np.zeros((scn.rounds, len(SERIES_FIELDS)), np.int64)
+    kw = dict(pc=scn.mode == "pc", always_gate=scn.always_gate,
+              pong_delay=scn.pong_delay, gating=scn.n_adds > 0)
+    snapshot = None
+    if snapshot_round is None:
+        np_span(st, sched, 0, scn.rounds, series, **kw)
+    else:
+        np_span(st, sched, 0, snapshot_round + 1, series, **kw)
+        snapshot = {key: v.copy() for key, v in st.items()}
+        np_span(st, sched, snapshot_round + 1, scn.rounds, series, **kw)
     return st, series, snapshot
 
 
 # --------------------------------------------------------------------- #
-# JAX backend — one jitted lax.scan over rounds
+# JAX backend — jitted lax.scan spans over slot-space schedules
 # --------------------------------------------------------------------- #
-def _run_jax(scn: VecScenario, snapshot_round: Optional[int]):
+_STATE_KEYS = ("arr", "delivered", "adj", "delay", "active", "gate",
+               "flush", "ping", "crashed", "ever_del")
+
+
+def state_to_device(st: Dict[str, np.ndarray]):
+    import jax.numpy as jnp
+    return tuple(jnp.asarray(st[key]) for key in _STATE_KEYS)
+
+
+def state_to_host(state) -> Dict[str, np.ndarray]:
+    # np.array (not asarray): views of jax CPU buffers are read-only and
+    # the windowed driver mutates the host state between segments.
+    return {key: np.array(v) for key, v in zip(_STATE_KEYS, state)}
+
+
+def sched_to_device(sched: SlotSchedule) -> Dict[str, object]:
+    import jax.numpy as jnp
+    return {f.name: jnp.asarray(getattr(sched, f.name))
+            for f in sched.__dataclass_fields__.values()}
+
+
+@functools.lru_cache(maxsize=None)
+def jax_span_runner(k: int, pc: bool, always_gate: bool, pong_delay: int,
+                    gating: bool = True):
+    """Jitted ``(state, sched, ts) -> (state, stats)`` span runner.  One
+    compilation per distinct (state, sched, ts) shape signature; negative
+    rounds in ``ts`` are padding and leave the state untouched.
+    ``gating=False`` (scenario-wide no-additions promise, see
+    :func:`np_span`) elides the pong/flush phases from the trace."""
     import jax
     import jax.numpy as jnp
 
-    m_app = scn.m_app
-    bc_round = jnp.asarray(scn.bcast_round)
-    bc_origin = jnp.asarray(scn.bcast_origin)
-    add_round = jnp.asarray(scn.add_round)
-    add_p = jnp.asarray(scn.add_p)
-    add_k = jnp.asarray(scn.add_k)
-    add_q = jnp.asarray(scn.add_q)
-    add_delay = jnp.asarray(scn.add_delay)
-    add_slot = jnp.asarray(m_app + np.arange(scn.n_adds, dtype=np.int32))
-    rm_round = jnp.asarray(scn.rm_round)
-    rm_p = jnp.asarray(scn.rm_p)
-    rm_k = jnp.asarray(scn.rm_k)
-    cr_round = jnp.asarray(scn.crash_round)
-    cr_pid = jnp.asarray(scn.crash_pid)
-    K, pc = scn.k, scn.mode == "pc"
-    pong_delay = scn.pong_delay
+    from jax.experimental import enable_x64
+
     inf = jnp.int32(INF)
 
     def scatter_min(arr, rows, vals, valid):
@@ -253,28 +349,34 @@ def _run_jax(scn: VecScenario, snapshot_round: Optional[int]):
         rows = jnp.where(valid, rows, n)          # out of bounds -> dropped
         return arr.at[rows, :].min(vals, mode="drop")
 
-    def step(state, t):
+    def real_step(sched, state, t):
         (arr, delivered, adj, delay, active, gate, flush, ping,
-         crashed) = state
+         crashed, ever_del) = state
         n = arr.shape[0]
-        t = t.astype(jnp.int32)
-        stats = jnp.zeros(len(SERIES_FIELDS), jnp.int32)
+        is_app = sched["is_app"]
+        # int64: per-round send counts reach rate·N·k, which wraps int32
+        # at the sustained scales this engine exists for (the numpy twin
+        # accumulates in int64 too); the runner executes under enable_x64
+        # so the dtype is honored.
+        stats = jnp.zeros(len(SERIES_FIELDS), jnp.int64)
 
         # -- 1. removals -------------------------------------------------- #
-        if rm_round.shape[0]:
-            sel = rm_round == t
-            p_, k_ = jnp.where(sel, rm_p, n), rm_k
+        if sched["rm_round"].shape[0]:
+            sel = sched["rm_round"] == t
+            p_, k_ = jnp.where(sel, sched["rm_p"], n), sched["rm_k"]
             active = active.at[p_, k_].set(False, mode="drop")
             gate = gate.at[p_, k_].set(-1, mode="drop")
             flush = flush.at[p_, k_].set(inf, mode="drop")
             ping = ping.at[p_, k_].set(-1, mode="drop")
 
         # -- 2. additions -------------------------------------------------- #
-        if add_round.shape[0]:
-            sel = add_round == t
+        if sched["add_round"].shape[0]:
+            sel = sched["add_round"] == t
+            add_p, add_k = sched["add_p"], sched["add_k"]
+            add_slot = sched["add_slot"]
             p_ = jnp.where(sel, add_p, n)
-            adj = adj.at[p_, add_k].set(add_q, mode="drop")
-            delay = delay.at[p_, add_k].set(add_delay, mode="drop")
+            adj = adj.at[p_, add_k].set(sched["add_q"], mode="drop")
+            delay = delay.at[p_, add_k].set(sched["add_delay"], mode="drop")
             active = active.at[p_, add_k].set(True, mode="drop")
             if pc:
                 safe_links = active & (gate < 0)
@@ -283,10 +385,11 @@ def _run_jax(scn: VecScenario, snapshot_round: Optional[int]):
                 own_slot_safe = safe_links[pcl, add_k]
                 other_safe = (safe_cnt[pcl]
                               - own_slot_safe.astype(jnp.int32)) >= 1
-                if scn.always_gate:
+                if always_gate:
                     want = other_safe
                 else:
-                    has_del = (delivered[:, :m_app] >= 0).any(axis=1)
+                    has_del = ever_del | ((delivered >= 0)
+                                          & is_app[None, :]).any(axis=1)
                     want = other_safe & has_del[pcl]
                 want = want & ~crashed[pcl]
                 gsel = sel & want
@@ -302,47 +405,44 @@ def _run_jax(scn: VecScenario, snapshot_round: Optional[int]):
                 ping = ping.at[pc_, add_k].set(-1, mode="drop")
 
         # -- 3. crashes ----------------------------------------------------- #
-        if cr_round.shape[0]:
-            sel = cr_round == t
-            p_ = jnp.where(sel, cr_pid, n)
+        if sched["cr_round"].shape[0]:
+            sel = sched["cr_round"] == t
+            p_ = jnp.where(sel, sched["cr_pid"], n)
             crashed = crashed.at[p_].set(True, mode="drop")
 
         # -- 4. broadcasts -------------------------------------------------- #
-        if bc_round.shape[0]:
-            sel = (bc_round == t) & ~crashed[jnp.clip(bc_origin, 0, n - 1)]
-            o_ = jnp.where(sel, bc_origin, n)
-            slots = jnp.arange(m_app, dtype=jnp.int32)
-            delivered = delivered.at[o_, slots].max(t, mode="drop")
+        if sched["bc_round"].shape[0]:
+            origin = sched["bc_origin"]
+            sel = ((sched["bc_round"] == t)
+                   & ~crashed[jnp.clip(origin, 0, n - 1)])
+            o_ = jnp.where(sel, origin, n)
+            delivered = delivered.at[o_, sched["bc_slot"]].max(t, mode="drop")
 
         # -- 5. arrivals -> deliveries -------------------------------------- #
         newly = (arr == t) & (delivered < 0) & ~crashed[:, None]
         delivered = jnp.where(newly, t, delivered)
 
         # -- 6. pong detection ---------------------------------------------- #
-        if pc:
+        if pc and gating:
             q_ = jnp.clip(adj, 0, n - 1)
             s_ = jnp.clip(ping, 0, delivered.shape[1] - 1)
             tgt_del = delivered[q_, s_]
             fire = ((gate >= 0) & (flush == inf) & (ping >= 0)
                     & (tgt_del >= 0) & ~crashed[:, None])
             flush = jnp.where(fire, t + pong_delay, flush)
-            stats = stats.at[4].set(fire.sum().astype(jnp.int32))
+            stats = stats.at[4].set(fire.sum().astype(jnp.int64))
 
         # -- 7. flush buffered app messages over now-safe links ------------- #
-        if pc:
-            d_app = delivered[:, :m_app]
-            flush_sent = jnp.int32(0)
-            for kk in range(K):
+        if pc and gating:
+            flush_sent = jnp.int64(0)
+            for kk in range(k):
                 do = (flush[:, kk] == t) & active[:, kk] & ~crashed
-                win = ((d_app >= gate[:, kk][:, None])
-                       & (d_app < t) & do[:, None])
-                flush_sent += win.sum().astype(jnp.int32)
+                win = ((delivered >= gate[:, kk][:, None])
+                       & (delivered < t) & do[:, None] & is_app[None, :])
+                flush_sent += win.sum().astype(jnp.int64)
                 vals = jnp.where(
                     win, (t + delay[:, kk])[:, None].astype(jnp.int32), inf)
-                pad = jnp.full((n, delivered.shape[1] - m_app), inf,
-                               jnp.int32)
-                arr = scatter_min(arr, adj[:, kk],
-                                  jnp.concatenate([vals, pad], axis=1), do)
+                arr = scatter_min(arr, adj[:, kk], vals, do)
             stats = stats.at[3].set(flush_sent)
             cleared = flush == t
             gate = jnp.where(cleared, -1, gate)
@@ -351,78 +451,117 @@ def _run_jax(scn: VecScenario, snapshot_round: Optional[int]):
 
         # -- 8. forward this round's deliveries over safe links ------------- #
         new_del = delivered == t
-        napp = new_del[:, :m_app].sum(axis=1)
-        nping = new_del[:, m_app:].sum(axis=1)
+        napp = (new_del & is_app[None, :]).sum(axis=1)
+        nping = (new_del & ~is_app[None, :]).sum(axis=1)
         has_new = new_del.any(axis=1) & ~crashed
-        elig_cnt = jnp.zeros(n, jnp.int32)
-        for kk in range(K):
+        elig_cnt = jnp.zeros(n, jnp.int64)
+        for kk in range(k):
             ok = (active[:, kk] & (gate[:, kk] < 0) & (adj[:, kk] >= 0)
                   & ~crashed)
-            elig_cnt += ok.astype(jnp.int32)
+            elig_cnt += ok.astype(jnp.int64)
             fwd = ok & has_new
             vals = jnp.where(new_del & fwd[:, None],
                              (t + delay[:, kk])[:, None].astype(jnp.int32),
                              inf)
             arr = scatter_min(arr, adj[:, kk], vals, fwd)
-        stats = stats.at[0].set(napp.sum().astype(jnp.int32))
-        stats = stats.at[1].set((napp * elig_cnt).sum().astype(jnp.int32))
-        stats = stats.at[2].set((nping * elig_cnt).sum().astype(jnp.int32))
-        stats = stats.at[5].set((gate >= 0).sum().astype(jnp.int32))
+        stats = stats.at[0].set(napp.sum().astype(jnp.int64))
+        stats = stats.at[1].set((napp.astype(jnp.int64) * elig_cnt).sum())
+        stats = stats.at[2].set((nping.astype(jnp.int64) * elig_cnt).sum())
+        stats = stats.at[5].set((gate >= 0).sum().astype(jnp.int64))
 
         return (arr, delivered, adj, delay, active, gate, flush, ping,
-                crashed), stats
+                crashed, ever_del), stats
 
-    def to_device(st):
-        return (jnp.asarray(st["arr"]), jnp.asarray(st["delivered"]),
-                jnp.asarray(st["adj"]), jnp.asarray(st["delay"]),
-                jnp.asarray(st["active"]), jnp.asarray(st["gate"]),
-                jnp.asarray(st["flush"]), jnp.asarray(st["ping"]),
-                jnp.asarray(st["crashed"]))
-
-    def to_host(state):
-        keys = ("arr", "delivered", "adj", "delay", "active", "gate",
-                "flush", "ping", "crashed")
-        return {key: np.asarray(v) for key, v in zip(keys, state)}
+    def step(sched, state, t):
+        t = t.astype(jnp.int32)
+        return jax.lax.cond(
+            t >= 0,
+            lambda s: real_step(sched, s, t),
+            lambda s: (s, jnp.zeros(len(SERIES_FIELDS), jnp.int64)),
+            state)
 
     @jax.jit
-    def run(state, rounds_arr):
-        return jax.lax.scan(step, state, rounds_arr)
+    def _run(state, sched, ts):
+        return jax.lax.scan(lambda c, t: step(sched, c, t), state, ts)
 
-    state0 = to_device(_init_state(scn))
+    def run(state, sched, ts):
+        # x64 so the int64 stats accumulators are honored; every array in
+        # the carry/schedule carries an explicit dtype, so nothing else
+        # widens (tests assert byte-parity with the int64 numpy series)
+        with enable_x64():
+            return _run(state, sched, ts)
+
+    return run
+
+
+def _run_jax(scn: VecScenario, snapshot_round: Optional[int]):
+    import jax.numpy as jnp
+
+    run = jax_span_runner(scn.k, scn.mode == "pc", scn.always_gate,
+                          scn.pong_delay, gating=scn.n_adds > 0)
+    sched = sched_to_device(full_schedule(scn))
+    state0 = state_to_device(_init_state(scn))
     if snapshot_round is None:
-        final, series = run(state0, jnp.arange(scn.rounds, dtype=jnp.int32))
-        return to_host(final), np.asarray(series, np.int64), None
+        final, series = run(state0, sched,
+                            jnp.arange(scn.rounds, dtype=jnp.int32))
+        return state_to_host(final), np.asarray(series, np.int64), None
     # split the scan at the snapshot and resume from it — no re-simulation
     snap_state, series_a = run(
-        state0, jnp.arange(snapshot_round + 1, dtype=jnp.int32))
-    snapshot = to_host(snap_state)
+        state0, sched, jnp.arange(snapshot_round + 1, dtype=jnp.int32))
+    snapshot = state_to_host(snap_state)
     final, series_b = run(
-        snap_state, jnp.arange(snapshot_round + 1, scn.rounds,
-                               dtype=jnp.int32))
+        snap_state, sched, jnp.arange(snapshot_round + 1, scn.rounds,
+                                      dtype=jnp.int32))
     series = np.concatenate([np.asarray(series_a, np.int64),
                              np.asarray(series_b, np.int64)])
-    return to_host(final), series, snapshot
+    return state_to_host(final), series, snapshot
 
 
-def run_vec(scn: VecScenario, backend: str = "auto",
-            snapshot_round: Optional[int] = None) -> VecRunResult:
-    """Execute ``scn`` in lockstep rounds; returns delivery matrix, final
-    state, ``NetStats`` (same schema as the exact simulator) and a
-    per-round stats series.  ``snapshot_round`` additionally captures the
-    full state right after that round (for mid-churn topology metrics)."""
+def resolve_backend(backend: str) -> str:
     if backend == "auto":
         try:
             import jax  # noqa: F401
-            backend = "jax"
+            return "jax"
         except ImportError:
-            backend = "numpy"
+            return "numpy"
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return backend
+
+
+def run_vec(scn: VecScenario, backend: str = "auto",
+            snapshot_round: Optional[int] = None,
+            window: Optional[int] = None,
+            collect: Optional[str] = None, **window_kw):
+    """Execute ``scn`` in lockstep rounds; returns delivery matrix, final
+    state, ``NetStats`` (same schema as the exact simulator) and a
+    per-round stats series.  ``snapshot_round`` additionally captures the
+    full state right after that round (for mid-churn topology metrics).
+
+    ``window`` switches to the streaming windowed engine
+    (``vecsim.stream.run_vec_windowed``): the message axis is processed
+    through a fixed buffer of ``window`` live columns with O(N·window)
+    memory, returning a :class:`~repro.core.vecsim.stream.WindowedRunResult`
+    instead.  ``collect`` and the extra keyword arguments (``horizon``,
+    ``seg_len``) apply only to windowed runs."""
+    if window is not None:
+        from .stream import run_vec_windowed
+        return run_vec_windowed(scn, window, backend=backend,
+                                snapshot_round=snapshot_round,
+                                collect=collect if collect is not None
+                                else "auto", **window_kw)
+    if window_kw or collect is not None:
+        extra = sorted(window_kw) + (["collect"] if collect is not None
+                                     else [])
+        raise TypeError(f"monolithic run_vec got windowed-only arguments "
+                        f"{extra}")
+    backend = resolve_backend(backend)
     if backend == "jax":
         st, series, snapshot = _run_jax(scn, snapshot_round)
-    elif backend == "numpy":
-        st, series, snapshot = _run_np(scn, snapshot_round)
     else:
-        raise ValueError(f"unknown backend {backend!r}")
-    stats = _stats_from_series(series, st["arr"], scn.rounds)
+        st, series, snapshot = _run_np(scn, snapshot_round)
+    first_receipts = int((st["arr"] < scn.rounds).sum())
+    stats = stats_from_series(series, first_receipts)
     return VecRunResult(scenario=scn, delivered=st["delivered"], state=st,
                         stats=stats, series=series, snapshot=snapshot,
                         backend=backend)

@@ -1,0 +1,401 @@
+"""Streaming windowed execution: sustained traffic in O(N·W) memory.
+
+The monolithic engine (``sim.run_vec``) materializes dense
+``(N, M_total)`` arrival/delivery matrices, so memory — not the protocol
+— caps how much traffic a run can carry: N=50k works for a handful of
+broadcasts, never sustained load.  This module processes the message
+axis through a fixed buffer of ``W`` live *columns* instead:
+
+  * a message (app broadcast or link-addition ping) is **activated** —
+    assigned a free buffer column — just before its scheduled round;
+  * rounds advance segment-by-segment through the *same* slot-space span
+    runners as the monolithic engine (``sim.np_span`` /
+    ``sim.jax_span_runner``), so the per-round semantics are literally
+    shared code;
+  * between segments, columns are **retired**: their per-message results
+    fold into online aggregates and the column is recycled.
+
+Retirement is exact — a column leaves the buffer only when nothing in
+the monolithic run could still touch it:
+
+  1. every non-crashed process has delivered it, AND no pending gated
+     link could still flush it (some process delivered it at or after
+     the link's gate round), for app columns;
+  2. ping columns additionally stay while any live ``ping[p, k]`` slot
+     references them (pong detection reads their delivery row);
+  3. columns that can never become live (their broadcast was skipped by
+     a crashed origin, or their link addition did not gate) retire as
+     soon as their round has passed.
+
+Under those rules a windowed run's delivered matrix, per-round stats
+series and ``NetStats`` are byte-identical to the monolithic run's on
+any scenario small enough to run both — the differential fuzz suite
+asserts exactly that.  An optional ``horizon`` force-retires columns
+older than ``horizon`` rounds; that bounds buffer residency for
+pathological scenarios at the (documented, flagged in ``expired``) cost
+of dropping whatever late activity the column still had.
+
+Memory is O(N·W) regardless of how many messages the schedule carries,
+which is what lets one host sustain millions of broadcasts at N ≥ 10k
+(``benchmarks/bench_throughput.py``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..types import NetStats
+from .scenario import INF, VecScenario
+from .sim import (SERIES_FIELDS, SlotSchedule, init_topo_state, np_span,
+                  resolve_backend, stats_from_series)
+
+__all__ = ["WindowedRunResult", "WindowOverflowError", "run_vec_windowed"]
+
+
+class WindowOverflowError(RuntimeError):
+    """The live-column buffer filled up and nothing could retire."""
+
+
+@dataclass
+class WindowedRunResult:
+    """Result of a streaming windowed run.
+
+    ``delivered`` is the full ``(N, M_total)`` matrix only when the run
+    was small enough to collect it (``collect="full"``); sustained runs
+    keep per-message aggregates instead.  ``stats``/``series`` match the
+    monolithic run byte-for-byte whenever no column was horizon-expired.
+    """
+
+    scenario: VecScenario
+    window: int
+    backend: str
+    stats: NetStats
+    series: np.ndarray              # (rounds, len(SERIES_FIELDS)) int64
+    delivered: Optional[np.ndarray]  # (N, M_total) or None (aggregate mode)
+    deliv_count: np.ndarray         # (M_total,) deliveries per message
+    bcast_done: np.ndarray          # (m_app,) broadcast actually happened
+    expired: np.ndarray             # (M_total,) retired by horizon expiry
+    state: Dict[str, np.ndarray]    # final topology state + live buffer
+    snapshot: Optional[Dict[str, np.ndarray]]
+    peak_live: int                  # max live columns ever resident
+    lat_sum: int                    # sum of (deliver - broadcast) rounds
+    lat_cnt: int                    # delivered (process, app msg) pairs
+
+    @property
+    def m_app(self) -> int:
+        return self.scenario.m_app
+
+    @property
+    def delivered_app(self) -> Optional[np.ndarray]:
+        return (None if self.delivered is None
+                else self.delivered[:, : self.m_app])
+
+    def delivered_frac(self) -> float:
+        """Fraction of (correct process, app message) pairs delivered.
+        Exact (same formula as the monolithic result) when the full
+        matrix was collected; aggregate mode reports deliveries over
+        *all* ``N × m_app`` pairs — the per-message counts include
+        processes that crashed after the message retired, so dividing by
+        the finally-alive population could exceed 1; on crash-free runs
+        the two formulas agree exactly."""
+        if self.delivered is not None:
+            ok = ~self.state["crashed"]
+            d = self.delivered[ok][:, : self.m_app]
+            return float((d >= 0).mean()) if d.size else 1.0
+        denom = self.scenario.n * self.m_app
+        if not denom:
+            return 1.0
+        return float(self.deliv_count[: self.m_app].sum()) / denom
+
+    def mean_latency(self) -> float:
+        """Mean rounds from broadcast to delivery over delivered pairs."""
+        return self.lat_sum / self.lat_cnt if self.lat_cnt else float("nan")
+
+
+def _pad(a: np.ndarray, cap: int, fill) -> np.ndarray:
+    if len(a) == cap:
+        return a
+    out = np.full(cap, fill, a.dtype)
+    out[: len(a)] = a
+    return out
+
+
+def _window_caps(rounds_arr: np.ndarray, total_rounds: int,
+                 seg_len: int) -> int:
+    """Max number of events falling in any ``seg_len``-round span."""
+    if not len(rounds_arr):
+        return 0
+    counts = np.bincount(np.clip(rounds_arr, 0, total_rounds),
+                         minlength=total_rounds + 1)
+    cum = np.concatenate([[0], np.cumsum(counts)])
+    hi = np.minimum(np.arange(total_rounds) + seg_len, total_rounds + 1)
+    return int((cum[hi] - cum[: total_rounds]).max())
+
+
+def run_vec_windowed(scn: VecScenario, window: int, backend: str = "auto",
+                     horizon: Optional[int] = None, seg_len: int = 32,
+                     snapshot_round: Optional[int] = None,
+                     collect: str = "auto") -> WindowedRunResult:
+    """Run ``scn`` through a ``window``-column streaming buffer.
+
+    ``horizon`` — force-retire columns older than this many rounds
+    (default: never; exactness preserved).  ``seg_len`` — rounds per
+    jitted segment between retirement sweeps (also bounds how long a
+    finished column lingers before its slot recycles).  ``collect`` —
+    ``"full"`` keeps the (N, M_total) delivered matrix, ``"aggregate"``
+    keeps only per-message counters, ``"auto"`` picks by size."""
+    backend = resolve_backend(backend)
+    w = int(window)
+    if w < 1:
+        raise ValueError("window must be >= 1")
+    seg_len = max(1, int(seg_len))
+    n, m_app, m_total = scn.n, scn.m_app, scn.m_total
+    rounds = scn.rounds
+    pc = scn.mode == "pc"
+    # gates only ever open at link additions, so a scenario with none can
+    # skip the pong/flush phases in every segment (see sim.np_span)
+    gating = scn.n_adds > 0
+    if collect == "auto":
+        collect = "full" if n * max(m_total, 1) <= (1 << 26) else "aggregate"
+    if collect not in ("full", "aggregate"):
+        raise ValueError(f"unknown collect mode {collect!r}")
+
+    # Merged activation stream: broadcasts then additions, round-sorted.
+    ev_round = np.concatenate([scn.bcast_round, scn.add_round])
+    ev_kind = np.concatenate([np.zeros(m_app, np.int8),
+                              np.ones(scn.n_adds, np.int8)])
+    ev_idx = np.concatenate([np.arange(m_app, dtype=np.int64),
+                             np.arange(scn.n_adds, dtype=np.int64)])
+    order = np.lexsort((ev_idx, ev_kind, ev_round))
+    ev_round, ev_kind, ev_idx = ev_round[order], ev_kind[order], ev_idx[order]
+    n_ev = len(ev_round)
+
+    st = init_topo_state(scn, w)
+    slot_msg = np.full(w, -1, np.int64)      # global message id, -1 = free
+    slot_birth = np.zeros(w, np.int32)       # activation round
+    slot_app = np.zeros(w, bool)
+    bc_live_slot = np.full(m_app, -1, np.int32)
+    add_live_slot = np.full(scn.n_adds, -1, np.int32)
+
+    series = np.zeros((rounds, len(SERIES_FIELDS)), np.int64)
+    delivered_full = (np.full((n, m_total), -1, np.int32)
+                      if collect == "full" else None)
+    deliv_count = np.zeros(m_total, np.int64)
+    bcast_done = np.zeros(m_app, bool)
+    expired = np.zeros(m_total, bool)
+    first_receipts = 0
+    lat_sum = 0
+    lat_cnt = 0
+    peak_live = 0
+    snapshot: Optional[Dict[str, np.ndarray]] = None
+
+    if backend == "jax":
+        import jax.numpy as jnp
+
+        from .sim import (jax_span_runner, sched_to_device, state_to_device,
+                          state_to_host)
+        cap_bc = _window_caps(scn.bcast_round, rounds, seg_len)
+        cap_add = _window_caps(scn.add_round, rounds, seg_len)
+        cap_rm = _window_caps(scn.rm_round, rounds, seg_len)
+        cap_cr = _window_caps(scn.crash_round, rounds, seg_len)
+        runner = jax_span_runner(scn.k, pc, scn.always_gate, scn.pong_delay,
+                                 gating=gating)
+
+    # Round-sorted copies of the schedules so each segment slices with
+    # two binary searches instead of an O(M_total) mask (broadcasts are
+    # sorted by construction; churn/crash arrays are sorted here once).
+    # Stable sort keeps same-round relative order, which the round body
+    # is insensitive to anyway (same-round events commute).
+    add_ord = np.argsort(scn.add_round, kind="stable")
+    add_round_s = scn.add_round[add_ord]
+    add_p_s, add_k_s = scn.add_p[add_ord], scn.add_k[add_ord]
+    add_q_s, add_delay_s = scn.add_q[add_ord], scn.add_delay[add_ord]
+    rm_ord = np.argsort(scn.rm_round, kind="stable")
+    rm_round_s = scn.rm_round[rm_ord]
+    rm_p_s, rm_k_s = scn.rm_p[rm_ord], scn.rm_k[rm_ord]
+    cr_ord = np.argsort(scn.crash_round, kind="stable")
+    cr_round_s = scn.crash_round[cr_ord]
+    cr_pid_s = scn.crash_pid[cr_ord]
+
+    def seg_schedule(lo: int, hi: int) -> SlotSchedule:
+        b0, b1 = np.searchsorted(scn.bcast_round, [lo, hi])
+        a0, a1 = np.searchsorted(add_round_s, [lo, hi])
+        r0, r1 = np.searchsorted(rm_round_s, [lo, hi])
+        c0, c1 = np.searchsorted(cr_round_s, [lo, hi])
+        return SlotSchedule(
+            is_app=slot_app,
+            bc_round=scn.bcast_round[b0:b1],
+            bc_origin=scn.bcast_origin[b0:b1],
+            bc_slot=bc_live_slot[b0:b1],
+            add_round=add_round_s[a0:a1],
+            add_p=add_p_s[a0:a1], add_k=add_k_s[a0:a1],
+            add_q=add_q_s[a0:a1],
+            add_delay=add_delay_s[a0:a1],
+            add_slot=add_live_slot[add_ord[a0:a1]],
+            rm_round=rm_round_s[r0:r1],
+            rm_p=rm_p_s[r0:r1], rm_k=rm_k_s[r0:r1],
+            cr_round=cr_round_s[c0:c1],
+            cr_pid=cr_pid_s[c0:c1])
+
+    def run_segment(lo: int, hi: int) -> None:
+        sched = seg_schedule(lo, hi)
+        if backend == "numpy":
+            np_span(st, sched, lo, hi, series, pc=pc,
+                    always_gate=scn.always_gate, pong_delay=scn.pong_delay,
+                    gating=gating)
+            return
+        padded = SlotSchedule(
+            is_app=sched.is_app,
+            bc_round=_pad(sched.bc_round, cap_bc, -2),
+            bc_origin=_pad(sched.bc_origin, cap_bc, 0),
+            bc_slot=_pad(sched.bc_slot, cap_bc, 0),
+            add_round=_pad(sched.add_round, cap_add, -2),
+            add_p=_pad(sched.add_p, cap_add, 0),
+            add_k=_pad(sched.add_k, cap_add, 0),
+            add_q=_pad(sched.add_q, cap_add, 0),
+            add_delay=_pad(sched.add_delay, cap_add, 1),
+            add_slot=_pad(sched.add_slot, cap_add, 0),
+            rm_round=_pad(sched.rm_round, cap_rm, -2),
+            rm_p=_pad(sched.rm_p, cap_rm, 0),
+            rm_k=_pad(sched.rm_k, cap_rm, 0),
+            cr_round=_pad(sched.cr_round, cap_cr, -2),
+            cr_pid=_pad(sched.cr_pid, cap_cr, 0))
+        ts = np.full(seg_len, -3, np.int32)
+        ts[: hi - lo] = np.arange(lo, hi, dtype=np.int32)
+        # The full state round-trips host<->device each segment so the
+        # retirement sweep can run in numpy — a memcpy on the CPU
+        # backend this targets today.  On a real accelerator the copy
+        # of arr/delivered would dominate; moving the retirement
+        # reductions and column resets device-side (pulling only the
+        # (W,) retire mask) is the known next optimization.
+        state, stats = runner(state_to_device(st), sched_to_device(padded),
+                              jnp.asarray(ts))
+        st.update(state_to_host(state))
+        series[lo:hi] = np.asarray(stats, np.int64)[: hi - lo]
+
+    def record_and_free(cols: np.ndarray, by_expiry: np.ndarray) -> None:
+        """Fold retired columns into the aggregates and recycle them."""
+        nonlocal first_receipts, lat_sum, lat_cnt
+        if not len(cols):
+            return
+        ids = slot_msg[cols]
+        d = st["delivered"][:, cols]
+        deliv_count[ids] = (d >= 0).sum(axis=0)
+        expired[ids] |= by_expiry
+        first_receipts += int((st["arr"][:, cols] < rounds).sum())
+        app = slot_app[cols]
+        if app.any():
+            da = d[:, app]
+            got = da >= 0
+            st["ever_del"] |= got.any(axis=1)
+            lat_sum += int((da - slot_birth[cols][app][None, :])[got].sum())
+            lat_cnt += int(got.sum())
+            aidx = ids[app]
+            bcast_done[aidx] = (
+                st["delivered"][scn.bcast_origin[aidx], cols[app]] >= 0)
+        if delivered_full is not None:
+            delivered_full[:, ids] = d
+        st["arr"][:, cols] = INF
+        st["delivered"][:, cols] = -1
+        slot_msg[cols] = -1
+
+    def retire(t_now: int) -> int:
+        """Retire every column the monolithic run could no longer touch
+        (plus horizon expiries); returns how many were freed."""
+        live = slot_msg >= 0
+        if not live.any():
+            return 0
+        delivered, gate, ping = st["delivered"], st["gate"], st["ping"]
+        flush, crashed, active = st["flush"], st["crashed"], st["active"]
+        alive = ~crashed
+        full_del = (delivered[alive] >= 0).all(axis=0)
+        cnt = (delivered >= 0).sum(axis=0)
+        gated = (gate >= 0) & active & ~crashed[:, None]
+        if gated.any():
+            min_gate = np.where(gated, gate, INF).min(axis=1)
+            blocked = (((delivered >= 0)
+                        & (delivered >= min_gate[:, None])).any(axis=0)
+                       & slot_app)
+        else:
+            blocked = np.zeros(w, bool)
+        ref = np.zeros(w, bool)
+        pv = ping[(ping >= 0) & ~crashed[:, None]]
+        ref[pv] = True
+        dead = (cnt == 0) & (slot_birth < t_now)
+        done = live & ~ref & ((full_del & ~blocked) | dead)
+        by_exp = np.zeros(w, bool)
+        if horizon is not None:
+            by_exp = live & ~done & (t_now - slot_birth > horizon)
+            hung = by_exp & ref
+            if hung.any():
+                # a gate whose ping column is being force-expired can
+                # never resolve (its pong will never be observed): clear
+                # it so the link goes safe and the slot stops pinning
+                # the column — the buffered messages it would have
+                # flushed are dropped, which is the documented price of
+                # the horizon.
+                sel = (ping >= 0) & hung[np.clip(ping, 0, w - 1)]
+                gate[sel], flush[sel], ping[sel] = -1, INF, -1
+            done |= by_exp
+        cols = np.nonzero(done)[0]
+        record_and_free(cols, by_exp[cols])
+        return len(cols)
+
+    next_ev = 0
+    t = 0
+    while t < rounds:
+        t_end = min(t + seg_len, rounds)
+        if snapshot_round is not None and t <= snapshot_round:
+            t_end = min(t_end, snapshot_round + 1)
+        # Activate events due before t_end while free columns last.
+        if next_ev < n_ev and ev_round[next_ev] < t_end:
+            free = np.nonzero(slot_msg < 0)[0]
+            due = next_ev
+            while (due < n_ev and ev_round[due] < t_end
+                   and due - next_ev < len(free)):
+                col = int(free[due - next_ev])
+                kind, idx = int(ev_kind[due]), int(ev_idx[due])
+                slot_msg[col] = idx if kind == 0 else m_app + idx
+                slot_birth[col] = ev_round[due]
+                slot_app[col] = kind == 0
+                if kind == 0:
+                    bc_live_slot[idx] = col
+                else:
+                    add_live_slot[idx] = col
+                due += 1
+            next_ev = due
+            if next_ev < n_ev and ev_round[next_ev] < t_end:
+                # buffer full with events still due: stop the segment
+                # just before the first blocked event and retry after
+                # the next retirement sweep.
+                blocked_at = int(ev_round[next_ev])
+                if blocked_at <= t:
+                    raise WindowOverflowError(
+                        f"window={w} cannot hold the live messages at "
+                        f"round {t} ({int((slot_msg >= 0).sum())} live, "
+                        f"next event needs a free column); raise the "
+                        f"window or set a horizon")
+                t_end = blocked_at
+        peak_live = max(peak_live, int((slot_msg >= 0).sum()))
+        run_segment(t, t_end)
+        if snapshot_round is not None and t_end - 1 == snapshot_round:
+            snapshot = {key: v.copy() for key, v in st.items()}
+            snapshot["is_app"] = slot_app.copy()
+            snapshot["slot_msg"] = slot_msg.copy()
+        retire(t_end)
+        t = t_end
+
+    # Drain: whatever is still live keeps its end-of-run values, exactly
+    # like the monolithic matrices at t == rounds.
+    live_cols = np.nonzero(slot_msg >= 0)[0]
+    record_and_free(live_cols, np.zeros(len(live_cols), bool))
+
+    stats = stats_from_series(series, first_receipts)
+    return WindowedRunResult(
+        scenario=scn, window=w, backend=backend, stats=stats, series=series,
+        delivered=delivered_full, deliv_count=deliv_count,
+        bcast_done=bcast_done, expired=expired, state=st, snapshot=snapshot,
+        peak_live=peak_live, lat_sum=lat_sum, lat_cnt=lat_cnt)

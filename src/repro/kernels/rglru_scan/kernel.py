@@ -33,8 +33,11 @@ def rglru_scan_kernel(a_ref, b_ref, h0_ref, h_ref, state_ref):
 
     def body(t, h):
         h = a[t][None, :] * h + b[t][None, :]
-        pl.store(h_ref, (0, pl.dslice(t, 1), slice(None)),
-                 h.astype(h_ref.dtype))
+        # Index every axis with a slice: a bare int index reaches the
+        # swap discharge rule as a scalar without a .shape and crashes
+        # interpret mode, so the leading block axis uses pl.dslice too.
+        pl.store(h_ref, (pl.dslice(0, 1), pl.dslice(t, 1), slice(None)),
+                 h[:, None, :].astype(h_ref.dtype))
         return h
 
     h = jax.lax.fori_loop(0, a.shape[0], body, state_ref[...])

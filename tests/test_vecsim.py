@@ -7,11 +7,15 @@ import numpy as np
 import pytest
 
 from repro.core import NetStats, check_trace
-from repro.core.vecsim import (VecScenario, build_trace, churn_scenario,
+from repro.core.vecsim import (VecScenario, WindowOverflowError, build_trace,
+                               churn_scenario, churn_wave_scenario,
                                crash_scenario, cross_validate,
                                delivered_multiset, full_out_mask,
-                               link_add_scenario, mean_shortest_path_vec,
-                               run_vec, safe_out_mask, static_scenario,
+                               kregular_topology, link_add_scenario,
+                               mean_shortest_path_vec,
+                               partition_heal_scenario, poisson_traffic,
+                               run_vec, safe_out_mask, smallworld_topology,
+                               static_scenario, sustained_scenario,
                                unsafe_link_stats_vec, vc_overhead_model)
 
 SCENARIOS = {
@@ -186,3 +190,172 @@ def test_msg_counters_are_per_origin_sequential():
     for origin, c in zip(scn.bcast_origin.tolist(), counters.tolist()):
         seen[origin] = seen.get(origin, 0) + 1
         assert c == seen[origin]
+
+
+# --------------------------------------------------------------------- #
+# Streaming windowed engine (vecsim.stream)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+@pytest.mark.parametrize("name", sorted(SCENARIOS) + ["crash"])
+def test_windowed_byte_identical_to_monolithic(name, backend):
+    """The windowed acceptance property on every scenario family: same
+    delivered matrix, same per-round series, same NetStats."""
+    builder = SCENARIOS.get(name, crash_scenario)
+    scn = builder(seed=21, n=40)
+    mono = run_vec(scn, backend="numpy")
+    win = run_vec(scn, backend=backend, window=scn.m_total,
+                  seg_len=8, collect="full")
+    np.testing.assert_array_equal(mono.delivered, win.delivered)
+    np.testing.assert_array_equal(mono.series, win.series)
+    assert mono.stats == win.stats
+    assert not win.expired.any()
+    assert win.delivered_frac() == mono.delivered_frac()
+    assert win.mean_latency() == pytest.approx(mono.mean_latency())
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_windowed_sub_mtotal_window_on_sustained_traffic(backend):
+    """Sustained traffic is where the window buys memory: messages
+    retire as the stream flows, so a buffer far below M_total carries
+    the whole run without loss of fidelity."""
+    scn = sustained_scenario(seed=11, n=64, k=6, rate=2.0, messages=30,
+                             max_delay=2)
+    mono = run_vec(scn, backend="numpy")
+    win = run_vec(scn, backend=backend, window=20, seg_len=4,
+                  collect="full")
+    assert win.peak_live <= 20 < scn.m_total
+    np.testing.assert_array_equal(mono.delivered, win.delivered)
+    np.testing.assert_array_equal(mono.series, win.series)
+    assert mono.stats == win.stats
+
+
+def test_windowed_overflow_raises_not_diverges():
+    scn = static_scenario(seed=1, n=48, m_app=12)
+    with pytest.raises(WindowOverflowError):
+        run_vec(scn, backend="numpy", window=2, seg_len=4)
+
+
+def test_windowed_horizon_expires_and_flags():
+    """A horizon shorter than the flood time force-retires columns and
+    says so in ``expired`` — partial delivery is reported, not hidden."""
+    scn = static_scenario(seed=5, n=64, k=4, m_app=10)
+    win = run_vec(scn, backend="numpy", window=6, seg_len=2, horizon=4,
+                  collect="full")
+    assert win.expired.any()
+    assert win.delivered_frac() < 1.0
+
+
+def test_windowed_horizon_unpins_hung_gates():
+    """A gate whose ping can never be answered (its target crashed) pins
+    the ping column; the horizon must clear the hung gate and recycle
+    the column instead of letting it occupy the window forever."""
+    i32 = lambda *a: np.asarray(a, np.int32)  # noqa: E731
+    n, k = 4, 3
+    adj0 = np.full((n, k), -1, np.int32)
+    adj0[:, 0] = (np.arange(n) + 1) % n       # ring
+    delay0 = np.ones((n, k), np.int32)
+    scn = VecScenario(
+        n=n, k=k, rounds=40, adj0=adj0, delay0=delay0,
+        bcast_round=i32(0, 1, 20), bcast_origin=i32(0, 1, 2),
+        # process 3 crashes silently, then 0 gains a link to it: the
+        # gate's ping floods but 3 never delivers it -> no pong, ever
+        add_round=i32(10), add_p=i32(0), add_k=i32(2), add_q=i32(3),
+        add_delay=i32(1),
+        crash_round=i32(5), crash_pid=i32(3)).validate()
+    mono = run_vec(scn, backend="numpy")
+    assert (mono.state["gate"] >= 0).any()        # the gate really hangs
+    win = run_vec(scn, backend="numpy", window=scn.m_total, seg_len=4,
+                  horizon=8, collect="full")
+    assert (win.state["gate"] < 0).all()          # horizon cleared it
+    assert win.expired.any()
+    # app deliveries among the survivors are unaffected by the expiry
+    alive = ~win.state["crashed"]
+    np.testing.assert_array_equal(mono.delivered[alive][:, : scn.m_app],
+                                  win.delivered[alive][:, : scn.m_app])
+
+
+def test_windowed_aggregate_mode_matches_full_counts():
+    scn = churn_scenario(seed=13, n=40)
+    full = run_vec(scn, backend="numpy", window=scn.m_total, collect="full")
+    agg = run_vec(scn, backend="numpy", window=scn.m_total,
+                  collect="aggregate")
+    assert agg.delivered is None
+    np.testing.assert_array_equal(
+        agg.deliv_count, (full.delivered >= 0).sum(axis=0))
+    assert agg.stats == full.stats
+    assert agg.mean_latency() == pytest.approx(full.mean_latency())
+    assert agg.bcast_done.all()
+
+
+def test_windowed_snapshot_metrics_match_monolithic():
+    scn = churn_scenario(seed=9, n=48)
+    snap_t = int(scn.add_round[-1])
+    mono = run_vec(scn, backend="numpy", snapshot_round=snap_t)
+    win = run_vec(scn, backend="numpy", window=scn.m_total, seg_len=8,
+                  snapshot_round=snap_t)
+    assert win.snapshot is not None and "is_app" in win.snapshot
+    assert (unsafe_link_stats_vec(win.snapshot, snap_t, scn.m_app)
+            == unsafe_link_stats_vec(mono.snapshot, snap_t, scn.m_app))
+    srcs = list(range(0, scn.n, 8))
+    for mask_fn in (safe_out_mask, full_out_mask):
+        assert (mean_shortest_path_vec(win.snapshot["adj"],
+                                       mask_fn(win.snapshot), srcs)
+                == mean_shortest_path_vec(mono.snapshot["adj"],
+                                          mask_fn(mono.snapshot), srcs))
+
+
+# --------------------------------------------------------------------- #
+# New topology / traffic / dynamic-scenario builders
+# --------------------------------------------------------------------- #
+def test_kregular_topology_is_regular_in_and_out():
+    n, k = 120, 6
+    adj, _ = kregular_topology(seed=2, n=n, k=k, free_slots=1)
+    used = adj[:, : k - 1]
+    assert (used >= 0).all()
+    assert (used != np.arange(n)[:, None]).all()          # no self-links
+    indeg = np.bincount(used.ravel(), minlength=n)
+    assert indeg.min() == indeg.max() == k - 1            # in-regular too
+
+
+def test_smallworld_topology_keeps_ring_and_rewires():
+    n, k = 120, 6
+    lattice, _ = smallworld_topology(seed=2, n=n, k=k, beta=0.0)
+    rewired, _ = smallworld_topology(seed=2, n=n, k=k, beta=0.5)
+    np.testing.assert_array_equal(lattice[:, 0], (np.arange(n) + 1) % n)
+    np.testing.assert_array_equal(rewired[:, 0], (np.arange(n) + 1) % n)
+    assert (lattice[:, 1:] != rewired[:, 1:]).any()       # something moved
+    mask = rewired >= 0
+    srcs = list(range(0, n, 16))
+    assert (mean_shortest_path_vec(rewired, mask, srcs)
+            < mean_shortest_path_vec(lattice, lattice >= 0, srcs))
+
+
+def test_poisson_traffic_unique_origin_round_pairs():
+    r, o = poisson_traffic(seed=3, n=50, rate=4.0, t0=0, t1=40)
+    assert (np.diff(r) >= 0).all()
+    pairs = set(zip(o.tolist(), r.tolist()))
+    assert len(pairs) == len(r)
+
+
+@pytest.mark.parametrize("name,builder", [
+    ("sustained", lambda: sustained_scenario(seed=11, n=64, k=6, rate=2.0,
+                                             messages=30, max_delay=2)),
+    ("waves", lambda: churn_wave_scenario(seed=11, n=64, waves=3)),
+    ("partition", lambda: partition_heal_scenario(
+        seed=11, n=64, traffic_during_partition=True)),
+])
+def test_new_builders_cross_validate_against_exact_engine(name, builder):
+    scn = builder()
+    out = cross_validate(scn)
+    assert out["vec_multiset"] == out["exact_multiset"]
+    assert out["vec_report"].ok, out["vec_report"].summary()
+    assert out["exact_report"].ok, out["exact_report"].summary()
+    assert out["vec"].delivered_frac() == 1.0
+
+
+def test_partition_heal_exercises_ping_phase_and_resolves():
+    scn = partition_heal_scenario(seed=4, n=64)
+    res = run_vec(scn, backend="numpy")
+    assert int(res.series[:, 5].sum()) > 0        # heal links were gated
+    assert res.stats.oob_messages > 0             # pongs flowed
+    assert (res.state["gate"] < 0).all()          # every gate resolved

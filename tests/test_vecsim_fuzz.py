@@ -1,0 +1,157 @@
+"""Differential fuzzing of the vecsim engines (hypothesis).
+
+Random small :class:`VecScenario`\\ s — drawn across every topology
+builder (ring / k-regular / small-world), traffic model (batch /
+Poisson / bursty), churn shape (link-add, churn, churn waves,
+partition-heal) and crash schedule — are executed four ways and the
+results compared byte-for-byte:
+
+  * NumPy backend  == JAX backend (delivered matrix + stats series);
+  * windowed streaming == monolithic (delivered + series + NetStats),
+    at several window sizes down to the overflow boundary;
+  * vec delivered multiset == exact event-engine multiset (crossval);
+  * oracle-clean traces (causal order, integrity, validity, agreement
+    among correct processes) on crash and churn runs.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="fuzz tests need the optional 'hypothesis' "
+    "extra (pip install -r requirements.txt)")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core import check_trace  # noqa: E402
+from repro.core.vecsim import (WindowOverflowError, build_trace,  # noqa: E402
+                               churn_scenario, churn_wave_scenario,
+                               crash_scenario, cross_validate,
+                               delivered_multiset, link_add_scenario,
+                               partition_heal_scenario, run_vec,
+                               static_scenario, sustained_scenario)
+
+BASE = dict(
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+    derandomize=True,
+)
+
+BUILDERS = {
+    "static": lambda seed, n: static_scenario(seed, n),
+    "link_add": lambda seed, n: link_add_scenario(seed, n),
+    "churn": lambda seed, n: churn_scenario(seed, n),
+    "crash": lambda seed, n: crash_scenario(seed, n),
+    "waves": lambda seed, n: churn_wave_scenario(seed, n, waves=2),
+    "partition": lambda seed, n: partition_heal_scenario(
+        seed, max(n, 12), traffic_during_partition=bool(seed % 2)),
+    "sustained_kreg": lambda seed, n: sustained_scenario(
+        seed, n, k=5, rate=1.0 + (seed % 3), messages=24,
+        topology="kregular", max_delay=2),
+    "sustained_sw": lambda seed, n: sustained_scenario(
+        seed, n, k=5, rate=2.0, messages=24, topology="smallworld",
+        traffic="bursty", max_delay=2),
+}
+
+scenario_strategy = st.tuples(
+    st.sampled_from(sorted(BUILDERS)),
+    st.integers(min_value=0, max_value=10 ** 6),
+    st.integers(min_value=10, max_value=40),
+)
+
+
+def _build(spec):
+    name, seed, n = spec
+    return BUILDERS[name](seed, n)
+
+
+@settings(max_examples=15, **BASE)
+@given(spec=scenario_strategy)
+def test_fuzz_numpy_jax_backends_byte_identical(spec):
+    scn = _build(spec)
+    r_np = run_vec(scn, backend="numpy")
+    r_jx = run_vec(scn, backend="jax")
+    np.testing.assert_array_equal(r_np.delivered, r_jx.delivered)
+    np.testing.assert_array_equal(r_np.series, r_jx.series)
+    assert r_np.stats == r_jx.stats
+
+
+@settings(max_examples=15, **BASE)
+@given(spec=scenario_strategy,
+       frac=st.sampled_from([1.0, 0.6, 0.3]),
+       seg_len=st.sampled_from([4, 16, 64]),
+       backend=st.sampled_from(["numpy", "jax"]))
+def test_fuzz_windowed_equals_monolithic(spec, frac, seg_len, backend):
+    """The acceptance-criterion property: wherever both runs fit, the
+    windowed delivered matrix is byte-identical to the monolithic one.
+    Windows below the live-message high-water mark must refuse loudly
+    (WindowOverflowError), never silently diverge."""
+    scn = _build(spec)
+    mono = run_vec(scn, backend="numpy")
+    w = max(2, int(scn.m_total * frac))
+    try:
+        win = run_vec(scn, backend=backend, window=w, seg_len=seg_len,
+                      collect="full")
+    except WindowOverflowError:
+        assert w < scn.m_total  # a full-width window can never overflow
+        return
+    np.testing.assert_array_equal(mono.delivered, win.delivered)
+    np.testing.assert_array_equal(mono.series, win.series)
+    assert mono.stats == win.stats
+    assert not win.expired.any()
+    assert win.peak_live <= w
+
+
+@settings(max_examples=10, **BASE)
+@given(spec=scenario_strategy,
+       window=st.sampled_from([None, -1]))
+def test_fuzz_vec_matches_exact_engine(spec, window):
+    """Delivered-message multisets agree byte-for-byte with the exact
+    discrete-event simulator, monolithic and windowed alike."""
+    scn = _build(spec)
+    if window == -1:
+        window = scn.m_total
+    out = cross_validate(scn, window=window)
+    assert out["vec_multiset"] == out["exact_multiset"]
+    assert out["vec_report"].ok, out["vec_report"].summary()
+    assert out["exact_report"].ok, out["exact_report"].summary()
+
+
+@settings(max_examples=10, **BASE)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6),
+       n=st.integers(min_value=16, max_value=48),
+       builder=st.sampled_from(["crash", "churn", "waves"]))
+def test_fuzz_oracle_clean_on_crash_and_churn(seed, n, builder):
+    """Oracle coverage on faulty/dynamic runs: traces rebuilt from the
+    delivery matrix show zero causal or agreement violations among the
+    correct processes."""
+    scn = BUILDERS[builder](seed, n)
+    res = run_vec(scn, backend="numpy")
+    crashed = set(np.nonzero(res.state["crashed"])[0].tolist())
+    rep = check_trace(build_trace(res), crashed=crashed,
+                      all_pids=set(range(scn.n)))
+    assert not rep.causal_violations, rep.summary()
+    assert not rep.agreement_violations, rep.summary()
+    assert not rep.double_deliveries and not rep.validity_violations
+
+
+@settings(max_examples=8, **BASE)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_fuzz_windowed_multiset_stable_under_window_choice(seed):
+    """Any two overflow-free window/segment choices give the same
+    deliveries — the stream driver's bookkeeping cannot depend on how
+    the message axis happens to be chunked."""
+    scn = churn_scenario(seed=seed, n=24)
+    base = None
+    for w, seg in ((scn.m_total, 8), (scn.m_total, 64),
+                   (max(4, scn.m_total // 2), 16)):
+        try:
+            res = run_vec(scn, backend="numpy", window=w, seg_len=seg,
+                          collect="full")
+        except WindowOverflowError:
+            continue
+        ms = delivered_multiset(res)
+        if base is None:
+            base = ms
+        assert ms == base
+    assert base is not None
