@@ -1,18 +1,24 @@
 """Fig. 7 reproduction: transmission-delay sweep on a dynamic overlay —
-mean shortest path over safe links (PC) vs all links (R), and unsafe
-links / buffered messages per process.
+mean shortest path over safe links (PC) vs all links, and unsafe links /
+buffered messages per process — through the one front door
+(``repro.api.run``) on either engine.
 
-Two engines (``--engine``):
+Both engines now run the *same* churn scenario family (batched link
+add/remove schedules racing app traffic), so the rows are directly
+comparable:
 
-  * ``exact`` — the discrete-event simulator with Spray-like overlay
-    dynamics at N=300 (default): every open/close flows through the real
-    ``PCBroadcast`` processes and the run is oracle-checked;
-  * ``vec``   — the vectorized lockstep engine (``repro.core.vecsim``)
-    at N=50,000 (default): the same sweep at the population sizes the
-    paper's scalability claim is about, with churn as batched link
-    add/remove schedules.  Transmission delay maps to link delay in
-    rounds; metrics are taken from a state snapshot at the end of the
-    churn window.
+  * ``exact`` — the discrete-event simulator at N=300 (default): every
+    open/close flows through the real ``PCBroadcast`` processes, the run
+    is oracle-checked, and the graph metrics come from a mid-run
+    snapshot captured at the last churn round;
+  * ``vec``   — the vectorized lockstep engine at N=50,000 (default):
+    the same sweep at the population sizes the paper's scalability claim
+    is about.  ``--window`` routes execution through the streaming
+    windowed engine (O(N·window) memory).
+
+Transmission delay maps to link delay in rounds; metrics are taken from
+a state snapshot at the end of the churn window, where gating is
+busiest.
 
 CSV:  fig7/<metric>/delay=<d>,us_per_call,derived
 """
@@ -20,42 +26,45 @@ CSV:  fig7/<metric>/delay=<d>,us_per_call,derived
 from __future__ import annotations
 
 import argparse
-import time
 
-from repro.core import BoundedPCBroadcast, Network, SprayOverlay, \
-    check_trace, ring_plus_random
-from repro.core.metrics import (full_graph, mean_shortest_path, safe_graph,
-                                unsafe_link_stats)
+from repro.api import (DynamicsSpec, MetricsSpec, RunSpec, TopologySpec,
+                       TrafficSpec, WindowSpec, run)
+from repro.core.metrics import mean_shortest_path
+from repro.core.vecsim import (full_out_mask, mean_shortest_path_vec,
+                               safe_out_mask, unsafe_link_stats_vec)
 
 
-def rows_exact(n: int = 300, horizon: float = 90.0):
+def _spec(engine: str, n: int, k: int, delay: int, m_app: int, churn: int,
+          backend: str = "numpy", window: int | None = None,
+          oracle: bool = False) -> RunSpec:
+    return RunSpec(
+        protocol="pc", engine=engine, backend=backend, n=n,
+        seed=3 + delay,
+        topology=TopologySpec(kind="ring", k=k, max_delay=delay),
+        traffic=TrafficSpec(kind="uniform", messages=m_app),
+        dynamics=DynamicsSpec(kind="churn", n_adds=churn, n_rms=churn,
+                              churn_window=16),
+        window=WindowSpec(window=window),
+        metrics=MetricsSpec(snapshot="last_churn", oracle=oracle))
+
+
+def rows_exact(n: int = 300, m_app: int = 12, churn: int = 24):
+    """The churn sweep on the event simulator: real processes, every
+    open/close through Algorithm 2's ping phase, oracle-checked."""
     out = []
-    for delay in (0.5, 1.0, 2.0, 3.0, 5.0):
-        net = Network(seed=3, default_delay=delay, oob_delay=delay / 2)
-        for pid in range(n):
-            net.add_process(BoundedPCBroadcast(
-                pid, ping_mode="route", max_size=256, max_retry=8,
-                ping_timeout=12 * delay))
-        ring_plus_random(net, range(n), k=16)
-        overlay = SprayOverlay(net, range(n), period=60.0)
-        overlay.start()
-        t0 = time.perf_counter()
-        # light app traffic so buffers fill during phases
-        for t in range(10, int(horizon), 10):
-            net.run(until=float(t))
-            net.procs[t % n].broadcast(("m", t))
-        net.run(until=horizon)
-        wall = (time.perf_counter() - t0) * 1e6
+    for delay in (1, 2, 3, 4, 5):
+        rep = run(_spec("exact", n, k=16, delay=delay, m_app=m_app,
+                        churn=churn, oracle=True))
+        assert rep.oracle.causal_ok and not rep.oracle.double_deliveries, \
+            rep.oracle.summary()
+        graphs = rep.result.snapshot_graphs
         srcs = list(range(0, n, max(1, n // 10)))
-        sp_safe = mean_shortest_path(safe_graph(net), srcs,
+        sp_safe = mean_shortest_path(graphs["safe"], srcs,
                                      unreachable_penalty=float(n))
-        sp_all = mean_shortest_path(full_graph(net), srcs,
+        sp_all = mean_shortest_path(graphs["full"], srcs,
                                     unreachable_penalty=float(n))
-        unsafe, buffered, maxbuf = unsafe_link_stats(net)
-        overlay.stop()
-        net.run(until=net.time + 200 * delay)
-        rep = check_trace(net.trace, check_agreement=False)
-        assert rep.causal_ok and not rep.double_deliveries, rep.summary()
+        unsafe, buffered, _ = graphs["unsafe"]
+        wall = rep.wall_seconds * 1e6
         out.append((f"fig7/sp_safe/delay={delay}", wall, sp_safe))
         out.append((f"fig7/sp_all/delay={delay}", wall, sp_all))
         out.append((f"fig7/unsafe_links/delay={delay}", wall, unsafe))
@@ -65,36 +74,29 @@ def rows_exact(n: int = 300, horizon: float = 90.0):
 
 def rows_vec(n: int = 50_000, backend: str = "numpy", m_app: int = 12,
              churn: int = 128, window: int | None = None):
-    """The same sweep on the vectorized engine at large N.  Integer link
-    delays 1..5 rounds stand in for the transmission-delay axis; the
-    snapshot is taken at the last churn round, where gating is busiest.
-    ``window`` routes execution through the streaming windowed engine
-    (O(N·window) memory); the snapshot then carries the live buffer and
-    its ``is_app`` mask, which the metrics consume transparently."""
-    from repro.core.vecsim import (churn_scenario, full_out_mask,
-                                   mean_shortest_path_vec, run_vec,
-                                   safe_out_mask, unsafe_link_stats_vec)
+    """The same sweep on the vectorized engine at large N.  ``window``
+    routes execution through the streaming windowed engine; the snapshot
+    then carries the live buffer and its ``is_app`` mask, which the
+    metrics consume transparently."""
     out = []
     k = 17                    # ~ the paper's Fig. 7 links/process
     for delay in (1, 2, 3, 4, 5):
-        scn = churn_scenario(seed=3 + delay, n=n, k=k, m_app=m_app,
-                             n_adds=churn, n_rms=churn, max_delay=delay,
-                             churn_window=16)
-        snap = int(scn.add_round[-1]) if scn.n_adds else scn.rounds // 2
-        t0 = time.perf_counter()
-        res = run_vec(scn, backend=backend, snapshot_round=snap,
-                      window=window)
-        wall = (time.perf_counter() - t0) * 1e6
-        assert res.delivered_frac() == 1.0, "vec run did not quiesce"
+        rep = run(_spec("windowed" if window else "vec", n, k=k,
+                        delay=delay, m_app=m_app, churn=churn,
+                        backend=backend, window=window))
+        assert rep.delivered_frac == 1.0, "vec run did not quiesce"
+        snap = rep.result.snapshot
+        snap_t = int(rep.scenario.add_round[-1])
+        wall = rep.wall_seconds * 1e6
         srcs = list(range(0, n, max(1, n // 10)))
         sp_safe = mean_shortest_path_vec(
-            res.snapshot["adj"], safe_out_mask(res.snapshot), srcs,
+            snap["adj"], safe_out_mask(snap), srcs,
             unreachable_penalty=float(n))
         sp_all = mean_shortest_path_vec(
-            res.snapshot["adj"], full_out_mask(res.snapshot), srcs,
+            snap["adj"], full_out_mask(snap), srcs,
             unreachable_penalty=float(n))
-        unsafe, buffered, _ = unsafe_link_stats_vec(res.snapshot, snap,
-                                                    scn.m_app)
+        unsafe, buffered, _ = unsafe_link_stats_vec(snap, snap_t,
+                                                    rep.m_app)
         out.append((f"fig7/sp_safe/delay={delay}", wall, sp_safe))
         out.append((f"fig7/sp_all/delay={delay}", wall, sp_all))
         out.append((f"fig7/unsafe_links/delay={delay}", wall, unsafe))

@@ -1,16 +1,21 @@
 """Table 1 reproduction: message overhead, delivery execution time, and
-local space for vector-clock causal broadcast vs. PC-broadcast.
+local space for vector-clock causal broadcast vs. PC-broadcast — both
+protocols **measured**, on either engine, through the one front door
+(``repro.api.run``).
 
 Two engines (``--engine``):
 
-  * ``exact`` — both protocols actually run as Python processes on the
-    event simulator at N in {50, 100, 200}, oracle-checked;
-  * ``vec``   — PC-broadcast runs on the vectorized lockstep engine at
-    N in {1000, 10000, 50000}; the vector-clock column is *derived* from
-    the same causal run (``vecsim.vc_overhead_model``: one clock entry
-    per origin the broadcaster had delivered from, one rescan of the
-    clock per delivery), which is what extends Table 1's O(1)-vs-O(N)
-    separation to population sizes the object simulator cannot reach.
+  * ``exact`` — both protocols run as Python processes on the event
+    simulator at N in {50, 100, 200}, oracle-checked;
+  * ``vec``   — both protocols run on the vectorized lockstep substrate
+    at N in {1000, 10000, 50000}: PC-broadcast on the shared vec engine,
+    the vector-clock baseline on its dense-clock vec twin
+    (``vecsim.vc``), on the *same scenario* (same seed, topology and
+    broadcast schedule), so the O(1)-vs-O(N) separation is measured —
+    per-hop piggyback bytes and readiness-scan comparison counts — at
+    population sizes the object simulator cannot reach.  The analytic
+    model the measured columns replace is kept as ``vc_model`` rows for
+    contrast.
 
 Emits CSV rows  name,us_per_call,derived  where ``derived`` is the
 table's complexity metric (bytes/message, comparisons/delivery, entries).
@@ -19,27 +24,24 @@ table's complexity metric (bytes/message, comparisons/delivery, entries).
 from __future__ import annotations
 
 import argparse
-import time
 
-from repro.core import (BoundedPCBroadcast, Network, VCBroadcast,
-                        check_trace, ring_plus_random)
-from repro.core.metrics import overhead_per_message
+from repro.api import (MetricsSpec, RunSpec, TopologySpec, TrafficSpec,
+                       WindowSpec, run)
+from repro.core.vecsim import vc_overhead_model
 
 
-def run_broadcasts(proto_cls, n, n_bcast, seed=0, **kw):
-    net = Network(seed=seed, default_delay=0.5, oob_delay=0.25)
-    for pid in range(n):
-        net.add_process(proto_cls(pid, **kw))
-    ring_plus_random(net, range(n), k=max(3, n // 32))
-    t0 = time.perf_counter()
-    for i in range(n_bcast):
-        net.procs[i % n].broadcast(("m", i))
-        net.run(until=net.time + 0.7)
-    net.run()
-    wall = time.perf_counter() - t0
-    rep = check_trace(net.trace, all_pids=set(range(n)))
-    assert rep.ok, rep.summary()
-    return net, wall, rep
+def _spec(protocol: str, engine: str, n: int, m_app: int, k: int,
+          backend: str = "numpy", window: int | None = None,
+          oracle: bool = False) -> RunSpec:
+    """One Table 1 cell: a static overlay with ``m_app`` broadcasts.
+    The scenario depends only on (seed, n, k, m_app), so the pc and vc
+    runs of a size execute the identical causal workload."""
+    return RunSpec(
+        protocol=protocol, engine=engine, backend=backend, n=n, seed=n,
+        topology=TopologySpec(kind="ring", k=k),
+        traffic=TrafficSpec(kind="uniform", messages=m_app),
+        window=WindowSpec(window=window),
+        metrics=MetricsSpec(oracle=oracle))
 
 
 def rows_exact(sizes=(50, 100, 200)):
@@ -47,64 +49,69 @@ def rows_exact(sizes=(50, 100, 200)):
     for n in sizes:
         # broadcasters scale with N so the vector-clock entry count (one
         # per process that EVER broadcast — the paper's N) grows too
-        n_bcast = n // 2
+        m_app = n // 2
+        k = max(3, n // 32)
         # --- PC-broadcast -------------------------------------------- #
-        net, wall, rep = run_broadcasts(
-            lambda pid: BoundedPCBroadcast(pid, ping_mode="route"), n,
-            n_bcast)
-        per_delivery_us = wall / max(rep.n_deliveries, 1) * 1e6
-        out.append((f"table1/pc/overhead_bytes/N={n}", per_delivery_us,
-                    overhead_per_message(net)))
-        space = max(len(p.received) for p in net.procs.values())
-        out.append((f"table1/pc/space_entries/N={n}", per_delivery_us,
-                    space))
+        rep = run(_spec("pc", "exact", n, m_app, k, oracle=True))
+        assert rep.oracle.ok, rep.oracle.summary()
+        us = rep.wall_seconds / max(rep.stats.deliveries, 1) * 1e6
+        out.append((f"table1/pc/overhead_bytes/N={n}", us,
+                    rep.extras["overhead_bytes_per_msg"]))
+        space = max(len(p.received) for p in rep.result.procs.values())
+        out.append((f"table1/pc/space_entries/N={n}", us, space))
 
         # --- vector clocks -------------------------------------------- #
-        net, wall, rep = run_broadcasts(VCBroadcast, n, n_bcast)
-        per_delivery_us = wall / max(rep.n_deliveries, 1) * 1e6
-        out.append((f"table1/vc/overhead_bytes/N={n}", per_delivery_us,
-                    overhead_per_message(net)))
-        comparisons = sum(p.comparisons for p in net.procs.values())
-        out.append((f"table1/vc/comparisons_per_delivery/N={n}",
-                    per_delivery_us,
-                    comparisons / max(rep.n_deliveries, 1)))
-        space = max(p.local_space_entries() for p in net.procs.values())
-        out.append((f"table1/vc/space_entries/N={n}", per_delivery_us,
-                    space))
+        rep = run(_spec("vc", "exact", n, m_app, k, oracle=True))
+        assert rep.oracle.ok, rep.oracle.summary()
+        us = rep.wall_seconds / max(rep.stats.deliveries, 1) * 1e6
+        out.append((f"table1/vc/overhead_bytes/N={n}", us,
+                    rep.extras["overhead_bytes_per_msg"]))
+        out.append((f"table1/vc/comparisons_per_delivery/N={n}", us,
+                    rep.extras["comparisons_per_delivery"]))
+        out.append((f"table1/vc/space_entries/N={n}", us,
+                    rep.extras["space_entries_max"]))
     return out
 
 
-def rows_vec(sizes=(1000, 10_000, 50_000), backend: str = "numpy"):
-    from repro.core.vecsim import run_vec, static_scenario, vc_overhead_model
+def rows_vec(sizes=(1000, 10_000, 50_000), backend: str = "numpy",
+             window: int | None = None):
     out = []
     for n in sizes:
         m_app = 32
-        scn = static_scenario(seed=n, n=n, k=6, m_app=m_app)
-        t0 = time.perf_counter()
-        res = run_vec(scn, backend=backend)
-        wall = time.perf_counter() - t0
-        assert res.delivered_frac() == 1.0
-        per_delivery_us = wall / max(res.stats.deliveries, 1) * 1e6
-        pc_overhead = (res.stats.control_bytes
-                       / max(res.stats.sent_messages, 1))
-        out.append((f"table1/pc/overhead_bytes/N={n}", per_delivery_us,
-                    pc_overhead))
+        # --- PC-broadcast on the shared vec engine --------------------- #
+        rep = run(_spec("pc", "windowed" if window else "vec", n, m_app,
+                        k=6, backend=backend, window=window))
+        assert rep.delivered_frac == 1.0
+        us = rep.wall_seconds / max(rep.stats.deliveries, 1) * 1e6
+        out.append((f"table1/pc/overhead_bytes/N={n}", us,
+                    rep.extras["overhead_bytes_per_msg"]))
         # received-set entries: every process ends up knowing every id
-        out.append((f"table1/pc/space_entries/N={n}", per_delivery_us,
-                    m_app))
-        vc_bytes, vc_cmp = vc_overhead_model(res)
-        out.append((f"table1/vc/overhead_bytes/N={n}", per_delivery_us,
-                    vc_bytes))
-        out.append((f"table1/vc/comparisons_per_delivery/N={n}",
-                    per_delivery_us, vc_cmp))
+        out.append((f"table1/pc/space_entries/N={n}", us, m_app))
+        # the replaced analytic model, kept for contrast with measurement
+        if rep.result.delivered is not None:
+            mb, mc = vc_overhead_model(rep.result)
+            out.append((f"table1/vc_model/overhead_bytes/N={n}", us, mb))
+            out.append((f"table1/vc_model/comparisons_per_delivery/N={n}",
+                        us, mc))
+
+        # --- vector clocks, measured on the same scenario -------------- #
+        rep = run(_spec("vc", "vec", n, m_app, k=6))
+        assert rep.delivered_frac == 1.0
+        us = rep.wall_seconds / max(rep.stats.deliveries, 1) * 1e6
+        out.append((f"table1/vc/overhead_bytes/N={n}", us,
+                    rep.extras["overhead_bytes_per_msg"]))
+        out.append((f"table1/vc/comparisons_per_delivery/N={n}", us,
+                    rep.extras["comparisons_per_delivery"]))
+        out.append((f"table1/vc/space_entries/N={n}", us,
+                    rep.extras["space_entries_max"]))
     return out
 
 
 def rows(engine: str = "exact", n: int | None = None,
-         backend: str = "numpy"):
+         backend: str = "numpy", window: int | None = None):
     if engine == "vec":
         return rows_vec((n,) if n is not None else (1000, 10_000, 50_000),
-                        backend=backend)
+                        backend=backend, window=window)
     return rows_exact((n,) if n is not None else (50, 100, 200))
 
 
@@ -115,8 +122,12 @@ def main():
                     help="single population size (default: engine sweep)")
     ap.add_argument("--backend", choices=("numpy", "jax", "auto"),
                     default="numpy")
+    ap.add_argument("--window", type=int, default=None,
+                    help="route the pc vec runs through the streaming "
+                         "windowed engine with this many live columns")
     args = ap.parse_args()
-    for name, us, derived in rows(args.engine, args.n, args.backend):
+    for name, us, derived in rows(args.engine, args.n, args.backend,
+                                  args.window):
         print(f"{name},{us:.2f},{derived:.2f}")
 
 

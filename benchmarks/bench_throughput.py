@@ -1,8 +1,8 @@
 """Sustained-throughput benchmark for the streaming windowed engine.
 
-Drives ``vecsim.stream.run_vec_windowed`` with Poisson (or bursty)
-traffic on a random k-regular overlay and measures how much causal
-broadcast one host can actually push through a fixed O(N·window) memory
+Drives the windowed engine through ``repro.api.run`` (a sustained
+Poisson/bursty ``RunSpec`` with ``engine="windowed"``) and measures how
+much causal broadcast one host can push through a fixed O(N·window) memory
 budget — the throughput-scalability axis the monolithic (N, M_total)
 engine cannot reach (1M broadcasts at N=10k would need an 80 GB dense
 matrix; the window holds it in a few hundred MB).
@@ -33,27 +33,34 @@ sys.path.insert(0, os.path.join(
 def run_point(n: int, messages: int, rate: float, window: int, k: int,
               backend: str, topology: str, traffic: str, seg_len: int,
               horizon: int | None, max_delay: int, seed: int) -> dict:
-    from repro.core.vecsim import run_vec_windowed, sustained_scenario
+    from dataclasses import replace
 
+    from repro.api import (RunSpec, TopologySpec, TrafficSpec, WindowSpec,
+                           build_scenario, run)
+
+    spec = RunSpec(
+        protocol="pc", engine="windowed", backend=backend, n=n, seed=seed,
+        topology=TopologySpec(kind=topology, k=k, max_delay=max_delay),
+        traffic=TrafficSpec(kind=traffic, rate=rate, messages=messages),
+        window=WindowSpec(window=window, seg_len=seg_len, horizon=horizon,
+                          collect="aggregate"))
     t0 = time.perf_counter()
-    scn = sustained_scenario(seed=seed, n=n, k=k, rate=rate,
-                             messages=messages, topology=topology,
-                             traffic=traffic, max_delay=max_delay)
+    scn = build_scenario(spec.validate())
     build_s = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    res = run_vec_windowed(scn, window, backend=backend, seg_len=seg_len,
-                           horizon=horizon, collect="aggregate")
-    run_s = time.perf_counter() - t0
+    # hand the prebuilt scenario back so the report's wall clock is pure
+    # engine time, with the build cost reported separately
+    rep = run(replace(spec, scenario=scn))
+    res, run_s = rep.result, rep.wall_seconds
     if horizon is None:
         # without a horizon the windowed engine is exact: anything less
         # than full delivery is a correctness regression, not a number
         assert not res.expired.any(), "columns expired without a horizon"
-        assert res.delivered_frac() == 1.0, \
-            f"windowed run did not quiesce ({res.delivered_frac():.6f})"
+        assert rep.delivered_frac == 1.0, \
+            f"windowed run did not quiesce ({rep.delivered_frac:.6f})"
     buffer_bytes = 2 * n * window * 4          # arr + delivered, int32
     return dict(
         n=n, k=k, messages=messages, rate=rate, window=window,
-        backend=res.backend, topology=topology, traffic=traffic,
+        backend=rep.backend, topology=topology, traffic=traffic,
         seg_len=seg_len, horizon=horizon, rounds=scn.rounds,
         build_seconds=round(build_s, 3),
         run_seconds=round(run_s, 3),
@@ -61,8 +68,8 @@ def run_point(n: int, messages: int, rate: float, window: int, k: int,
         sends=res.stats.sent_messages,
         sends_per_sec=round(res.stats.sent_messages / run_s, 1),
         deliveries=res.stats.deliveries,
-        delivered_frac=round(res.delivered_frac(), 6),
-        mean_latency_rounds=round(res.mean_latency(), 3),
+        delivered_frac=round(rep.delivered_frac, 6),
+        mean_latency_rounds=round(rep.mean_latency, 3),
         peak_live=res.peak_live,
         expired=int(res.expired.sum()),
         window_buffer_bytes=buffer_bytes,

@@ -4,8 +4,12 @@ benches.  Prints ``name,us_per_call,derived`` CSV.
 ``--engine exact`` (default) runs the paper-scale reproductions on the
 discrete-event simulator; ``--engine vec`` runs the Table 1 / Fig. 7
 sweeps on the vectorized lockstep engine at large N (``--n`` overrides
-the population); ``--engine both`` runs the two back to back.  The
-substrate benches (engine/train) are engine-independent and always run.
+the population) plus the sustained-throughput bench of the streaming
+windowed engine; ``--engine both`` runs the two back to back.
+``--window`` routes every vec-engine sweep through the streaming
+windowed engine with that many live columns.  The substrate benches
+(engine/train) are engine-independent and always run.  All protocol
+benches dispatch through ``repro.api.run`` (one spec, one front door).
 """
 
 from __future__ import annotations
@@ -21,7 +25,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 def main() -> None:
     from benchmarks import bench_engine, bench_fig7, bench_table1, \
-        bench_train
+        bench_throughput, bench_train
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--engine", choices=("exact", "vec", "both"),
                     default="exact")
@@ -29,6 +33,10 @@ def main() -> None:
                     help="population override for the protocol benches")
     ap.add_argument("--backend", choices=("numpy", "jax", "auto"),
                     default="numpy", help="vec-engine backend")
+    ap.add_argument("--window", type=int, default=None,
+                    help="route the vec sweeps (and the throughput "
+                         "bench) through the streaming windowed engine "
+                         "with this many live columns")
     args = ap.parse_args()
     engines = ("exact", "vec") if args.engine == "both" else (args.engine,)
 
@@ -44,7 +52,22 @@ def main() -> None:
         for mod in (bench_table1, bench_fig7):
             try:
                 for name, us, derived in mod.rows(engine=eng, n=n,
-                                                  backend=args.backend):
+                                                  backend=args.backend,
+                                                  window=args.window):
+                    print(f"{prefix}{name},{us:.2f},{derived:.3f}",
+                          flush=True)
+            except Exception:                  # noqa: BLE001
+                failed += 1
+                traceback.print_exc()
+        if eng == "vec":
+            # sustained throughput is windowed-engine-specific: a
+            # harness-sized point (the nightly CI smoke runs the big one)
+            try:
+                for name, us, derived in bench_throughput.rows(
+                        n=args.n if args.n is not None else 2000,
+                        messages=20_000, rate=200.0,
+                        window=args.window if args.window else 4096,
+                        backend=args.backend, seg_len=8, out=None):
                     print(f"{prefix}{name},{us:.2f},{derived:.3f}",
                           flush=True)
             except Exception:                  # noqa: BLE001

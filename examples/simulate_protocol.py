@@ -1,79 +1,85 @@
 """Reproduce the paper's experiment (Fig. 7) at reduced scale, plus the
-tensorized-engine version at 10k processes.
+vectorized-engine version at 10k processes — both parts one
+``repro.api.run(RunSpec)`` call on the same declarative scenario.
 
-Part 1 (event core, exact algorithms): a Spray-like dynamic overlay under
-a transmission-delay ramp; measures mean shortest path over safe links
-(PC-broadcast) vs. all links (R-broadcast) and unsafe links/process.
+Part 1 (exact engine): a churn scenario under a transmission-delay ramp
+on the discrete-event simulator; measures mean shortest path over safe
+links (PC-broadcast) vs. all links and unsafe links/process from a
+mid-churn snapshot, oracle-checked.
 
-Part 2 (JAX engine): the same protocol semantics, tensorized, at 10k
-processes in seconds on one core.
+Part 2 (vec engine): the same protocol semantics, vectorized, at 10k
+processes in seconds on one core — same spec, different ``engine=``.
 
     PYTHONPATH=src python examples/simulate_protocol.py [--n 300]
 """
 
-import argparse
-import statistics
+from __future__ import annotations
 
-from repro.core import BoundedPCBroadcast, Network, SprayOverlay, \
-    check_trace, ring_plus_random
-from repro.core.metrics import (full_graph, mean_shortest_path, safe_graph,
-                                unsafe_link_stats)
+import argparse
+
+from repro.api import (DynamicsSpec, MetricsSpec, RunSpec, TopologySpec,
+                       TrafficSpec, run)
+from repro.core.metrics import mean_shortest_path
+from repro.core.vecsim import (full_out_mask, mean_shortest_path_vec,
+                               safe_out_mask, unsafe_link_stats_vec)
+
+
+def _spec(engine: str, n: int, delay: int, seed: int = 1) -> RunSpec:
+    """One churn experiment; only the engine changes between the parts.
+    Paper parameterization: ~17 links/process (Spray at 10k procs), so a
+    few unsafe links leave the safe graph's diameter almost intact."""
+    return RunSpec(
+        protocol="pc", engine=engine, n=n, seed=seed,
+        topology=TopologySpec(kind="ring", k=16, max_delay=delay),
+        traffic=TrafficSpec(kind="uniform", messages=10),
+        dynamics=DynamicsSpec(kind="churn",
+                              n_adds=max(4, min(64, n // 12)),
+                              n_rms=max(4, min(64, n // 12)),
+                              churn_window=12),
+        metrics=MetricsSpec(snapshot="last_churn", oracle=True))
 
 
 def part1(n: int):
-    print(f"== Fig. 7 (event core, N={n}) ==")
-    # Paper parameterization: ~17 links/process (Spray at 10k procs), so
-    # a few unsafe links leave the safe graph's diameter almost intact.
-    net = Network(seed=1,
-                  default_delay=lambda t, r: min(0.1 + t / 60.0, 5.0),
-                  oob_delay=0.2)
-    for pid in range(n):
-        net.add_process(BoundedPCBroadcast(
-            pid, ping_mode="route", max_size=128, max_retry=8,
-            ping_timeout=60.0))
-    ring_plus_random(net, range(n), k=16)
-    overlay = SprayOverlay(net, range(n), period=60.0)
-    overlay.start()
-    print(f"{'t(s)':>6} {'delay':>6} {'sp_safe':>8} {'sp_all':>7} "
-          f"{'unsafe/proc':>11} {'buffered':>9}")
-    for t in range(0, 241, 30):
-        net.run(until=float(t))
-        if t % 60 == 0 and t > 0:
-            net.procs[t % n].broadcast(("probe", t))
-        srcs = list(range(0, n, max(1, n // 10)))
-        sp_s = mean_shortest_path(safe_graph(net), srcs,
+    print(f"== Fig. 7 (exact engine, N={n}) ==")
+    print(f"{'delay':>6} {'sp_safe':>8} {'sp_all':>7} "
+          f"{'unsafe/proc':>11} {'buffered':>9} {'wall(s)':>8}")
+    srcs = list(range(0, n, max(1, n // 10)))
+    for delay in (1, 2, 3, 5):
+        rep = run(_spec("exact", n, delay))
+        assert rep.oracle.causal_ok and not rep.oracle.double_deliveries, \
+            rep.oracle.summary()
+        graphs = rep.result.snapshot_graphs
+        sp_s = mean_shortest_path(graphs["safe"], srcs,
                                   unreachable_penalty=float(n))
-        sp_a = mean_shortest_path(full_graph(net), srcs,
+        sp_a = mean_shortest_path(graphs["full"], srcs,
                                   unreachable_penalty=float(n))
-        mu, mb, _ = unsafe_link_stats(net)
-        delay = min(0.1 + t / 60.0, 5.0)
-        print(f"{t:6d} {delay:6.2f} {sp_s:8.2f} {sp_a:7.2f} "
-              f"{mu:11.2f} {mb:9.2f}")
-    overlay.stop()
-    net.run(until=net.time + 3000)
-    rep = check_trace(net.trace, check_agreement=False)
-    print("oracle:", rep.summary())
-    assert rep.causal_ok and not rep.double_deliveries
+        mu, mb, _ = graphs["unsafe"]
+        print(f"{delay:6d} {sp_s:8.2f} {sp_a:7.2f} "
+              f"{mu:11.3f} {mb:9.3f} {rep.wall_seconds:8.1f}")
 
 
-def part2():
-    print("\n== tensorized engine (N=10k) ==")
-    import time
-    from repro.core.engine import analyze, random_instance, run_engine
-    cfg, sched, adj0, delay0 = random_instance(
-        7, n=10_000, k=8, m_app=64, n_adds=48, n_rms=48, rounds=64,
-        mode="pc")
-    t0 = time.time()
-    d = run_engine(cfg, sched, adj0, delay0)
-    dt = time.time() - t0
-    rep = analyze(d, sched)
-    cell_rounds = d.shape[0] * d.shape[1] * cfg.rounds
-    print(f"10k processes x 64 rounds x {sched.m_total} msg slots "
-          f"in {dt:.1f}s ({cell_rounds/dt/1e6:.0f}M cell-round updates/s)")
-    print(f"violations={rep['violations']} missing={rep['missing']} "
-          f"delivered={rep['delivered_frac']:.3f} "
-          f"mean_latency={rep['mean_latency']:.2f} rounds")
-    assert rep["violations"] == 0
+def part2(n: int = 10_000):
+    print(f"\n== vectorized engine (N={n}) ==")
+    rep = run(_spec("vec", n, delay=2))
+    assert rep.oracle.ok, rep.oracle.summary()
+    assert rep.delivered_frac == 1.0
+    snap = rep.result.snapshot
+    snap_t = int(rep.scenario.add_round[-1])
+    srcs = list(range(0, n, max(1, n // 10)))
+    sp_s = mean_shortest_path_vec(snap["adj"], safe_out_mask(snap), srcs,
+                                  unreachable_penalty=float(n))
+    sp_a = mean_shortest_path_vec(snap["adj"], full_out_mask(snap), srcs,
+                                  unreachable_penalty=float(n))
+    mu, mb, _ = unsafe_link_stats_vec(snap, snap_t, rep.m_app)
+    cells = rep.n * (rep.m_app + rep.scenario.n_adds) * rep.rounds
+    print(f"{n} processes x {rep.rounds} rounds in "
+          f"{rep.wall_seconds:.1f}s "
+          f"({cells / max(rep.wall_seconds, 1e-9) / 1e6:.0f}M "
+          f"cell-round updates/s)")
+    print(f"delivered={rep.delivered_frac:.3f} "
+          f"mean_latency={rep.mean_latency:.2f} rounds  "
+          f"sp_safe={sp_s:.2f} sp_all={sp_a:.2f} "
+          f"unsafe/proc={mu:.4f} buffered={mb:.4f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,36 @@
+"""repro.api — the declarative experiment front door.
+
+One spec, one call, every engine::
+
+    from repro.api import RunSpec, TrafficSpec, run
+
+    report = run(RunSpec(protocol="pc", n=10_000,
+                         traffic=TrafficSpec(kind="poisson", rate=50.0,
+                                             messages=5_000)))
+    print(report.stats, report.extras["overhead_bytes_per_msg"])
+
+A :class:`RunSpec` (``spec.py``) names protocol × engine × backend ×
+topology × traffic × dynamics × window × metrics as validated dataclass
+sections; the string-keyed registries (``registry.py``) make each axis
+pluggable; :func:`run` (``run.py``) dispatches to the exact event
+engine, the monolithic vec engine, or the streaming windowed engine —
+auto-selected from an N×M memory budget when unspecified — and returns
+a uniform :class:`RunReport`.  ``python -m repro.api`` exposes the same
+surface as a CLI accepting spec JSON or flags.  DESIGN.md §3 documents
+the schema, the registry keys, and the auto-selection rule.
+"""
+
+from ..core.vecsim import TrafficModel
+from .registry import (ENGINES, PROTOCOLS, SCENARIOS, TOPOLOGIES, TRAFFIC,
+                       ProtocolEntry, Registry, ScenarioEntry)
+from .run import RunReport, build_scenario, run, select_engine
+from .spec import (DynamicsSpec, MetricsSpec, RunSpec, SpecError,
+                   TopologySpec, TrafficSpec, WindowSpec)
+
+__all__ = [
+    "RunSpec", "TopologySpec", "TrafficSpec", "DynamicsSpec", "WindowSpec",
+    "MetricsSpec", "SpecError",
+    "run", "RunReport", "build_scenario", "select_engine",
+    "Registry", "ProtocolEntry", "ScenarioEntry", "TrafficModel",
+    "PROTOCOLS", "ENGINES", "TOPOLOGIES", "TRAFFIC", "SCENARIOS",
+]

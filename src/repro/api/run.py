@@ -1,0 +1,296 @@
+"""``repro.api.run`` — one front door for every protocol experiment.
+
+``run(spec)`` resolves every axis of a validated :class:`RunSpec`
+through the registries, builds (or accepts) the scenario, picks the
+engine, executes, and returns a uniform :class:`RunReport` whatever ran
+underneath — the exact event simulator, the monolithic vec engine, the
+streaming windowed engine, or the vectorized vector-clock baseline.
+
+Engine auto-selection (DESIGN.md §3): with ``engine="auto"``,
+
+  1. an explicit ``window.window`` selects the streaming engine;
+  2. otherwise the monolithic vec engine runs iff its two dense
+     ``(N, M_total)`` int32 planes fit the spec's memory budget
+     (``8·N·M_total <= memory_budget_mb``);
+  3. otherwise the streaming windowed engine runs with
+     ``window = clamp(budget // (8·N), 64, M_total)`` live columns.
+
+The exact event engine is never auto-selected — it is the O(objects)
+reference implementation and must be asked for by name.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core.metrics import overhead_per_message
+from ..core.oracle import OracleReport, check_trace
+from ..core.types import NetStats
+from ..core.vecsim import crossval as _crossval
+from ..core.vecsim import stream as _stream
+from ..core.vecsim.metrics import build_trace
+from ..core.vecsim.scenario import VecScenario
+from ..core.vecsim.sim import execute_vec, resolve_backend
+from ..core.vecsim.vc import run_vec_vc
+from .registry import ENGINES, PROTOCOLS, SCENARIOS
+from .spec import RunSpec, SpecError
+
+__all__ = ["RunReport", "run", "build_scenario", "select_engine"]
+
+
+@dataclass
+class RunReport:
+    """Uniform result of :func:`run`, whatever engine executed."""
+
+    spec: RunSpec
+    engine: str                # engine that actually ran
+    backend: str               # resolved backend ("object" for exact)
+    window: Optional[int]      # live columns (windowed engine only)
+    wall_seconds: float
+    n: int
+    m_app: int
+    rounds: int                # scenario rounds (0 for the exact engine)
+    stats: NetStats
+    delivered_frac: float
+    mean_latency: float        # rounds (vec) / sim-time units (exact)
+    extras: Dict[str, float] = field(default_factory=dict)
+    oracle: Optional[OracleReport] = None
+    crossval_ok: Optional[bool] = None
+    result: Any = None         # the raw engine result object
+    scenario: Any = None       # the VecScenario that ran
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-safe summary (drops the raw result and scenario)."""
+        try:
+            spec_d = self.spec.to_dict()
+        except SpecError:
+            spec_d = {"scenario": "prebuilt"}
+        return dict(
+            spec=spec_d, engine=self.engine, backend=self.backend,
+            window=self.window, wall_seconds=round(self.wall_seconds, 4),
+            n=self.n, m_app=self.m_app, rounds=self.rounds,
+            stats=vars(self.stats).copy(),
+            delivered_frac=self.delivered_frac,
+            mean_latency=self.mean_latency,
+            extras={k: (v if isinstance(v, (int, str)) else float(v))
+                    for k, v in self.extras.items()},
+            oracle_ok=None if self.oracle is None else self.oracle.ok,
+            crossval_ok=self.crossval_ok,
+        )
+
+
+# --------------------------------------------------------------------- #
+# Scenario construction and engine selection
+# --------------------------------------------------------------------- #
+def build_scenario(spec: RunSpec) -> VecScenario:
+    """Resolve the spec's topology/traffic/dynamics sections into a
+    :class:`VecScenario` (or pass through a prebuilt one)."""
+    if spec.scenario is not None:
+        scn = spec.scenario
+    else:
+        scn = SCENARIOS.get(spec.dynamics.kind).build(spec)
+    proto = PROTOCOLS.get(spec.protocol)
+    want_mode = proto.mode if proto.mode is not None else scn.mode
+    if scn.mode != want_mode or scn.always_gate != spec.always_gate:
+        scn = replace(scn, mode=want_mode,
+                      always_gate=spec.always_gate).validate()
+    return scn
+
+
+def _auto_window(spec: RunSpec, scn: VecScenario) -> int:
+    """The budget-derived window (DESIGN.md §3.3 rule 3):
+    ``clamp(budget // (8·N), 64, M_total)`` live columns."""
+    budget = spec.memory_budget_mb * 2 ** 20
+    return int(min(max(64, budget // (8 * scn.n)), scn.m_total))
+
+
+def select_engine(spec: RunSpec, scn: VecScenario
+                  ) -> Tuple[str, Optional[int]]:
+    """Apply the DESIGN.md §3 auto-selection rule; explicit engines pass
+    through unchanged (with the spec's window, if any — validate()
+    rejects a window on the monolithic/exact engines)."""
+    if spec.engine != "auto":
+        return spec.engine, spec.window.window
+    if spec.window.window is not None:
+        return "windowed", spec.window.window
+    proto = PROTOCOLS.get(spec.protocol)
+    budget = spec.memory_budget_mb * 2 ** 20
+    mono_bytes = 8 * scn.n * max(scn.m_total, 1)
+    if mono_bytes <= budget or not proto.windowed:
+        return "vec", None
+    return "windowed", _auto_window(spec, scn)
+
+
+def _snapshot_round(spec: RunSpec, scn: VecScenario) -> Optional[int]:
+    snap = spec.metrics.snapshot
+    if snap == "last_churn":
+        return int(scn.add_round[-1]) if scn.n_adds else None
+    return snap
+
+
+# --------------------------------------------------------------------- #
+# Engine adapters (registered under repro.api.ENGINES)
+# --------------------------------------------------------------------- #
+def _latency_from_trace(trace) -> float:
+    t_bcast: Dict[Tuple[int, int], float] = {}
+    lat_sum, lat_cnt = 0.0, 0
+    for t, kind, pid, m in trace:
+        if kind not in ("broadcast", "deliver"):
+            continue                      # open/close/crash carry no AppMsg
+        key = (m.origin, m.counter)
+        if kind == "broadcast":
+            t_bcast[key] = t
+        elif key in t_bcast:
+            lat_sum += t - t_bcast[key]
+            lat_cnt += 1
+    return lat_sum / lat_cnt if lat_cnt else float("nan")
+
+
+def _run_exact(spec: RunSpec, scn: VecScenario, window: Optional[int],
+               snapshot_round: Optional[int]):
+    net = _crossval.run_exact(scn, seed=spec.seed, protocol=spec.protocol,
+                              snapshot_round=snapshot_round)
+    n_bcast = sum(1 for _, kind, _, _ in net.trace if kind == "broadcast")
+    alive = sum(1 for p in net.procs.values() if not p.crashed)
+    frac = (net.stats.deliveries / (alive * n_bcast)
+            if alive * n_bcast else 1.0)
+    extras: Dict[str, float] = {
+        "overhead_bytes_per_msg": overhead_per_message(net)}
+    if spec.protocol == "vc":
+        comparisons = sum(p.comparisons for p in net.procs.values())
+        extras["comparisons_per_delivery"] = (
+            comparisons / max(net.stats.deliveries, 1))
+        extras["max_pending"] = max(p.max_pending
+                                    for p in net.procs.values())
+        extras["space_entries_max"] = max(p.local_space_entries()
+                                          for p in net.procs.values())
+    return net, net.stats, frac, _latency_from_trace(net.trace), extras
+
+
+def _vec_extras(spec: RunSpec, res) -> Dict[str, float]:
+    if spec.protocol == "vc":
+        return {
+            "overhead_bytes_per_msg": res.overhead_bytes_per_message(),
+            "comparisons_per_delivery": res.comparisons_per_delivery(),
+            "max_pending": res.max_pending,
+            "space_entries_max": int((res.vc > 0).sum(axis=1).max()),
+        }
+    return {
+        "overhead_bytes_per_msg": res.stats.control_bytes
+        / max(res.stats.sent_messages, 1),
+        "gated_link_rounds": int(res.series[:, 5].sum()),
+        "pongs": int(res.series[:, 4].sum()),
+    }
+
+
+def _run_vec(spec: RunSpec, scn: VecScenario, window: Optional[int],
+             snapshot_round: Optional[int]):
+    if spec.protocol == "vc":
+        if snapshot_round is not None:
+            raise SpecError("metrics.snapshot is not supported for the "
+                            "'vc' protocol (it has no gating state to "
+                            "snapshot)")
+        res = run_vec_vc(scn)
+    else:
+        res = execute_vec(scn, backend=spec.backend,
+                          snapshot_round=snapshot_round)
+    return (res, res.stats, res.delivered_frac(), res.mean_latency(),
+            _vec_extras(spec, res))
+
+
+def _run_windowed(spec: RunSpec, scn: VecScenario, window: Optional[int],
+                  snapshot_round: Optional[int]):
+    if window is None:
+        # explicit engine="windowed" without a window: apply the budget rule
+        window = _auto_window(spec, scn)
+    res = _stream.execute_windowed(
+        scn, window, backend=spec.backend, horizon=spec.window.horizon,
+        seg_len=spec.window.seg_len, snapshot_round=snapshot_round,
+        collect=spec.window.collect)
+    extras = _vec_extras(spec, res)
+    extras["peak_live"] = res.peak_live
+    extras["expired_columns"] = int(res.expired.sum())
+    return (res, res.stats, res.delivered_frac(), res.mean_latency(),
+            extras)
+
+
+ENGINES.register("exact", _run_exact)
+ENGINES.register("vec", _run_vec)
+ENGINES.register("windowed", _run_windowed)
+
+
+# --------------------------------------------------------------------- #
+# The front door
+# --------------------------------------------------------------------- #
+def run(spec: RunSpec) -> RunReport:
+    """Validate ``spec``, build the scenario, pick the engine, execute,
+    and measure — the one entry point every benchmark and example uses."""
+    spec.validate()
+    scn = build_scenario(spec)
+    engine_name, window = select_engine(spec, scn)
+    snapshot_round = _snapshot_round(spec, scn)
+    runner = ENGINES.get(engine_name)
+
+    t0 = time.perf_counter()
+    result, stats, frac, latency, extras = runner(spec, scn, window,
+                                                  snapshot_round)
+    wall = time.perf_counter() - t0
+
+    if engine_name == "exact":
+        backend = "object"
+    elif spec.protocol == "vc":
+        backend = "numpy"
+    else:
+        backend = getattr(result, "backend", resolve_backend(spec.backend))
+
+    report = RunReport(
+        spec=spec, engine=engine_name, backend=backend,
+        # the result records the window actually used (covers explicit
+        # engine="windowed" with the budget-derived default)
+        window=(getattr(result, "window", window)
+                if engine_name == "windowed" else None),
+        wall_seconds=wall, n=scn.n, m_app=scn.m_app, rounds=scn.rounds,
+        stats=stats, delivered_frac=frac, mean_latency=latency,
+        extras=extras, result=result, scenario=scn)
+
+    if spec.metrics.oracle:
+        report.oracle = _check_oracle(spec, scn, engine_name, result)
+    if spec.metrics.crossval:
+        report.crossval_ok = _check_crossval(spec, scn, report.window,
+                                             engine_name, result)
+    return report
+
+
+def _check_oracle(spec: RunSpec, scn: VecScenario, engine: str, result):
+    if engine == "exact":
+        crashed = {pid for pid, p in result.procs.items() if p.crashed}
+        return check_trace(result.trace, crashed=crashed,
+                           all_pids=set(range(scn.n)))
+    if getattr(result, "delivered", None) is None:
+        raise SpecError(
+            "metrics.oracle needs the full delivered matrix; set "
+            "window.collect='full' (aggregate-mode windowed runs keep "
+            "only per-message counters)")
+    crashed = set(np.nonzero(result.state["crashed"])[0].tolist())
+    return check_trace(build_trace(result), crashed=crashed,
+                       all_pids=set(range(scn.n)))
+
+
+def _check_crossval(spec: RunSpec, scn: VecScenario,
+                    window: Optional[int], engine: str, result) -> bool:
+    # reuse the run we just executed when it carries the full delivered
+    # matrix; the exact engine's own run can't serve as the vec side
+    reuse = (result if engine != "exact"
+             and getattr(result, "delivered", None) is not None else None)
+    out = _crossval.cross_validate(
+        scn, seed=spec.seed, backend=resolve_backend(spec.backend)
+        if spec.protocol != "vc" else "numpy",
+        window=window, protocol=spec.protocol, vec_result=reuse)
+    ok = out["vec_multiset"] == out["exact_multiset"]
+    if spec.protocol == "vc":
+        ok = ok and out["vec_clocks"] == out["exact_clocks"]
+    return bool(ok)

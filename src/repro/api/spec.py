@@ -1,0 +1,223 @@
+"""Declarative experiment specs: the one description every engine runs.
+
+A :class:`RunSpec` names a complete protocol experiment — protocol,
+engine, backend, population, topology, traffic, dynamics, windowing and
+metrics — as composable frozen dataclass sections.  ``repro.api.run``
+turns one into a :class:`~repro.api.run.RunReport` by dispatching
+through the string-keyed registries (``repro.api.registry``), so the
+exact event engine, the monolithic vec engine and the streaming
+windowed engine are all reachable from the same object, and a spec
+round-trips through JSON for CLI / CI use (``python -m repro.api``).
+
+Validation is eager and informative: :meth:`RunSpec.validate` raises
+:class:`SpecError` naming the offending field and the valid registry
+keys, so a typo fails at spec time, not three layers into an engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Union
+
+__all__ = ["SpecError", "TopologySpec", "TrafficSpec", "DynamicsSpec",
+           "WindowSpec", "MetricsSpec", "RunSpec"]
+
+
+class SpecError(ValueError):
+    """An invalid or inconsistent :class:`RunSpec`."""
+
+
+@dataclass(frozen=True)
+class TopologySpec:
+    """Initial overlay shape (registry: ``repro.api.TOPOLOGIES``)."""
+
+    kind: str = "ring"        # ring | kregular | smallworld
+    k: int = 4                # out-link slots per process
+    max_delay: int = 3        # per-link delay drawn from [1, max_delay]
+    beta: float = 0.2         # smallworld rewiring probability
+    free_slots: int = 1       # trailing slots left empty for additions
+
+
+@dataclass(frozen=True)
+class TrafficSpec:
+    """Broadcast load shape (registry: ``repro.api.TRAFFIC``)."""
+
+    kind: str = "uniform"     # uniform | poisson | bursty
+    messages: int = 8         # total app broadcasts (m_app)
+    rate: float = 4.0         # poisson/bursty mean broadcasts per round
+    rate_lo: Optional[float] = None   # bursty off-phase rate (default rate/8)
+    period: int = 64          # bursty on/off period in rounds
+    duty: float = 0.25        # fraction of each period at the high rate
+
+
+@dataclass(frozen=True)
+class DynamicsSpec:
+    """Overlay dynamics family (registry: ``repro.api.SCENARIOS``)."""
+
+    kind: str = "none"        # none | link_add | churn | crash |
+    #                           partition_heal | churn_wave
+    n_adds: Optional[int] = None
+    n_rms: Optional[int] = None
+    n_crashes: int = 2
+    waves: int = 3
+    churn_window: Optional[int] = None
+    n_bridge: int = 1
+    traffic_during_partition: bool = False
+
+
+@dataclass(frozen=True)
+class WindowSpec:
+    """Streaming windowed-engine knobs (``vecsim.stream``)."""
+
+    window: Optional[int] = None   # live columns; None = auto from budget
+    seg_len: int = 32              # rounds per segment between retirements
+    horizon: Optional[int] = None  # force-retire columns older than this
+    collect: str = "auto"          # full | aggregate | auto
+
+
+@dataclass(frozen=True)
+class MetricsSpec:
+    """What to measure beyond the engine's NetStats."""
+
+    snapshot: Optional[Union[int, str]] = None  # round | "last_churn"
+    oracle: bool = False       # happens-before oracle on the trace
+    crossval: bool = False     # replay on the exact engine and compare
+
+
+@dataclass(frozen=True)
+class RunSpec:
+    """One experiment, declaratively: ``repro.api.run(RunSpec(...))``."""
+
+    protocol: str = "pc"       # pc | r | vc   (repro.api.PROTOCOLS)
+    engine: str = "auto"       # auto | exact | vec | windowed
+    backend: str = "auto"      # auto | numpy | jax
+    n: int = 64                # processes
+    seed: int = 0
+    pong_delay: int = 1
+    always_gate: bool = False  # paper-faithful unconditional gating
+    memory_budget_mb: int = 1024   # N×M budget driving engine auto-select
+    topology: TopologySpec = field(default_factory=TopologySpec)
+    traffic: TrafficSpec = field(default_factory=TrafficSpec)
+    dynamics: DynamicsSpec = field(default_factory=DynamicsSpec)
+    window: WindowSpec = field(default_factory=WindowSpec)
+    metrics: MetricsSpec = field(default_factory=MetricsSpec)
+    # Escape hatch: run a prebuilt VecScenario (topology/traffic/dynamics
+    # sections are then ignored).  Used by the legacy shims and tests.
+    scenario: Optional[Any] = None
+
+    # ----------------------------------------------------------------- #
+    # validation
+    # ----------------------------------------------------------------- #
+    def validate(self) -> "RunSpec":
+        from . import registry as reg
+
+        def check_key(registry, value, fld):
+            if value not in registry:
+                raise SpecError(
+                    f"{fld}={value!r} is not a registered key; choose "
+                    f"from {sorted(registry.keys())}")
+
+        for fld, value in (("n", self.n), ("seed", self.seed),
+                           ("pong_delay", self.pong_delay),
+                           ("memory_budget_mb", self.memory_budget_mb)):
+            if not isinstance(value, int) or isinstance(value, bool):
+                raise SpecError(f"{fld}={value!r} must be an int")
+        check_key(reg.PROTOCOLS, self.protocol, "protocol")
+        if self.engine not in ("auto",) and self.engine not in reg.ENGINES:
+            raise SpecError(
+                f"engine={self.engine!r} must be 'auto' or one of "
+                f"{sorted(reg.ENGINES.keys())}")
+        if self.backend not in ("auto", "numpy", "jax"):
+            raise SpecError(f"backend={self.backend!r} must be one of "
+                            f"['auto', 'jax', 'numpy']")
+        if self.n < 2:
+            raise SpecError(f"n={self.n} must be >= 2")
+        if self.memory_budget_mb < 1:
+            raise SpecError("memory_budget_mb must be >= 1")
+        if self.scenario is None:
+            check_key(reg.TOPOLOGIES, self.topology.kind, "topology.kind")
+            check_key(reg.TRAFFIC, self.traffic.kind, "traffic.kind")
+            check_key(reg.SCENARIOS, self.dynamics.kind, "dynamics.kind")
+            if self.topology.k < 2:
+                raise SpecError(f"topology.k={self.topology.k} must be >= 2")
+            if self.topology.max_delay < 1:
+                raise SpecError("topology.max_delay must be >= 1")
+            if self.traffic.messages < 0:
+                raise SpecError("traffic.messages must be >= 0")
+            if self.traffic.kind != "uniform" and self.traffic.rate <= 0:
+                raise SpecError("traffic.rate must be > 0 for "
+                                f"{self.traffic.kind!r} traffic")
+            reg.SCENARIOS.get(self.dynamics.kind).check(self)
+        if self.window.window is not None and self.window.window < 1:
+            raise SpecError("window.window must be >= 1")
+        if self.window.seg_len < 1:
+            raise SpecError("window.seg_len must be >= 1")
+        if self.window.collect not in ("auto", "full", "aggregate"):
+            raise SpecError(f"window.collect={self.window.collect!r} must "
+                            "be one of ['aggregate', 'auto', 'full']")
+        proto = reg.PROTOCOLS.get(self.protocol)
+        wants_window = (self.engine == "windowed"
+                        or self.window.window is not None)
+        if wants_window and not proto.windowed:
+            raise SpecError(
+                f"protocol {self.protocol!r} has no windowed engine "
+                "(its state is O(N·m_app) already); use engine='vec' "
+                "and drop window.window")
+        if self.window.window is not None \
+                and self.engine in ("vec", "exact"):
+            raise SpecError(
+                f"window.window={self.window.window} only applies to "
+                f"engine 'windowed' or 'auto' (got engine="
+                f"{self.engine!r}); the monolithic/exact engines would "
+                "silently ignore it")
+        if self.backend == "jax" and self.protocol == "vc":
+            raise SpecError("protocol 'vc' is numpy-only (the delivery "
+                            "drain is a data-dependent host loop); use "
+                            "backend='numpy' or 'auto'")
+        snap = self.metrics.snapshot
+        if snap is not None and not (isinstance(snap, int)
+                                     or snap == "last_churn"):
+            raise SpecError(f"metrics.snapshot={snap!r} must be a round "
+                            "number or 'last_churn'")
+        return self
+
+    # ----------------------------------------------------------------- #
+    # JSON round-trip
+    # ----------------------------------------------------------------- #
+    def to_dict(self) -> Dict[str, Any]:
+        if self.scenario is not None:
+            raise SpecError("a spec carrying a prebuilt scenario object "
+                            "cannot be serialized to JSON")
+        return dataclasses.asdict(replace(self, scenario=None))
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "RunSpec":
+        """Build a spec from a (possibly partial) nested dict — unknown
+        keys raise, missing keys take the dataclass defaults."""
+        sections = dict(topology=TopologySpec, traffic=TrafficSpec,
+                        dynamics=DynamicsSpec, window=WindowSpec,
+                        metrics=MetricsSpec)
+        kw: Dict[str, Any] = {}
+        top_fields = {f.name for f in dataclasses.fields(cls)}
+        for key, value in d.items():
+            if key not in top_fields:
+                raise SpecError(f"unknown RunSpec field {key!r}; valid "
+                                f"fields: {sorted(top_fields)}")
+            if key in sections:
+                sect_cls = sections[key]
+                if not isinstance(value, dict):
+                    raise SpecError(
+                        f"{key} must be an object of "
+                        f"{sect_cls.__name__} fields, got {value!r} — "
+                        f"e.g. {{\"{key}\": {{\"kind\": ...}}}}")
+                sect_fields = {f.name for f in dataclasses.fields(sect_cls)}
+                bad = set(value) - sect_fields
+                if bad:
+                    raise SpecError(
+                        f"unknown {key} field(s) {sorted(bad)}; valid "
+                        f"fields: {sorted(sect_fields)}")
+                kw[key] = sect_cls(**value)
+            else:
+                kw[key] = value
+        return cls(**kw)

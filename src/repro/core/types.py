@@ -21,7 +21,18 @@ import random
 from dataclasses import dataclass
 from typing import Callable
 
-__all__ = ["NetStats", "DelayFn", "constant_delay", "uniform_delay"]
+__all__ = ["NetStats", "DelayFn", "constant_delay", "uniform_delay",
+           "LegacyEntryPointWarning"]
+
+
+class LegacyEntryPointWarning(DeprecationWarning):
+    """Emitted by the pre-``repro.api`` entry points (``run_vec``,
+    ``run_vec_windowed``).  They keep their exact signatures and behavior,
+    but new code should go through the one front door —
+    ``repro.api.run(RunSpec(...))`` — which dispatches to the same engine
+    implementations.  CI runs the in-repo benchmarks and examples with
+    this category escalated to an error, so nothing shipped in the repo
+    regresses onto the legacy surface."""
 
 # A transmission-delay model: (current time, rng) -> delay.
 DelayFn = Callable[[float, random.Random], float]

@@ -20,36 +20,49 @@ Modules:
               partition-heal, churn waves, sustained streams)
   sim       — the lockstep engine, both backends, NetStats emission
   stream    — streaming windowed execution in O(N·window) memory
+  vc        — the vector-clock baseline, vectorized and measured
+              (Table 1's O(N)/O(W·N) columns; DESIGN.md §3.4)
   metrics   — Fig. 7 metrics, oracle-compatible traces, multisets
   crossval  — replay the same scenario on the exact engine and compare
 
+The spec-driven front door over all of this is ``repro.api``
+(DESIGN.md §3); ``run_vec``/``run_vec_windowed`` remain as deprecation
+shims over the engine impls (``execute_vec``/``execute_windowed``).
 Semantics and fidelity limits vs. the exact simulator: DESIGN.md §2.4.
 """
 
-from .crossval import cross_validate, delivered_multiset_exact, run_exact
+from .crossval import (cross_validate, delivered_multiset_exact,
+                       final_clocks_exact, run_exact)
 from .metrics import (build_trace, delivered_multiset, full_out_mask,
                       mean_shortest_path_vec, safe_out_mask,
                       unsafe_link_stats_vec, vc_overhead_model)
-from .scenario import (INF, VecScenario, bursty_traffic, churn_scenario,
-                       churn_wave_scenario, crash_scenario,
-                       kregular_topology, link_add_scenario,
+from .scenario import (INF, TrafficModel, VecScenario, bursty_traffic,
+                       churn_scenario, churn_wave_scenario, crash_scenario,
+                       diameter_bound, kregular_topology, link_add_scenario,
                        partition_heal_scenario, poisson_traffic,
                        ring_topology, settle_rounds, smallworld_topology,
                        static_scenario, sustained_scenario)
-from .sim import SERIES_FIELDS, SlotSchedule, VecRunResult, run_vec
-from .stream import WindowedRunResult, WindowOverflowError, run_vec_windowed
+from .sim import (SERIES_FIELDS, SlotSchedule, VecRunResult, execute_vec,
+                  run_vec)
+from .stream import (WindowedRunResult, WindowOverflowError,
+                     execute_windowed, run_vec_windowed)
+from .vc import VCVecRunResult, run_vec_vc
 
 __all__ = [
     "INF", "VecScenario", "ring_topology", "kregular_topology",
-    "smallworld_topology", "settle_rounds",
-    "poisson_traffic", "bursty_traffic",
+    "smallworld_topology", "settle_rounds", "diameter_bound",
+    "poisson_traffic", "bursty_traffic", "TrafficModel",
     "static_scenario", "link_add_scenario", "churn_scenario",
     "crash_scenario", "partition_heal_scenario", "churn_wave_scenario",
     "sustained_scenario",
     "SERIES_FIELDS", "SlotSchedule", "VecRunResult", "run_vec",
+    "execute_vec",
     "WindowedRunResult", "WindowOverflowError", "run_vec_windowed",
+    "execute_windowed",
+    "VCVecRunResult", "run_vec_vc",
     "safe_out_mask", "full_out_mask", "mean_shortest_path_vec",
     "unsafe_link_stats_vec", "build_trace", "delivered_multiset",
     "vc_overhead_model",
-    "run_exact", "delivered_multiset_exact", "cross_validate",
+    "run_exact", "delivered_multiset_exact", "final_clocks_exact",
+    "cross_validate",
 ]

@@ -32,23 +32,43 @@ from ..events import Network
 from ..oracle import OracleReport, check_trace
 from ..pcbroadcast import PCBroadcast
 from ..rbroadcast import RBroadcast
+from ..vector_clock import VCBroadcast
 from .metrics import build_trace, delivered_multiset
 from .scenario import VecScenario
-from .sim import VecRunResult, run_vec
+from .sim import VecRunResult, execute_vec
+from .vc import run_vec_vc
 
-__all__ = ["run_exact", "delivered_multiset_exact", "cross_validate"]
+__all__ = ["run_exact", "delivered_multiset_exact", "final_clocks_exact",
+           "cross_validate"]
 
 
-def run_exact(scn: VecScenario, seed: int = 0) -> Network:
-    """Replay ``scn`` on the exact event simulator and run to quiescence."""
+def run_exact(scn: VecScenario, seed: int = 0,
+              protocol: Optional[str] = None,
+              snapshot_round: Optional[int] = None) -> Network:
+    """Replay ``scn`` on the exact event simulator and run to quiescence.
+
+    ``protocol`` — ``"pc"``/``"r"``/``"vc"``; defaults to ``scn.mode``.
+    ``"vc"`` runs the vector-clock baseline (``core.vector_clock``), for
+    which the link-safety schedule fields are plain topology changes.
+
+    ``snapshot_round`` — capture the Fig. 7 graph metrics right after
+    that round (at sim time ``snapshot_round + 0.5``, i.e. after every
+    integer-time event of the round) onto ``net.snapshot_graphs``:
+    ``{"safe": .., "full": .., "unsafe": unsafe_link_stats tuple}`` —
+    the exact-engine twin of the vec engines' state snapshot."""
+    protocol = scn.mode if protocol is None else protocol
     net = Network(seed=seed, default_delay=1.0,
                   oob_delay=float(scn.pong_delay))
     for pid in range(scn.n):
-        if scn.mode == "pc":
+        if protocol == "pc":
             proc = PCBroadcast(pid, ping_mode="flood",
                                always_gate=scn.always_gate)
-        else:
+        elif protocol == "vc":
+            proc = VCBroadcast(pid)
+        elif protocol == "r":
             proc = RBroadcast(pid)
+        else:
+            raise ValueError(f"unknown protocol {protocol!r}")
         net.add_process(proc)
     for p in range(scn.n):
         for kk in range(scn.k):
@@ -93,6 +113,14 @@ def run_exact(scn: VecScenario, seed: int = 0) -> Network:
         else:
             net.call_later(float(t), lambda o=int(scn.bcast_origin[e]):
                            do_broadcast(o))
+    if snapshot_round is not None:
+        from ..metrics import full_graph, safe_graph, unsafe_link_stats
+
+        def capture():
+            net.snapshot_graphs = dict(safe=safe_graph(net),
+                                       full=full_graph(net),
+                                       unsafe=unsafe_link_stats(net))
+        net.call_later(float(snapshot_round) + 0.5, capture)
     net.run()
     assert net.idle(), "exact replay did not quiesce"
     return net
@@ -107,22 +135,48 @@ def delivered_multiset_exact(net: Network) -> List[Tuple[int, int, int]]:
     return out
 
 
+def final_clocks_exact(net: Network) -> List[Dict[int, int]]:
+    """Per-process ``VCBroadcast.vc`` dicts (pid order) from an exact
+    vector-clock replay, for byte-level clock cross-validation."""
+    return [dict(net.procs[pid].vc) for pid in sorted(net.procs)]
+
+
 def cross_validate(scn: VecScenario, seed: int = 0,
                    backend: str = "numpy",
-                   window: Optional[int] = None) -> Dict[str, object]:
+                   window: Optional[int] = None,
+                   protocol: Optional[str] = None,
+                   vec_result=None) -> Dict[str, object]:
     """Run both engines on ``scn``; return multisets + oracle reports.
     ``window`` routes the vec run through the streaming windowed engine
     (with the full delivered matrix collected), so windowed execution is
-    cross-validated against the exact simulator the same way."""
-    res = run_vec(scn, backend=backend, window=window,
-                  collect=None if window is None else "full")
-    net = run_exact(scn, seed=seed)
+    cross-validated against the exact simulator the same way.
+    ``protocol`` defaults to ``scn.mode``; ``"vc"`` cross-validates the
+    vectorized vector-clock baseline (``vecsim.vc``) against
+    ``core.vector_clock`` — the result then additionally carries
+    ``vec_clocks``/``exact_clocks`` (per-process final clock dicts),
+    which must be byte-identical.
+
+    ``vec_result`` — a vec-engine result of the *same scenario* already
+    in hand (it must carry the full delivered matrix); skips the vec
+    re-execution, leaving only the exact replay to run."""
+    protocol = scn.mode if protocol is None else protocol
+    if vec_result is not None and vec_result.delivered is not None:
+        res = vec_result
+    elif protocol == "vc":
+        if window is not None:
+            raise ValueError("the vector-clock vec engine has no windowed "
+                             "mode (its buffers are O(N·m_app) already)")
+        res = run_vec_vc(scn)
+    else:
+        res = execute_vec(scn, backend=backend, window=window,
+                          collect=None if window is None else "full")
+    net = run_exact(scn, seed=seed, protocol=protocol)
     crashed: Set[int] = set(np.nonzero(res.state["crashed"])[0].tolist())
     vec_rep = check_trace(build_trace(res), crashed=crashed,
                           all_pids=set(range(scn.n)))
     exact_rep = check_trace(net.trace, crashed=crashed,
                             all_pids=set(range(scn.n)))
-    return dict(
+    out = dict(
         vec=res,
         exact=net,
         vec_multiset=delivered_multiset(res),
@@ -130,3 +184,7 @@ def cross_validate(scn: VecScenario, seed: int = 0,
         vec_report=vec_rep,
         exact_report=exact_rep,
     )
+    if protocol == "vc":
+        out["vec_clocks"] = res.final_clocks()
+        out["exact_clocks"] = final_clocks_exact(net)
+    return out

@@ -185,6 +185,13 @@ def vc_overhead_model(res: VecRunResult) -> Tuple[float, float]:
     """(mean control bytes/message, mean vector comparisons/delivery) a
     vector-clock baseline would have paid on the same causal run.
 
+    This is the *analytic approximation* that predated the measured
+    vectorized VC protocol (``vecsim.vc.run_vec_vc``); benchmarks now
+    report the measurement and keep this as ``vc_model`` rows for
+    contrast (it counts 16 bytes per clock entry where the exact
+    engine's ``control_bytes`` charges 8, and weights by delivery
+    counts rather than actual sends).
+
     Derived from the vec delivery matrix rather than simulated: message
     ``i``'s piggybacked clock holds one entry per distinct origin its
     broadcaster had delivered from before broadcasting (plus itself) —

@@ -31,9 +31,10 @@ from typing import Optional, Tuple
 import numpy as np
 
 __all__ = ["INF", "VecScenario", "ring_topology", "kregular_topology",
-           "smallworld_topology", "settle_rounds", "poisson_traffic",
-           "bursty_traffic", "static_scenario", "link_add_scenario",
-           "churn_scenario", "crash_scenario", "partition_heal_scenario",
+           "smallworld_topology", "settle_rounds", "diameter_bound",
+           "poisson_traffic", "bursty_traffic", "TrafficModel",
+           "static_scenario", "link_add_scenario", "churn_scenario",
+           "crash_scenario", "partition_heal_scenario",
            "churn_wave_scenario", "sustained_scenario"]
 
 INF = np.int32(2 ** 30)
@@ -97,47 +98,150 @@ class VecScenario:
         return counters
 
     def validate(self) -> "VecScenario":
-        assert self.mode in ("pc", "r")
-        assert self.adj0.shape == (self.n, self.k)
-        assert self.delay0.shape == (self.n, self.k)
-        assert (self.delay0[self.adj0 >= 0] >= 1).all()
-        assert (np.diff(self.bcast_round) >= 0).all(), "broadcasts unsorted"
+        """Check every builder invariant, raising :class:`ValueError`
+        with an informative message (never a bare ``AssertionError`` —
+        the checks must survive ``python -O`` and read well from
+        ``repro.api`` spec errors)."""
+        def fail(msg: str):
+            raise ValueError(f"invalid VecScenario: {msg}")
+
+        if self.mode not in ("pc", "r"):
+            fail(f"mode={self.mode!r} must be 'pc' or 'r'")
+        if self.n < 1 or self.k < 1:
+            fail(f"n={self.n}, k={self.k} must be >= 1")
+        for name, a in (("adj0", self.adj0), ("delay0", self.delay0)):
+            if a.shape != (self.n, self.k):
+                fail(f"{name} shape {a.shape} != (n={self.n}, k={self.k})")
+        if (self.adj0 >= self.n).any() or (self.adj0 < -1).any():
+            fail("adj0 targets must be -1 (empty) or process ids in "
+                 f"[0, {self.n})")
+        if ((self.delay0 < 1) & (self.adj0 >= 0)).any():
+            fail("populated adj0 slots need delay0 >= 1 (a same-round "
+                 "hop has no exact-engine equivalent)")
+        # ragged schedules: every schedule is a parallel array group
+        groups = {
+            "bcast": (self.bcast_round, self.bcast_origin),
+            "add": (self.add_round, self.add_p, self.add_k, self.add_q,
+                    self.add_delay),
+            "rm": (self.rm_round, self.rm_p, self.rm_k),
+            "crash": (self.crash_round, self.crash_pid),
+        }
+        for gname, arrays in groups.items():
+            lens = {len(a) for a in arrays}
+            if len(lens) > 1:
+                fail(f"ragged {gname} schedule: column lengths "
+                     f"{sorted(len(a) for a in arrays)} differ")
+        if len(self.bcast_round) and (np.diff(self.bcast_round) < 0).any():
+            fail("bcast_round is not sorted")
+        for gname, ids, hi in (("bcast_origin", self.bcast_origin, self.n),
+                               ("add_p", self.add_p, self.n),
+                               ("add_q", self.add_q, self.n),
+                               ("rm_p", self.rm_p, self.n),
+                               ("crash_pid", self.crash_pid, self.n),
+                               ("add_k", self.add_k, self.k),
+                               ("rm_k", self.rm_k, self.k)):
+            if len(ids) and ((ids < 0).any() or (ids >= hi).any()):
+                fail(f"{gname} out of range: values must lie in [0, {hi})"
+                     f" (got min={int(ids.min())}, max={int(ids.max())})")
+        if len(self.add_delay) and (self.add_delay < 1).any():
+            fail("add_delay entries must be >= 1")
         pairs = set(zip(self.bcast_origin.tolist(), self.bcast_round.tolist()))
-        assert len(pairs) == self.m_app, "duplicate (origin, round) broadcast"
+        if len(pairs) != self.m_app:
+            fail("duplicate (origin, round) broadcast: per-origin message "
+                 "counters would diverge between the engines")
         # same-round adds must touch distinct processes (lockstep batching)
         for t in np.unique(self.add_round):
             ps = self.add_p[self.add_round == t]
-            assert len(set(ps.tolist())) == len(ps)
+            if len(set(ps.tolist())) != len(ps):
+                fail(f"two link additions at round {int(t)} share a "
+                     "process (same-round adds are batched against the "
+                     "same pre-round state)")
         # distinct out-targets per process, so every (p, slot) maps to one
         # (p, q) link in the exact-engine replay
         for p in range(self.n):
             tgt = [int(q) for q in self.adj0[p] if q >= 0]
-            assert len(set(tgt)) == len(tgt), f"duplicate out-target at {p}"
-            assert p not in tgt, f"self-link at {p}"
+            if len(set(tgt)) != len(tgt):
+                fail(f"bad slot table: duplicate out-target at process {p}"
+                     " (a vec slot removal must map to exactly one link)")
+            if p in tgt:
+                fail(f"bad slot table: self-link at process {p}")
         add_pk = list(zip(self.add_p.tolist(), self.add_k.tolist()))
-        assert len(set(add_pk)) == len(add_pk), "slot added twice (reuse " \
-            "of a slot mid-run is not modeled)"
+        if len(set(add_pk)) != len(add_pk):
+            fail("slot added twice (reuse of a slot mid-run is not "
+                 "modeled)")
         for e in range(self.n_adds):
             p, q = int(self.add_p[e]), int(self.add_q[e])
-            assert q != p, "add self-link"
+            if q == p:
+                fail(f"addition {e} is a self-link at process {p}")
             init = {int(x) for x in self.adj0[p] if x >= 0}
-            assert q not in init, f"add duplicates an initial target of {p}"
+            if q in init:
+                fail(f"addition {e} duplicates an initial target of {p}")
         # removals never touch the connectivity ring (slot 0) or overwrite
         # a scheduled addition's slot
         if len(self.rm_k):
-            assert (self.rm_k > 0).all(), "removal targets the ring slot"
-            add_slots = set(zip(self.add_p.tolist(), self.add_k.tolist()))
+            if (self.rm_k == 0).any():
+                fail("a removal targets slot 0 — the never-removed "
+                     "connectivity ring")
+            add_slots = set(add_pk)
             rm_slots = set(zip(self.rm_p.tolist(), self.rm_k.tolist()))
-            assert not (add_slots & rm_slots), "removal races an addition"
+            both = add_slots & rm_slots
+            if both:
+                fail(f"removal races an addition on slot(s) "
+                     f"{sorted(both)}")
         return self
 
 
-def settle_rounds(n: int, k: int, max_delay: int, pong_delay: int = 1) -> int:
+def settle_rounds(n: int, k: int, max_delay: int, pong_delay: int = 1,
+                  diam: Optional[int] = None) -> int:
     """Rounds needed after the last scheduled event for a broadcast to
-    flood the overlay and all ping phases to resolve (generous bound:
-    flooding diameter ~ log_{k-1} N hops, each up to ``max_delay``)."""
-    diam = math.ceil(math.log(max(n, 2)) / math.log(max(k - 1, 2))) + 3
+    flood the overlay and all ping phases to resolve.
+
+    Without ``diam`` this uses the expander heuristic (flooding diameter
+    ~ log_{k-1} N hops, each up to ``max_delay``) — fine for ring+random
+    and k-regular overlays, NOT sound for low-beta small-world lattices
+    whose diameter is Θ(n/k).  Builders that know the actual slot table
+    pass ``diam=diameter_bound(adj0)``, which makes the returned window
+    a *sound* delivery bound on static overlays: every broadcast
+    delivers everywhere within ``settle_rounds(...)`` rounds of its
+    broadcast round (property-tested in ``tests/test_vecsim_fuzz.py``)."""
+    if diam is None:
+        diam = math.ceil(math.log(max(n, 2)) / math.log(max(k - 1, 2))) + 3
     return (diam + 2) * max_delay + 2 * pong_delay + 6
+
+
+def diameter_bound(adj: np.ndarray) -> int:
+    """Sound upper bound on the directed hop diameter of a slot-table
+    graph: ``ecc_out(0) + ecc_in(0)`` (every u→w path via node 0 is at
+    most that long, and the true diameter never exceeds it).  Two
+    vectorized BFS sweeps, O(E) per level."""
+    n, k = adj.shape
+    mask = adj >= 0
+    src = np.repeat(np.arange(n), k)[mask.ravel()]
+    dst = adj.ravel()[mask.ravel()].astype(np.int64)
+
+    def ecc(forward: bool) -> int:
+        seen = np.zeros(n, bool)
+        frontier = np.zeros(n, bool)
+        seen[0] = frontier[0] = True
+        hops = 0
+        while True:
+            if forward:
+                cand = dst[frontier[src]]
+            else:
+                cand = src[frontier[dst]]
+            frontier = np.zeros(n, bool)
+            fresh = cand[~seen[cand]]
+            if not len(fresh):
+                break
+            seen[fresh] = frontier[fresh] = True
+            hops += 1
+        if not seen.all():
+            raise ValueError("slot table is not strongly connected "
+                             f"({int((~seen).sum())} unreachable "
+                             f"{'from' if forward else 'to'} process 0)")
+        return hops
+
+    return ecc(True) + ecc(False)
 
 
 def ring_topology(seed: int, n: int, k: int, max_delay: int = 3,
@@ -179,13 +283,17 @@ def _spread_broadcasts(rng, n: int, m_app: int, lo: int, hi: int):
 
 def static_scenario(seed: int, n: int, k: int = 4, m_app: int = 8,
                     max_delay: int = 3, mode: str = "pc",
-                    pong_delay: int = 1) -> VecScenario:
-    """Broadcast-only run on a static ring+random overlay."""
-    adj0, delay0 = ring_topology(seed, n, k, max_delay, free_slots=1)
+                    pong_delay: int = 1, topology: str = "ring",
+                    beta: float = 0.2) -> VecScenario:
+    """Broadcast-only run on a static overlay (``topology`` picks the
+    builder: ring+random, k-regular, or small-world with ``beta``)."""
+    adj0, delay0 = _build_topology(topology, seed, n, k, max_delay,
+                                   free_slots=1, beta=beta)
     rng = np.random.default_rng(seed + 1)
     window = max(2 * m_app, 8)
     bc_round, bc_origin = _spread_broadcasts(rng, n, m_app, 0, window)
-    rounds = window + settle_rounds(n, k, max_delay, pong_delay)
+    rounds = window + settle_rounds(n, k, max_delay, pong_delay,
+                                    diam=diameter_bound(adj0))
     return VecScenario(n=n, k=k, rounds=rounds, adj0=adj0, delay0=delay0,
                        bcast_round=bc_round, bcast_origin=bc_origin,
                        mode=mode, pong_delay=pong_delay).validate()
@@ -219,7 +327,8 @@ def _plan_adds(rng, n: int, k: int, adj0: np.ndarray, n_adds: int,
 
 def link_add_scenario(seed: int, n: int, k: int = 4, m_app: int = 10,
                       n_adds: Optional[int] = None, max_delay: int = 3,
-                      pong_delay: int = 1) -> VecScenario:
+                      pong_delay: int = 1, topology: str = "ring",
+                      beta: float = 0.2) -> VecScenario:
     """Static bootstrap, early broadcasts, then a batch of link additions
     that race with later broadcasts — the Fig. 3 shortcut situation that
     PC-broadcast's ping gating exists to make safe.  Additions happen
@@ -227,7 +336,8 @@ def link_add_scenario(seed: int, n: int, k: int = 4, m_app: int = 10,
     condition (Algorithm 2 with the delivered-something fast-path)
     engages identically in both engines."""
     n_adds = n_adds if n_adds is not None else max(2, n // 8)
-    adj0, delay0 = ring_topology(seed, n, k, max_delay, free_slots=1)
+    adj0, delay0 = _build_topology(topology, seed, n, k, max_delay,
+                                   free_slots=1, beta=beta)
     rng = np.random.default_rng(seed + 2)
     settle = settle_rounds(n, k, max_delay, pong_delay)
     early = max(2, m_app // 3)
@@ -250,7 +360,8 @@ def link_add_scenario(seed: int, n: int, k: int = 4, m_app: int = 10,
 def churn_scenario(seed: int, n: int, k: int = 5, m_app: int = 12,
                    n_adds: Optional[int] = None, n_rms: Optional[int] = None,
                    max_delay: int = 3, pong_delay: int = 1,
-                   churn_window: Optional[int] = None) -> VecScenario:
+                   churn_window: Optional[int] = None,
+                   topology: str = "ring", beta: float = 0.2) -> VecScenario:
     """Broadcasts interleaved with batched link additions *and* removals
     (the ring is never removed, so the overlay stays connected).
 
@@ -259,7 +370,8 @@ def churn_scenario(seed: int, n: int, k: int = 5, m_app: int = 12,
     valid for the lockstep batching rule."""
     n_adds = n_adds if n_adds is not None else max(2, n // 8)
     n_rms = n_rms if n_rms is not None else max(2, n // 8)
-    adj0, delay0 = ring_topology(seed, n, k, max_delay, free_slots=1)
+    adj0, delay0 = _build_topology(topology, seed, n, k, max_delay,
+                                   free_slots=1, beta=beta)
     rng = np.random.default_rng(seed + 3)
     settle = settle_rounds(n, k, max_delay, pong_delay)
     early = max(2, m_app // 3)
@@ -297,12 +409,14 @@ def churn_scenario(seed: int, n: int, k: int = 5, m_app: int = 12,
 
 def crash_scenario(seed: int, n: int, k: int = 6, m_app: int = 10,
                    n_crashes: int = 2, max_delay: int = 2,
-                   pong_delay: int = 1) -> VecScenario:
+                   pong_delay: int = 1, topology: str = "ring",
+                   beta: float = 0.2) -> VecScenario:
     """Silent crashes (Fig. 5b) mid-broadcast on a well-connected overlay
     (k large enough that the correct subgraph almost surely stays
     connected).  Crashed processes freeze; correct ones keep delivering."""
     base = static_scenario(seed, n, k=k, m_app=m_app, max_delay=max_delay,
-                           pong_delay=pong_delay)
+                           pong_delay=pong_delay, topology=topology,
+                           beta=beta)
     rng = np.random.default_rng(seed + 4)
     mid = int(base.bcast_round[m_app // 2])
     pids = rng.choice(n, size=n_crashes, replace=False)
@@ -436,22 +550,67 @@ def bursty_traffic(seed: int, n: int, rate_hi: float, rate_lo: float,
     return bc_round, bc_origin
 
 
-_TOPOLOGIES = {"ring": ring_topology, "kregular": kregular_topology,
-               "smallworld": smallworld_topology}
+def _ring_entry(seed, n, k, max_delay, free_slots, beta):
+    return ring_topology(seed, n, k, max_delay, free_slots)
+
+
+def _kregular_entry(seed, n, k, max_delay, free_slots, beta):
+    return kregular_topology(seed, n, k, max_delay, free_slots)
+
+
+def _smallworld_entry(seed, n, k, max_delay, free_slots, beta):
+    return smallworld_topology(seed, n, k, beta=beta, max_delay=max_delay,
+                               free_slots=free_slots)
+
+
+#: Topology dispatch table, keyed by the ``topology=`` builder argument.
+#: Every entry has the uniform signature
+#: ``(seed, n, k, max_delay, free_slots, beta) -> (adj0, delay0)``.
+#: ``repro.api.TOPOLOGIES`` is a live view of this dict, so a kind
+#: registered there is immediately buildable by every scenario builder.
+_TOPOLOGIES = {"ring": _ring_entry, "kregular": _kregular_entry,
+               "smallworld": _smallworld_entry}
 
 
 def _build_topology(topology: str, seed: int, n: int, k: int,
                     max_delay: int, free_slots: int, beta: float):
-    if topology == "smallworld":
-        return smallworld_topology(seed, n, k, beta=beta,
-                                   max_delay=max_delay,
-                                   free_slots=free_slots)
     try:
         builder = _TOPOLOGIES[topology]
     except KeyError:
         raise ValueError(f"unknown topology {topology!r}; "
                          f"choose from {sorted(_TOPOLOGIES)}") from None
-    return builder(seed, n, k, max_delay=max_delay, free_slots=free_slots)
+    return builder(seed, n, k, max_delay, free_slots, beta)
+
+
+@dataclass(frozen=True)
+class TrafficModel:
+    """A sustained-traffic generator, dispatchable by name.
+
+    ``build(seed, n, t0, t1, max_messages, params)`` returns the sorted
+    ``(bcast_round, bcast_origin)`` pair (unique (origin, round), per
+    the lockstep batching rule); ``mean_rate(params)`` is the expected
+    broadcasts per round, used to size the schedule span.  ``params``
+    carries the RunSpec traffic knobs: rate, rate_lo, period, duty.
+    ``repro.api.TRAFFIC`` is a live view of the ``_TRAFFIC`` table, so
+    a model registered there is immediately usable by
+    :func:`sustained_scenario`."""
+
+    build: object
+    mean_rate: object
+
+
+_TRAFFIC = {
+    "poisson": TrafficModel(
+        build=lambda seed, n, t0, t1, mm, p:
+            poisson_traffic(seed, n, p["rate"], t0, t1, mm),
+        mean_rate=lambda p: p["rate"]),
+    "bursty": TrafficModel(
+        build=lambda seed, n, t0, t1, mm, p:
+            bursty_traffic(seed, n, p["rate"], p["rate_lo"], p["period"],
+                           p["duty"], t0, t1, mm),
+        mean_rate=lambda p: (p["duty"] * p["rate"]
+                             + (1 - p["duty"]) * p["rate_lo"])),
+}
 
 
 # --------------------------------------------------------------------- #
@@ -575,7 +734,8 @@ def churn_wave_scenario(seed: int, n: int, k: int = 6, m_app: int = 18,
                         waves: int = 3, adds_per_wave: Optional[int] = None,
                         rms_per_wave: Optional[int] = None,
                         wave_gap: Optional[int] = None, max_delay: int = 2,
-                        pong_delay: int = 1) -> VecScenario:
+                        pong_delay: int = 1, topology: str = "ring",
+                        beta: float = 0.2) -> VecScenario:
     """Churn arriving in periodic waves — each wave batches link
     additions (on distinct processes drawn from a shared pool, so no
     slot is reused) and removals, with traffic flowing throughout.  The
@@ -584,7 +744,8 @@ def churn_wave_scenario(seed: int, n: int, k: int = 6, m_app: int = 18,
         else max(2, n // (8 * waves))
     rms_per_wave = rms_per_wave if rms_per_wave is not None \
         else max(2, n // (8 * waves))
-    adj0, delay0 = ring_topology(seed, n, k, max_delay, free_slots=1)
+    adj0, delay0 = _build_topology(topology, seed, n, k, max_delay,
+                                   free_slots=1, beta=beta)
     rng = np.random.default_rng(seed + 5)
     settle = settle_rounds(n, k, max_delay, pong_delay)
     wave_gap = wave_gap if wave_gap is not None else settle // 2 + 4
@@ -675,33 +836,31 @@ def sustained_scenario(seed: int, n: int, k: int = 8,
     free_slots = 0
     adj0, delay0 = _build_topology(topology, seed, n, k, max_delay,
                                    free_slots, beta)
-    if traffic == "poisson":
-        eff_rate = rate
-    elif traffic == "bursty":
-        lo_rate = rate / 8 if rate_lo is None else rate_lo
-        eff_rate = burst_duty * rate + (1 - burst_duty) * lo_rate
-    else:
-        raise ValueError(f"unknown traffic model {traffic!r}")
+    try:
+        model = _TRAFFIC[traffic]
+    except KeyError:
+        raise ValueError(f"unknown traffic model {traffic!r}; "
+                         f"choose from {sorted(_TRAFFIC)}") from None
+    if not isinstance(model, TrafficModel):
+        raise ValueError(f"traffic {traffic!r} is not a sustained-traffic "
+                         "model (it only schedules batch broadcasts)")
+    params = dict(rate=rate, rate_lo=rate / 8 if rate_lo is None
+                  else rate_lo, period=burst_period, duty=burst_duty)
     # size the span by the *effective* mean rate (bursty spends most
-    # rounds at rate_lo), then grow it if the Poisson draw fell short
+    # rounds at rate_lo), then grow it if the random draw fell short
+    eff_rate = model.mean_rate(params)
     span = max(8, int(np.ceil(messages / max(eff_rate, 1e-9) * 1.25)))
     for _ in range(16):
-        if traffic == "poisson":
-            bc_round, bc_origin = poisson_traffic(seed + 1, n, rate, 0,
-                                                  span,
-                                                  max_messages=messages)
-        else:
-            bc_round, bc_origin = bursty_traffic(seed + 1, n, rate, lo_rate,
-                                                 burst_period, burst_duty,
-                                                 0, span,
-                                                 max_messages=messages)
+        bc_round, bc_origin = model.build(seed + 1, n, 0, span, messages,
+                                          params)
         if len(bc_round) == messages:
             break
         span *= 2
     assert len(bc_round) == messages, \
         f"traffic span too short: {len(bc_round)} < {messages}"
     last = int(bc_round[-1]) if len(bc_round) else 0
-    rounds = last + 1 + settle_rounds(n, k, max_delay, pong_delay)
+    rounds = last + 1 + settle_rounds(n, k, max_delay, pong_delay,
+                                      diam=diameter_bound(adj0))
     return VecScenario(n=n, k=k, rounds=rounds, adj0=adj0, delay0=delay0,
                        bcast_round=bc_round, bcast_origin=bc_origin,
                        mode=mode, pong_delay=pong_delay).validate()

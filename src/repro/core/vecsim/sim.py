@@ -41,16 +41,17 @@ matrices and per-round stats series on random scenarios.
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass
 from typing import Dict, Optional
 
 import numpy as np
 
-from ..types import NetStats
+from ..types import LegacyEntryPointWarning, NetStats
 from .scenario import INF, VecScenario
 
-__all__ = ["VecRunResult", "run_vec", "SERIES_FIELDS", "SlotSchedule",
-           "full_schedule"]
+__all__ = ["VecRunResult", "run_vec", "execute_vec", "SERIES_FIELDS",
+           "SlotSchedule", "full_schedule"]
 
 # Wire-size model shared with repro.core.base.control_bytes.
 _CTRL_APP = 16    # AppMsg: (origin, counter)
@@ -529,24 +530,27 @@ def resolve_backend(backend: str) -> str:
     return backend
 
 
-def run_vec(scn: VecScenario, backend: str = "auto",
-            snapshot_round: Optional[int] = None,
-            window: Optional[int] = None,
-            collect: Optional[str] = None, **window_kw):
+def execute_vec(scn: VecScenario, backend: str = "auto",
+                snapshot_round: Optional[int] = None,
+                window: Optional[int] = None,
+                collect: Optional[str] = None, **window_kw):
     """Execute ``scn`` in lockstep rounds; returns delivery matrix, final
     state, ``NetStats`` (same schema as the exact simulator) and a
     per-round stats series.  ``snapshot_round`` additionally captures the
     full state right after that round (for mid-churn topology metrics).
 
     ``window`` switches to the streaming windowed engine
-    (``vecsim.stream.run_vec_windowed``): the message axis is processed
-    through a fixed buffer of ``window`` live columns with O(N·window)
-    memory, returning a :class:`~repro.core.vecsim.stream.WindowedRunResult`
-    instead.  ``collect`` and the extra keyword arguments (``horizon``,
-    ``seg_len``) apply only to windowed runs."""
+    (``vecsim.stream``): the message axis is processed through a fixed
+    buffer of ``window`` live columns with O(N·window) memory, returning
+    a :class:`~repro.core.vecsim.stream.WindowedRunResult` instead.
+    ``collect`` and the extra keyword arguments (``horizon``,
+    ``seg_len``) apply only to windowed runs.
+
+    This is the engine implementation behind ``repro.api.run``; prefer
+    the front door (``repro.api.run(RunSpec(...))``) in new code."""
     if window is not None:
-        from .stream import run_vec_windowed
-        return run_vec_windowed(scn, window, backend=backend,
+        from .stream import execute_windowed
+        return execute_windowed(scn, window, backend=backend,
                                 snapshot_round=snapshot_round,
                                 collect=collect if collect is not None
                                 else "auto", **window_kw)
@@ -565,3 +569,18 @@ def run_vec(scn: VecScenario, backend: str = "auto",
     return VecRunResult(scenario=scn, delivered=st["delivered"], state=st,
                         stats=stats, series=series, snapshot=snapshot,
                         backend=backend)
+
+
+def run_vec(scn: VecScenario, backend: str = "auto",
+            snapshot_round: Optional[int] = None,
+            window: Optional[int] = None,
+            collect: Optional[str] = None, **window_kw):
+    """Legacy entry point — identical signature and behavior to
+    :func:`execute_vec`, which it delegates to after emitting a
+    :class:`~repro.core.types.LegacyEntryPointWarning`.  New code goes
+    through the one front door: ``repro.api.run(RunSpec(...))``."""
+    warnings.warn(
+        "run_vec is a legacy entry point; use repro.api.run(RunSpec(...)) "
+        "(see DESIGN.md §3)", LegacyEntryPointWarning, stacklevel=2)
+    return execute_vec(scn, backend=backend, snapshot_round=snapshot_round,
+                       window=window, collect=collect, **window_kw)

@@ -42,17 +42,19 @@ which is what lets one host sustain millions of broadcasts at N ≥ 10k
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Dict, Optional
 
 import numpy as np
 
-from ..types import NetStats
+from ..types import LegacyEntryPointWarning, NetStats
 from .scenario import INF, VecScenario
 from .sim import (SERIES_FIELDS, SlotSchedule, init_topo_state, np_span,
                   resolve_backend, stats_from_series)
 
-__all__ = ["WindowedRunResult", "WindowOverflowError", "run_vec_windowed"]
+__all__ = ["WindowedRunResult", "WindowOverflowError", "run_vec_windowed",
+           "execute_windowed"]
 
 
 class WindowOverflowError(RuntimeError):
@@ -135,7 +137,7 @@ def _window_caps(rounds_arr: np.ndarray, total_rounds: int,
     return int((cum[hi] - cum[: total_rounds]).max())
 
 
-def run_vec_windowed(scn: VecScenario, window: int, backend: str = "auto",
+def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
                      horizon: Optional[int] = None, seg_len: int = 32,
                      snapshot_round: Optional[int] = None,
                      collect: str = "auto") -> WindowedRunResult:
@@ -146,7 +148,10 @@ def run_vec_windowed(scn: VecScenario, window: int, backend: str = "auto",
     jitted segment between retirement sweeps (also bounds how long a
     finished column lingers before its slot recycles).  ``collect`` —
     ``"full"`` keeps the (N, M_total) delivered matrix, ``"aggregate"``
-    keeps only per-message counters, ``"auto"`` picks by size."""
+    keeps only per-message counters, ``"auto"`` picks by size.
+
+    This is the engine implementation behind ``repro.api.run``; prefer
+    the front door (``repro.api.run(RunSpec(...))``) in new code."""
     backend = resolve_backend(backend)
     w = int(window)
     if w < 1:
@@ -399,3 +404,20 @@ def run_vec_windowed(scn: VecScenario, window: int, backend: str = "auto",
         delivered=delivered_full, deliv_count=deliv_count,
         bcast_done=bcast_done, expired=expired, state=st, snapshot=snapshot,
         peak_live=peak_live, lat_sum=lat_sum, lat_cnt=lat_cnt)
+
+
+def run_vec_windowed(scn: VecScenario, window: int, backend: str = "auto",
+                     horizon: Optional[int] = None, seg_len: int = 32,
+                     snapshot_round: Optional[int] = None,
+                     collect: str = "auto") -> WindowedRunResult:
+    """Legacy entry point — identical signature and behavior to
+    :func:`execute_windowed`, which it delegates to after emitting a
+    :class:`~repro.core.types.LegacyEntryPointWarning`.  New code goes
+    through the one front door: ``repro.api.run(RunSpec(...))``."""
+    warnings.warn(
+        "run_vec_windowed is a legacy entry point; use "
+        "repro.api.run(RunSpec(...)) (see DESIGN.md §3)",
+        LegacyEntryPointWarning, stacklevel=2)
+    return execute_windowed(scn, window, backend=backend, horizon=horizon,
+                            seg_len=seg_len, snapshot_round=snapshot_round,
+                            collect=collect)

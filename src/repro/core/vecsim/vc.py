@@ -1,0 +1,268 @@
+"""Vectorized vector-clock causal broadcast — the measured Table 1 baseline.
+
+Runs the classic Fidge/Mattern baseline (``repro.core.vector_clock``) on
+the same lockstep-round substrate as the PC-broadcast vec engine, so
+``bench_table1 --engine vec`` can report *measured* — not modeled — VC
+columns at populations the object simulator cannot reach.  The whole
+network is dense arrays:
+
+  * ``vc[p, j]``    — process ``p``'s clock entry for broadcasting origin
+    ``origins[j]`` (columns are the distinct broadcast origins, sorted by
+    pid; when every process broadcasts this is the full (N, N) clock);
+  * ``stamp[m, j]`` — message ``m``'s piggybacked clock, fixed at its
+    broadcast round from the origin's clock (own entry pre-incremented);
+  * ``rcv/arr/delivered`` — (N, M) first-receipt round, earliest scheduled
+    arrival, and delivery round, exactly like the PC engine's buffers.
+
+Per round: link removals/additions (every link is usable immediately —
+VC needs no link-safety gating, which is the point of the comparison),
+crashes, broadcasts (origin stamps + delivers its own message), first
+receipts (gossip-forward on first receipt, park in the pending set), and
+a per-process delivery drain that rescans pending until a fixpoint —
+the O(W·N) loop Table 1 charges this family with.
+
+What is measured, and how faithfully:
+
+  * **per-hop piggyback bytes** — every forwarded copy of ``m`` carries
+    ``16 + 8·|entries(stamp[m])|`` bytes, the exact-engine
+    ``control_bytes`` accounting for an ``AppMsg`` with a ``vc`` tuple;
+  * **comparison counts** — each readiness check scans the stamp's
+    present (nonzero) entries in sorted-pid order and stops at the first
+    failing entry, mirroring ``VCBroadcast._ready``.  Drains fire only
+    at processes that received something this round; lockstep batching
+    coalesces same-round receipts into one drain, so absolute counts are
+    a lower bound on the event-interleaved exact engine's (the W·N
+    growth, which is the claim under test, is unaffected);
+  * **delivered multisets and final clock values** — byte-identical to
+    ``core.vector_clock.VCBroadcast`` replayed on the exact event engine
+    (``crossval.cross_validate(..., protocol="vc")`` asserts this at
+    N ≤ 256 in the tier-1 suite).
+
+NumPy only: the drain fixpoint is data-dependent per round, which fits
+the host-loop numpy backend; a jitted ``lax.while_loop`` port is
+possible but unneeded at the M ~ tens of Table 1 scenarios.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import numpy as np
+
+from ..types import NetStats
+from .scenario import INF, VecScenario
+
+__all__ = ["VCVecRunResult", "run_vec_vc"]
+
+# Wire-size model shared with repro.core.base.control_bytes: an AppMsg
+# carrying a vc tuple costs id (2 ints) + one int per (pid, counter) pair.
+_INT = 8
+
+
+@dataclass
+class VCVecRunResult:
+    """Result of a vectorized vector-clock baseline run."""
+
+    scenario: VecScenario
+    delivered: np.ndarray        # (N, m_app) delivery round, -1 = never
+    rcv: np.ndarray              # (N, m_app) first-receipt round, INF = never
+    vc: np.ndarray               # (N, B) final clocks, B = distinct origins
+    origins: np.ndarray          # (B,) sorted distinct broadcast origins
+    stamp: np.ndarray            # (m_app, B) per-message piggybacked clocks
+    state: Dict[str, np.ndarray]  # final adj/delay/active/crashed
+    stats: NetStats
+    series: np.ndarray           # (rounds, 3): deliveries, sent, comparisons
+    comparisons: int             # total vector-entry comparisons
+    max_pending: int             # peak pending-set size at any process (W)
+    backend: str = "numpy"
+
+    @property
+    def delivered_app(self) -> np.ndarray:
+        return self.delivered
+
+    def delivered_frac(self) -> float:
+        ok = ~self.state["crashed"]
+        d = self.delivered[ok]
+        return float((d >= 0).mean()) if d.size else 1.0
+
+    def mean_latency(self) -> float:
+        d = self.delivered
+        got = d >= 0
+        if not got.any():
+            return float("nan")
+        lat = d - self.scenario.bcast_round[None, :]
+        return float(lat[got].mean())
+
+    def final_clocks(self) -> List[Dict[int, int]]:
+        """Per-process ``{origin: delivered count}`` dicts with only the
+        nonzero entries — the exact ``VCBroadcast.vc`` representation,
+        for byte-level cross-validation."""
+        out: List[Dict[int, int]] = []
+        for p in range(self.scenario.n):
+            row = self.vc[p]
+            out.append({int(self.origins[j]): int(row[j])
+                        for j in np.nonzero(row > 0)[0]})
+        return out
+
+    def overhead_bytes_per_message(self) -> float:
+        """Measured piggyback bytes per sent copy (Table 1's O(N) term)."""
+        return self.stats.control_bytes / max(self.stats.sent_messages, 1)
+
+    def comparisons_per_delivery(self) -> float:
+        """Measured vector-entry comparisons per delivery (Table 1's
+        O(W·N) delivery execution time)."""
+        return self.comparisons / max(self.stats.deliveries, 1)
+
+
+def run_vec_vc(scn: VecScenario, backend: str = "numpy") -> VCVecRunResult:
+    """Execute ``scn`` under the vector-clock baseline protocol.
+
+    Uses only the app-broadcast schedule plus the link/crash dynamics of
+    the scenario (VC has no ping phase, so the ``m_app + n_adds`` slot
+    split of the PC engine collapses to ``m_app`` message columns)."""
+    if backend not in ("numpy", "auto"):
+        raise ValueError(
+            f"the vector-clock vec engine is numpy-only (got backend "
+            f"{backend!r}); see the module docstring")
+    n, k, m = scn.n, scn.k, scn.m_app
+    rounds = scn.rounds
+
+    origins = np.unique(scn.bcast_origin).astype(np.int64)
+    b = len(origins)
+    col_of = np.full(n, -1, np.int64)
+    col_of[origins] = np.arange(b)
+    bc_col = col_of[scn.bcast_origin]          # (m,) stamp column per message
+
+    vc = np.zeros((n, b), np.int32)
+    stamp = np.zeros((m, b), np.int32)
+    stamped = np.zeros(m, bool)
+    arr = np.full((n, m), INF, np.int32)
+    rcv = np.full((n, m), INF, np.int32)
+    delivered = np.full((n, m), -1, np.int32)
+    adj = scn.adj0.astype(np.int32).copy()
+    delay = scn.delay0.astype(np.int32).copy()
+    active = (scn.adj0 >= 0).copy()
+    crashed = np.zeros(n, bool)
+
+    series = np.zeros((rounds, 3), np.int64)   # deliveries, sent, comparisons
+    control_bytes = 0
+    sent = 0
+    comparisons = 0
+    max_pending = 0
+
+    # Per-message payload size of a forwarded copy, fixed at stamp time.
+    msg_bytes = np.zeros(m, np.int64)
+
+    for t in range(rounds):
+        # -- 1/2/3. link removals, additions, crashes -------------------- #
+        for e in np.nonzero(scn.rm_round == t)[0]:
+            active[int(scn.rm_p[e]), int(scn.rm_k[e])] = False
+        for e in np.nonzero(scn.add_round == t)[0]:
+            p, kk = int(scn.add_p[e]), int(scn.add_k[e])
+            adj[p, kk] = int(scn.add_q[e])
+            delay[p, kk] = int(scn.add_delay[e])
+            active[p, kk] = True               # usable immediately: no gate
+        for e in np.nonzero(scn.crash_round == t)[0]:
+            crashed[int(scn.crash_pid[e])] = True
+
+        # -- 4. broadcasts: stamp from the origin's clock, deliver ------- #
+        # Same-timestamp order matches the exact replay: scheduled
+        # broadcasts fire before this round's arrivals, so a stamp never
+        # includes a same-round receipt.
+        bc_now = np.nonzero(scn.bcast_round == t)[0]
+        for i in bc_now:
+            o = int(scn.bcast_origin[i])
+            if crashed[o]:
+                continue
+            c = int(bc_col[i])
+            stamp[i] = vc[o]
+            stamp[i, c] += 1
+            vc[o, c] += 1
+            stamped[i] = True
+            rcv[o, i] = t
+            delivered[o, i] = t
+            msg_bytes[i] = _INT * 2 + _INT * int((stamp[i] > 0).sum())
+
+        # -- 5. first receipts: gossip-forward, park in pending ---------- #
+        newly = (arr == t) & (rcv == INF) & ~crashed[:, None]
+        rcv[newly] = t
+
+        # -- 6. forward this round's originations + first receipts ------- #
+        send_mask = newly.copy()
+        for i in bc_now:
+            o = int(scn.bcast_origin[i])
+            if stamped[i] and delivered[o, i] == t:
+                send_mask[o, i] = True
+        rows_idx, cols_idx = np.nonzero(send_mask)
+        if rows_idx.size:
+            arr_flat = arr.reshape(-1)
+            copies = np.zeros(len(rows_idx), np.int64)
+            for kk in range(k):
+                ok = active[:, kk] & (adj[:, kk] >= 0) & ~crashed
+                sel = ok[rows_idx]
+                if not sel.any():
+                    continue
+                copies[sel] += 1
+                r, c = rows_idx[sel], cols_idx[sel]
+                lin = adj[r, kk].astype(np.int64) * m + c
+                np.minimum.at(arr_flat, lin,
+                              (t + delay[r, kk]).astype(np.int32))
+            sent_now = int(copies.sum())
+            sent += sent_now
+            control_bytes += int((msg_bytes[cols_idx] * copies).sum())
+            series[t, 1] = sent_now
+
+        # -- 7. delivery drain: rescan pending until a fixpoint ---------- #
+        # Drains fire where something was received this round (the exact
+        # engine drains on receive); a delivery can only unblock more
+        # pending messages at the same process, so the fixpoint is local.
+        drain_rows = np.nonzero(newly.any(axis=1))[0]
+        if drain_rows.size:
+            present = stamp > 0                       # (m, b)
+            pres_cnt = present.sum(axis=1).astype(np.int64)
+            pres_cum = np.cumsum(present, axis=1, dtype=np.int64)
+            need = stamp.copy()
+            need[np.arange(m), bc_col] -= 1           # own entry: off by one
+            pend = ((rcv[drain_rows] != INF)
+                    & (delivered[drain_rows] < 0))    # (R, m)
+            max_pending = max(max_pending, int(pend.sum(axis=1).max()))
+            while pend.any():
+                vcr = vc[drain_rows]                  # (R, b)
+                fails = (present[None] & (vcr[:, None, :]
+                                          < need[None]))  # (R, m, b)
+                fail_any = fails.any(axis=2)
+                first = fails.argmax(axis=2)          # first failing column
+                # entries scanned by the early-exit check: all present
+                # entries when ready, else present entries up to and
+                # including the first failing one (sorted-pid order)
+                cnt = np.where(fail_any,
+                               pres_cum[np.arange(m)[None, :], first],
+                               pres_cnt[None])
+                scanned = int(cnt[pend].sum())
+                comparisons += scanned
+                series[t, 2] += scanned
+                ready = pend & ~fail_any
+                if not ready.any():
+                    break
+                rr, mm = np.nonzero(ready)
+                delivered[drain_rows[rr], mm] = t
+                np.add.at(vc, (drain_rows[rr], bc_col[mm]), 1)
+                pend &= ~ready
+
+        series[t, 0] = int((delivered == t).sum())
+
+    first_receipts = int((arr < rounds).sum())
+    stats = NetStats(
+        sent_messages=sent,
+        sent_control=0,                       # VC has no ping/pong traffic
+        control_bytes=control_bytes,
+        oob_messages=0,
+        deliveries=int((delivered >= 0).sum()),
+        duplicate_receipts=max(0, sent - first_receipts),
+    )
+    state = dict(adj=adj, delay=delay, active=active, crashed=crashed)
+    return VCVecRunResult(
+        scenario=scn, delivered=delivered, rcv=rcv, vc=vc, origins=origins,
+        stamp=stamp, state=state, stats=stats, series=series,
+        comparisons=comparisons, max_pending=max_pending)

@@ -28,9 +28,13 @@ summarizes; there is no paper algorithm listing for the baseline):
   ``local_space_entries``   Table 1's local-space metric: clock entries
                             plus the clocks of parked messages
 
-The vec engine's ``--engine vec`` Table 1 column models this baseline's
-overhead analytically from a causal run instead of simulating the
-pending-set mechanics (``repro.core.vecsim.vc_overhead_model``).
+The vectorized twin of this protocol (``repro.core.vecsim.vc``) runs
+the same semantics as dense arrays at large N, so ``bench_table1
+--engine vec`` reports *measured* VC columns; its delivered multisets
+and final clock values are cross-validated byte-identical against this
+class on the exact engine (``cross_validate(..., protocol="vc")``).
+The older analytic approximation (``vecsim.vc_overhead_model``) is kept
+for contrast as the benchmark's ``vc_model`` rows.
 """
 
 from __future__ import annotations

@@ -359,3 +359,83 @@ def test_partition_heal_exercises_ping_phase_and_resolves():
     assert int(res.series[:, 5].sum()) > 0        # heal links were gated
     assert res.stats.oob_messages > 0             # pongs flowed
     assert (res.state["gate"] < 0).all()          # every gate resolved
+
+
+# --------------------------------------------------------------------- #
+# VecScenario.validate() failure paths: informative errors, not asserts
+# --------------------------------------------------------------------- #
+def _valid_parts(n=8, k=3):
+    i32 = lambda *a: np.asarray(a, np.int32)  # noqa: E731
+    adj0 = np.full((n, k), -1, np.int32)
+    adj0[:, 0] = (np.arange(n) + 1) % n
+    delay0 = np.ones((n, k), np.int32)
+    return dict(n=n, k=k, rounds=30, adj0=adj0, delay0=delay0,
+                bcast_round=i32(0, 2), bcast_origin=i32(0, 1))
+
+
+def test_validate_accepts_a_minimal_scenario():
+    VecScenario(**_valid_parts()).validate()
+
+
+@pytest.mark.parametrize("mutate,match", [
+    # ragged schedules: parallel arrays of different lengths
+    (lambda p: p.update(bcast_origin=p["bcast_origin"][:1]),
+     "ragged bcast schedule"),
+    (lambda p: p.update(add_round=np.asarray([3], np.int32)),
+     "ragged add schedule"),
+    (lambda p: p.update(rm_round=np.asarray([3, 4], np.int32),
+                        rm_p=np.asarray([1], np.int32),
+                        rm_k=np.asarray([1], np.int32)),
+     "ragged rm schedule"),
+    (lambda p: p.update(crash_round=np.asarray([3], np.int32)),
+     "ragged crash schedule"),
+    # out-of-range ids
+    (lambda p: p.update(bcast_origin=np.asarray([0, 99], np.int32)),
+     "bcast_origin out of range"),
+    (lambda p: p.update(crash_round=np.asarray([3], np.int32),
+                        crash_pid=np.asarray([-2], np.int32)),
+     "crash_pid out of range"),
+    (lambda p: p.update(add_round=np.asarray([3], np.int32),
+                        add_p=np.asarray([1], np.int32),
+                        add_k=np.asarray([7], np.int32),
+                        add_q=np.asarray([4], np.int32),
+                        add_delay=np.asarray([1], np.int32)),
+     "add_k out of range"),
+    # bad slot tables
+    (lambda p: p["adj0"].__setitem__((0, 1), 99),
+     "adj0 targets"),
+    (lambda p: p["adj0"].__setitem__((0, 1), 0),
+     "self-link at process 0"),
+    (lambda p: (p["adj0"].__setitem__((0, 1), 1)),
+     "duplicate out-target at process 0"),
+    (lambda p: (p["adj0"].__setitem__((0, 1), 2),
+                p["delay0"].__setitem__((0, 1), 0)),
+     "delay0 >= 1"),
+    # schedule semantics
+    (lambda p: p.update(bcast_round=np.asarray([2, 0], np.int32)),
+     "not sorted"),
+    (lambda p: p.update(bcast_round=np.asarray([2, 2], np.int32),
+                        bcast_origin=np.asarray([1, 1], np.int32)),
+     "duplicate \\(origin, round\\) broadcast"),
+    (lambda p: p.update(rm_round=np.asarray([3], np.int32),
+                        rm_p=np.asarray([1], np.int32),
+                        rm_k=np.asarray([0], np.int32)),
+     "slot 0 .* connectivity ring"),
+    (lambda p: p.update(mode="tcp"), "mode='tcp'"),
+])
+def test_validate_failure_paths_raise_informative_errors(mutate, match):
+    parts = _valid_parts()
+    mutate(parts)
+    with pytest.raises(ValueError, match=match):
+        VecScenario(**parts).validate()
+
+
+def test_validate_rejects_same_round_adds_on_one_process():
+    parts = _valid_parts()
+    parts.update(add_round=np.asarray([3, 3], np.int32),
+                 add_p=np.asarray([1, 1], np.int32),
+                 add_k=np.asarray([1, 2], np.int32),
+                 add_q=np.asarray([4, 5], np.int32),
+                 add_delay=np.asarray([1, 1], np.int32))
+    with pytest.raises(ValueError, match="share a process"):
+        VecScenario(**parts).validate()

@@ -155,3 +155,31 @@ def test_fuzz_windowed_multiset_stable_under_window_choice(seed):
             base = ms
         assert ms == base
     assert base is not None
+
+
+@settings(max_examples=25, **BASE)
+@given(topology=st.sampled_from(["ring", "kregular", "smallworld"]),
+       seed=st.integers(min_value=0, max_value=10 ** 6),
+       n=st.integers(min_value=12, max_value=96),
+       k=st.integers(min_value=3, max_value=6),
+       max_delay=st.integers(min_value=1, max_value=4),
+       m_app=st.integers(min_value=1, max_value=12),
+       beta=st.sampled_from([0.0, 0.2, 0.8]))
+def test_fuzz_settle_rounds_is_a_sound_delivery_bound(
+        topology, seed, n, k, max_delay, m_app, beta):
+    """``settle_rounds`` with the computed ``diameter_bound`` really is a
+    sound bound: on every topology builder — including low-beta
+    small-world lattices, whose diameter is nowhere near log N — every
+    broadcast is delivered everywhere within the settle window of its
+    broadcast round."""
+    from repro.core.vecsim import (diameter_bound, execute_vec,
+                                  settle_rounds)
+    scn = static_scenario(seed, n, k=k, m_app=m_app, max_delay=max_delay,
+                          topology=topology, beta=beta)
+    res = execute_vec(scn, backend="numpy")
+    d = res.delivered_app
+    assert (d >= 0).all(), "a broadcast never finished flooding"
+    settle = settle_rounds(n, k, max_delay, scn.pong_delay,
+                           diam=diameter_bound(scn.adj0))
+    worst = int((d - scn.bcast_round[None, :]).max())
+    assert worst <= settle, (worst, settle)
