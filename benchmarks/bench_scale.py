@@ -1,0 +1,154 @@
+"""Million-process scale benchmark for the device-sharded engine.
+
+Drives a sustained-traffic run at N ≥ 1M processes through
+``repro.api.run`` with ``engine="sharded"`` — the population regime the
+paper's constant-size control information exists for, and two orders of
+magnitude past the single-host engines (the monolithic engine caps near
+N ≈ 100k; the windowed engine holds the traffic axis but still keeps
+every (N, W) plane on one device).  The process axis is partitioned
+over a ``shard_map`` device mesh; on CPU the mesh comes from forced
+host platform devices, which this script sets up itself (the flag must
+precede jax initialization)::
+
+    PYTHONPATH=src python benchmarks/bench_scale.py \
+        --n 1048576 --devices 4 --messages 512 --rate 4 --window 128
+
+Reports simulated broadcasts/s and message-copies (sends)/s of wall
+clock, delivered fraction, mean delivery latency, the live-column
+high-water mark, and the per-device buffer bytes the window pinned.
+Writes everything to ``BENCH_scale.json`` (``--out``) and prints the
+usual ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+
+def run_point(n: int, devices: int, messages: int, rate: float,
+              window: int, k: int, topology: str, traffic: str,
+              seg_len: int, horizon: int | None, max_delay: int,
+              seed: int) -> dict:
+    from dataclasses import replace
+
+    from repro.api import (RunSpec, ShardSpec, TopologySpec, TrafficSpec,
+                           WindowSpec, build_scenario, run)
+    from repro.core.vecsim.shard import pad_rows
+
+    spec = RunSpec(
+        protocol="pc", engine="sharded", n=n, seed=seed,
+        shard=ShardSpec(devices=devices),
+        topology=TopologySpec(kind=topology, k=k, max_delay=max_delay),
+        traffic=TrafficSpec(kind=traffic, rate=rate, messages=messages),
+        window=WindowSpec(window=window, seg_len=seg_len, horizon=horizon,
+                          collect="aggregate"))
+    t0 = time.perf_counter()
+    scn = build_scenario(spec.validate())
+    build_s = time.perf_counter() - t0
+    # hand the prebuilt scenario back so the report's wall clock is pure
+    # engine time, with the build cost reported separately
+    rep = run(replace(spec, scenario=scn))
+    res, run_s = rep.result, rep.wall_seconds
+    if horizon is None:
+        # without a horizon the engine is exact: anything less than full
+        # delivery is a correctness regression, not a number
+        assert not res.expired.any(), "columns expired without a horizon"
+        assert rep.delivered_frac == 1.0, \
+            f"sharded run did not quiesce ({rep.delivered_frac:.6f})"
+    n_pad = pad_rows(n, res.n_devices)
+    buffer_bytes = 2 * n_pad * window * 4          # arr + delivered, int32
+    return dict(
+        n=n, devices=res.n_devices, k=k, messages=messages, rate=rate,
+        window=window, topology=topology, traffic=traffic,
+        seg_len=seg_len, horizon=horizon, rounds=scn.rounds,
+        build_seconds=round(build_s, 3),
+        run_seconds=round(run_s, 3),
+        msgs_per_sec=round(messages / run_s, 1),
+        sends=res.stats.sent_messages,
+        sends_per_sec=round(res.stats.sent_messages / run_s, 1),
+        deliveries=res.stats.deliveries,
+        delivered_frac=round(rep.delivered_frac, 6),
+        mean_latency_rounds=round(rep.mean_latency, 3),
+        peak_live=res.peak_live,
+        expired=int(res.expired.sum()),
+        window_buffer_bytes=buffer_bytes,
+        buffer_bytes_per_device=buffer_bytes // res.n_devices,
+    )
+
+
+def rows(n: int = 1 << 20, devices: int = 4, messages: int = 512,
+         rate: float = 4.0, window: int = 128, k: int = 4,
+         topology: str = "kregular", traffic: str = "poisson",
+         seg_len: int = 16, horizon: int | None = None,
+         max_delay: int = 1, seed: int = 0, out: str | None = None):
+    point = run_point(n, devices, messages, rate, window, k, topology,
+                      traffic, seg_len, horizon, max_delay, seed)
+    if out:
+        with open(out, "w") as fh:
+            json.dump(point, fh, indent=2)
+    us = point["run_seconds"] * 1e6
+    tag = f"n={n},d={point['devices']}"
+    return [
+        (f"scale/msgs_per_sec/{tag}", us, point["msgs_per_sec"]),
+        (f"scale/sends_per_sec/{tag}", us, point["sends_per_sec"]),
+        (f"scale/delivered_frac/{tag}", us, point["delivered_frac"]),
+        (f"scale/latency_rounds/{tag}", us, point["mean_latency_rounds"]),
+        (f"scale/peak_live/{tag}", us, float(point["peak_live"])),
+        (f"scale/buffer_mb_per_device/{tag}", us,
+         point["buffer_bytes_per_device"] / 2 ** 20),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=1 << 20,
+                    help="processes (default 1,048,576)")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="device-mesh size the process axis shards over")
+    ap.add_argument("--no-force-host", action="store_true",
+                    help="do not force host platform devices (use this "
+                         "on a real accelerator mesh)")
+    ap.add_argument("--messages", type=int, default=512)
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="mean broadcasts per lockstep round")
+    ap.add_argument("--window", type=int, default=128,
+                    help="live message columns "
+                         "(memory = 8·N·window bytes across the mesh)")
+    ap.add_argument("--k", type=int, default=4, help="out-links per process")
+    ap.add_argument("--topology", choices=("kregular", "ring", "smallworld"),
+                    default="kregular")
+    ap.add_argument("--traffic", choices=("poisson", "bursty"),
+                    default="poisson")
+    ap.add_argument("--seg-len", type=int, default=16,
+                    help="rounds per jitted segment between retirements")
+    ap.add_argument("--horizon", type=int, default=None,
+                    help="force-retire columns older than this many rounds")
+    ap.add_argument("--max-delay", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_scale.json")
+    args = ap.parse_args()
+    # the forced-host-device flag must land before jax initializes, so
+    # it happens here, ahead of any repro.api import
+    if not args.no_force_host and args.devices > 1:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
+    for name, us, derived in rows(args.n, args.devices, args.messages,
+                                  args.rate, args.window, args.k,
+                                  args.topology, args.traffic, args.seg_len,
+                                  args.horizon, args.max_delay, args.seed,
+                                  args.out):
+        print(f"{name},{us:.0f},{derived:.3f}")
+
+
+if __name__ == "__main__":
+    main()

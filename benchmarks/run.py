@@ -7,7 +7,9 @@ sweeps on the vectorized lockstep engine at large N (``--n`` overrides
 the population) plus the sustained-throughput bench of the streaming
 windowed engine; ``--engine both`` runs the two back to back.
 ``--window`` routes every vec-engine sweep through the streaming
-windowed engine with that many live columns.  The substrate benches
+windowed engine with that many live columns.  ``--scale-devices D``
+additionally runs a harness-sized point of the device-sharded scale
+bench (``bench_scale``) on a D-device mesh.  The substrate benches
 (engine/train) are engine-independent and always run.  All protocol
 benches dispatch through ``repro.api.run`` (one spec, one front door).
 """
@@ -24,8 +26,6 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
-    from benchmarks import bench_engine, bench_fig7, bench_table1, \
-        bench_throughput, bench_train
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--engine", choices=("exact", "vec", "both"),
                     default="exact")
@@ -37,7 +37,25 @@ def main() -> None:
                     help="route the vec sweeps (and the throughput "
                          "bench) through the streaming windowed engine "
                          "with this many live columns")
+    ap.add_argument("--scale-devices", type=int, default=None,
+                    help="also run a harness-sized sharded scale point "
+                         "on this many devices (forces host platform "
+                         "devices; full run: benchmarks/bench_scale.py)")
     args = ap.parse_args()
+    if args.scale_devices and args.engine == "exact":
+        print("warning: --scale-devices runs with the vec benches only; "
+              "pass --engine vec or --engine both", file=sys.stderr)
+    if args.scale_devices and args.scale_devices > 1:
+        # must precede jax initialization (the bench modules import jax
+        # lazily, so setting it here is early enough from the CLI)
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.scale_devices}").strip()
+    # imported after the device-count env var so it precedes jax init
+    from benchmarks import bench_engine, bench_fig7, bench_scale, \
+        bench_table1, bench_throughput, bench_train
     engines = ("exact", "vec") if args.engine == "both" else (args.engine,)
 
     print("name,us_per_call,derived")
@@ -68,6 +86,17 @@ def main() -> None:
                         messages=20_000, rate=200.0,
                         window=args.window if args.window else 4096,
                         backend=args.backend, seg_len=8, out=None):
+                    print(f"{prefix}{name},{us:.2f},{derived:.3f}",
+                          flush=True)
+            except Exception:                  # noqa: BLE001
+                failed += 1
+                traceback.print_exc()
+        if eng == "vec" and args.scale_devices:
+            try:
+                for name, us, derived in bench_scale.rows(
+                        n=args.n if args.n is not None else 65536,
+                        devices=args.scale_devices, messages=128,
+                        rate=4.0, window=64, seg_len=8, out=None):
                     print(f"{prefix}{name},{us:.2f},{derived:.3f}",
                           flush=True)
             except Exception:                  # noqa: BLE001

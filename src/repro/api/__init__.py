@@ -22,15 +22,17 @@ the schema, the registry keys, and the auto-selection rule.
 
 from ..core.vecsim import TrafficModel
 from .registry import (ENGINES, PROTOCOLS, SCENARIOS, TOPOLOGIES, TRAFFIC,
-                       ProtocolEntry, Registry, ScenarioEntry)
+                       EngineEntry, ProtocolEntry, Registry, ScenarioEntry,
+                       describe_entry)
 from .run import RunReport, build_scenario, run, select_engine
-from .spec import (DynamicsSpec, MetricsSpec, RunSpec, SpecError,
+from .spec import (DynamicsSpec, MetricsSpec, RunSpec, ShardSpec, SpecError,
                    TopologySpec, TrafficSpec, WindowSpec)
 
 __all__ = [
     "RunSpec", "TopologySpec", "TrafficSpec", "DynamicsSpec", "WindowSpec",
-    "MetricsSpec", "SpecError",
+    "ShardSpec", "MetricsSpec", "SpecError",
     "run", "RunReport", "build_scenario", "select_engine",
-    "Registry", "ProtocolEntry", "ScenarioEntry", "TrafficModel",
+    "Registry", "ProtocolEntry", "EngineEntry", "ScenarioEntry",
+    "TrafficModel", "describe_entry",
     "PROTOCOLS", "ENGINES", "TOPOLOGIES", "TRAFFIC", "SCENARIOS",
 ]

@@ -18,7 +18,7 @@ import json
 import sys
 
 from . import (ENGINES, PROTOCOLS, SCENARIOS, TOPOLOGIES, TRAFFIC, RunSpec,
-               SpecError, run)
+               SpecError, describe_entry, run)
 
 
 def _spec_dict(src: str) -> dict:
@@ -36,7 +36,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--spec", default=None,
                     help="spec JSON: a file path or an inline object")
     ap.add_argument("--list", action="store_true",
-                    help="print the registry keys and exit")
+                    help="print every registered protocol/engine/topology/"
+                         "traffic/scenario key with its description and "
+                         "exit (the discovery surface)")
     ap.add_argument("--dump-spec", action="store_true",
                     help="print the resolved spec JSON and exit (no run)")
     ap.add_argument("--csv", action="store_true",
@@ -69,6 +71,11 @@ def build_parser() -> argparse.ArgumentParser:
     win.add_argument("--seg-len", type=int)
     win.add_argument("--horizon", type=int)
     win.add_argument("--collect", choices=("auto", "full", "aggregate"))
+    sh = ap.add_argument_group("shard")
+    sh.add_argument("--devices", type=int,
+                    help="device-mesh size for engine 'sharded' (default: "
+                         "all visible; force host devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=D)")
     met = ap.add_argument_group("metrics")
     met.add_argument("--oracle", action="store_true", default=None,
                      help="happens-before oracle check on the trace")
@@ -90,6 +97,7 @@ _FLAG_MAP = [
     ("n_rms", "dynamics", "n_rms"), ("n_crashes", "dynamics", "n_crashes"),
     ("window", "window", "window"), ("seg_len", "window", "seg_len"),
     ("horizon", "window", "horizon"), ("collect", "window", "collect"),
+    ("devices", "shard", "devices"),
     ("oracle", "metrics", "oracle"), ("crossval", "metrics", "crossval"),
 ]
 
@@ -108,10 +116,15 @@ def spec_from_args(args: argparse.Namespace) -> RunSpec:
 
 
 def print_registries() -> None:
+    """The discovery surface: every registered key on every axis, with
+    its one-line description (``python -m repro.api --list``)."""
     for name, registry in (("protocols", PROTOCOLS), ("engines", ENGINES),
                            ("topologies", TOPOLOGIES), ("traffic", TRAFFIC),
                            ("scenarios (dynamics kinds)", SCENARIOS)):
-        print(f"{name}: {', '.join(sorted(registry.keys()))}")
+        print(f"{name}:")
+        for key in sorted(registry.keys()):
+            desc = describe_entry(registry.get(key))
+            print(f"  {key:<16} {desc}" if desc else f"  {key}")
 
 
 def report_csv_rows(rep) -> list:

@@ -26,8 +26,9 @@ from typing import Any, Callable, Dict, Iterable, Optional
 from ..core.vecsim import scenario as _scn
 from .spec import RunSpec, SpecError
 
-__all__ = ["Registry", "ProtocolEntry", "ScenarioEntry",
-           "PROTOCOLS", "ENGINES", "TOPOLOGIES", "TRAFFIC", "SCENARIOS"]
+__all__ = ["Registry", "ProtocolEntry", "EngineEntry", "ScenarioEntry",
+           "PROTOCOLS", "ENGINES", "TOPOLOGIES", "TRAFFIC", "SCENARIOS",
+           "describe_entry"]
 
 
 class Registry:
@@ -103,6 +104,36 @@ class ProtocolEntry:
     windowed: bool
 
 
+@dataclass(frozen=True)
+class EngineEntry:
+    """One execution engine: a runner callable plus the one-line
+    description the CLI discovery surface (``python -m repro.api
+    --list``) prints.  Calling the entry calls the runner, so
+    ``repro.api.run`` dispatches through it unchanged."""
+
+    name: str
+    description: str
+    run: Callable
+
+    def __call__(self, *args, **kwargs):
+        return self.run(*args, **kwargs)
+
+
+def describe_entry(value: Any) -> str:
+    """Best-effort one-line description of a registry value: an explicit
+    ``description`` attribute, the value itself when it *is* the
+    description (the batch-traffic marker), or the first docstring line
+    of a registered callable."""
+    desc = getattr(value, "description", None)
+    if isinstance(desc, str) and desc:
+        return desc
+    if isinstance(value, str):
+        return value
+    import inspect
+    doc = inspect.getdoc(value)
+    return doc.splitlines()[0].strip() if doc else ""
+
+
 PROTOCOLS.register("pc", ProtocolEntry(
     "pc", "PC-broadcast: O(1) control info, link-safety ping gating "
     "(the paper's Algorithm 2)", mode="pc", windowed=True))
@@ -138,6 +169,7 @@ class ScenarioEntry:
     build: Callable[[RunSpec], Any]
     topologies: Optional[frozenset] = None   # None = any registered
     traffic: Optional[frozenset] = frozenset({"uniform"})  # None = any
+    description: str = ""                    # one line for --list
 
     def check(self, spec: RunSpec) -> None:
         if self.topologies is not None \
@@ -217,12 +249,24 @@ def _build_churn_wave(spec: RunSpec):
 
 
 SCENARIOS.register("none", ScenarioEntry(
-    "none", _build_none, traffic=None))   # any registered traffic model
-SCENARIOS.register("link_add", ScenarioEntry("link_add", _build_link_add))
-SCENARIOS.register("churn", ScenarioEntry("churn", _build_churn))
-SCENARIOS.register("crash", ScenarioEntry("crash", _build_crash))
+    "none", _build_none, traffic=None,   # any registered traffic model
+    description="static overlay; batch or sustained traffic only"))
+SCENARIOS.register("link_add", ScenarioEntry(
+    "link_add", _build_link_add,
+    description="batched link additions racing later broadcasts (the "
+    "Fig. 3 shortcut that ping gating makes safe)"))
+SCENARIOS.register("churn", ScenarioEntry(
+    "churn", _build_churn,
+    description="interleaved link additions and removals under traffic"))
+SCENARIOS.register("crash", ScenarioEntry(
+    "crash", _build_crash,
+    description="silent mid-broadcast crashes (Fig. 5b)"))
 SCENARIOS.register("partition_heal", ScenarioEntry(
     "partition_heal", _build_partition_heal,
-    topologies=frozenset({"ring"})))
+    topologies=frozenset({"ring"}),
+    description="brownout partition over a thin bridge, then healed "
+    "cross links re-gating"))
 SCENARIOS.register("churn_wave", ScenarioEntry(
-    "churn_wave", _build_churn_wave))
+    "churn_wave", _build_churn_wave,
+    description="periodic waves of adds+removals with traffic "
+    "throughout (diurnal / flash-crowd membership)"))

@@ -12,8 +12,14 @@ Engine auto-selection (DESIGN.md §3): with ``engine="auto"``,
   2. otherwise the monolithic vec engine runs iff its two dense
      ``(N, M_total)`` int32 planes fit the spec's memory budget
      (``8·N·M_total <= memory_budget_mb``);
-  3. otherwise the streaming windowed engine runs with
-     ``window = clamp(budget // (8·N), 64, M_total)`` live columns.
+  3. otherwise a streaming engine runs with the budget-derived window —
+     **per-device-aware**: when more than one device is visible (or
+     ``shard.devices`` asks for several), the device-sharded engine
+     (``vecsim.shard``) takes the run with
+     ``window = clamp(D·budget // (8·N), 64, M_total)`` — the budget is
+     per device, so a mesh widens the window D-fold; on a single device
+     the single-host windowed engine runs with
+     ``window = clamp(budget // (8·N), 64, M_total)``.
 
 The exact event engine is never auto-selected — it is the O(objects)
 reference implementation and must be asked for by name.
@@ -36,7 +42,7 @@ from ..core.vecsim.metrics import build_trace
 from ..core.vecsim.scenario import VecScenario
 from ..core.vecsim.sim import execute_vec, resolve_backend
 from ..core.vecsim.vc import run_vec_vc
-from .registry import ENGINES, PROTOCOLS, SCENARIOS
+from .registry import ENGINES, PROTOCOLS, SCENARIOS, EngineEntry
 from .spec import RunSpec, SpecError
 
 __all__ = ["RunReport", "run", "build_scenario", "select_engine"]
@@ -101,11 +107,25 @@ def build_scenario(spec: RunSpec) -> VecScenario:
     return scn
 
 
-def _auto_window(spec: RunSpec, scn: VecScenario) -> int:
+def _auto_window(spec: RunSpec, scn: VecScenario, devices: int = 1) -> int:
     """The budget-derived window (DESIGN.md §3.3 rule 3):
-    ``clamp(budget // (8·N), 64, M_total)`` live columns."""
-    budget = spec.memory_budget_mb * 2 ** 20
+    ``clamp(D·budget // (8·N), 64, M_total)`` live columns — the memory
+    budget reads per device, so a mesh scales the window with it."""
+    budget = devices * spec.memory_budget_mb * 2 ** 20
     return int(min(max(64, budget // (8 * scn.n)), scn.m_total))
+
+
+def _device_count(spec: RunSpec) -> int:
+    """Devices the sharded engine would run on: the explicit
+    ``shard.devices`` if set, else whatever jax can see (1 when jax is
+    absent — auto-selection then never proposes the sharded engine)."""
+    if spec.shard.devices is not None:
+        return spec.shard.devices
+    try:
+        import jax
+        return jax.device_count()
+    except ImportError:
+        return 1
 
 
 def select_engine(spec: RunSpec, scn: VecScenario
@@ -116,12 +136,24 @@ def select_engine(spec: RunSpec, scn: VecScenario
     if spec.engine != "auto":
         return spec.engine, spec.window.window
     if spec.window.window is not None:
+        # an explicit window is a streaming request; an explicit mesh
+        # request must not be dropped on the floor with it (validate()
+        # rejects devices>1 on the numpy backend)
+        if (spec.shard.devices or 1) > 1:
+            return "sharded", spec.window.window
         return "windowed", spec.window.window
     proto = PROTOCOLS.get(spec.protocol)
     budget = spec.memory_budget_mb * 2 ** 20
     mono_bytes = 8 * scn.n * max(scn.m_total, 1)
     if mono_bytes <= budget or not proto.windowed:
         return "vec", None
+    if spec.backend == "numpy":
+        # numpy can never shard — skip device detection (and its jax
+        # runtime initialization) entirely
+        return "windowed", _auto_window(spec, scn)
+    devices = _device_count(spec)
+    if devices > 1:
+        return "sharded", _auto_window(spec, scn, devices=devices)
     return "windowed", _auto_window(spec, scn)
 
 
@@ -218,9 +250,43 @@ def _run_windowed(spec: RunSpec, scn: VecScenario, window: Optional[int],
             extras)
 
 
-ENGINES.register("exact", _run_exact)
-ENGINES.register("vec", _run_vec)
-ENGINES.register("windowed", _run_windowed)
+def _run_sharded(spec: RunSpec, scn: VecScenario, window: Optional[int],
+                 snapshot_round: Optional[int]):
+    if spec.protocol == "vc":
+        raise SpecError("protocol 'vc' has no sharded engine (its "
+                        "delivery drain is a data-dependent host loop); "
+                        "use engine='vec'")
+    from ..core.vecsim.shard import execute_sharded
+    devices = spec.shard.devices
+    if window is None:
+        # explicit engine="sharded" without a window: the per-device
+        # budget rule over the devices the run will actually use
+        window = _auto_window(spec, scn, devices=_device_count(spec))
+    res = execute_sharded(
+        scn, window, n_devices=devices, horizon=spec.window.horizon,
+        seg_len=spec.window.seg_len, snapshot_round=snapshot_round,
+        collect=spec.window.collect)
+    extras = _vec_extras(spec, res)
+    extras["peak_live"] = res.peak_live
+    extras["expired_columns"] = int(res.expired.sum())
+    extras["devices"] = res.n_devices
+    return (res, res.stats, res.delivered_frac(), res.mean_latency(),
+            extras)
+
+
+ENGINES.register("exact", EngineEntry(
+    "exact", "O(objects) discrete-event reference simulator (never "
+    "auto-selected; paper-faithful sub-round timing)", _run_exact))
+ENGINES.register("vec", EngineEntry(
+    "vec", "monolithic vectorized lockstep engine: dense (N, M_total) "
+    "planes, numpy or jax backend", _run_vec))
+ENGINES.register("windowed", EngineEntry(
+    "windowed", "streaming windowed engine: O(N*window) live-column "
+    "buffer for sustained traffic on one host", _run_windowed))
+ENGINES.register("sharded", EngineEntry(
+    "sharded", "device-sharded windowed engine: process axis partitioned "
+    "over a jax mesh (shard_map frontier exchange), N to 10^6+",
+    _run_sharded))
 
 
 # --------------------------------------------------------------------- #
@@ -250,9 +316,9 @@ def run(spec: RunSpec) -> RunReport:
     report = RunReport(
         spec=spec, engine=engine_name, backend=backend,
         # the result records the window actually used (covers explicit
-        # engine="windowed" with the budget-derived default)
+        # engine="windowed"/"sharded" with the budget-derived default)
         window=(getattr(result, "window", window)
-                if engine_name == "windowed" else None),
+                if engine_name in ("windowed", "sharded") else None),
         wall_seconds=wall, n=scn.n, m_app=scn.m_app, rounds=scn.rounds,
         stats=stats, delivered_frac=frac, mean_latency=latency,
         extras=extras, result=result, scenario=scn)

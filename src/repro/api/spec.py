@@ -21,7 +21,7 @@ from dataclasses import dataclass, field, replace
 from typing import Any, Dict, Optional, Union
 
 __all__ = ["SpecError", "TopologySpec", "TrafficSpec", "DynamicsSpec",
-           "WindowSpec", "MetricsSpec", "RunSpec"]
+           "WindowSpec", "ShardSpec", "MetricsSpec", "RunSpec"]
 
 
 class SpecError(ValueError):
@@ -77,6 +77,21 @@ class WindowSpec:
 
 
 @dataclass(frozen=True)
+class ShardSpec:
+    """Device-mesh knobs for the sharded engine (``vecsim.shard``).
+
+    ``devices=None`` means "every device jax can see" at run time (and
+    "what jax would see" during engine auto-selection); an explicit
+    count builds a 1-D mesh over that many devices and fails loudly if
+    fewer exist.  The memory budget (``memory_budget_mb``) is read
+    *per device* when the sharded engine is auto-selected, so adding
+    devices grows the auto-derived window proportionally (DESIGN.md
+    §3.3)."""
+
+    devices: Optional[int] = None   # mesh size; None = all visible
+
+
+@dataclass(frozen=True)
 class MetricsSpec:
     """What to measure beyond the engine's NetStats."""
 
@@ -101,6 +116,7 @@ class RunSpec:
     traffic: TrafficSpec = field(default_factory=TrafficSpec)
     dynamics: DynamicsSpec = field(default_factory=DynamicsSpec)
     window: WindowSpec = field(default_factory=WindowSpec)
+    shard: ShardSpec = field(default_factory=ShardSpec)
     metrics: MetricsSpec = field(default_factory=MetricsSpec)
     # Escape hatch: run a prebuilt VecScenario (topology/traffic/dynamics
     # sections are then ignored).  Used by the legacy shims and tests.
@@ -157,7 +173,7 @@ class RunSpec:
             raise SpecError(f"window.collect={self.window.collect!r} must "
                             "be one of ['aggregate', 'auto', 'full']")
         proto = reg.PROTOCOLS.get(self.protocol)
-        wants_window = (self.engine == "windowed"
+        wants_window = (self.engine in ("windowed", "sharded")
                         or self.window.window is not None)
         if wants_window and not proto.windowed:
             raise SpecError(
@@ -168,9 +184,30 @@ class RunSpec:
                 and self.engine in ("vec", "exact"):
             raise SpecError(
                 f"window.window={self.window.window} only applies to "
-                f"engine 'windowed' or 'auto' (got engine="
+                f"engine 'windowed', 'sharded' or 'auto' (got engine="
                 f"{self.engine!r}); the monolithic/exact engines would "
                 "silently ignore it")
+        if self.shard.devices is not None:
+            if not isinstance(self.shard.devices, int) \
+                    or isinstance(self.shard.devices, bool) \
+                    or self.shard.devices < 1:
+                raise SpecError(f"shard.devices={self.shard.devices!r} "
+                                "must be an int >= 1 (or None for all "
+                                "visible devices)")
+            if self.engine in ("vec", "exact", "windowed"):
+                raise SpecError(
+                    f"shard.devices={self.shard.devices} only applies "
+                    f"to engine 'sharded' or 'auto' (got engine="
+                    f"{self.engine!r}); single-host engines would "
+                    "silently ignore it")
+            if self.shard.devices > 1 and self.backend == "numpy":
+                raise SpecError(
+                    f"shard.devices={self.shard.devices} needs the jax "
+                    "backend (the mesh is a jax program); use "
+                    "backend='jax' or 'auto'")
+        if self.engine == "sharded" and self.backend == "numpy":
+            raise SpecError("engine 'sharded' is a jax device-mesh "
+                            "program; use backend='jax' or 'auto'")
         if self.backend == "jax" and self.protocol == "vc":
             raise SpecError("protocol 'vc' is numpy-only (the delivery "
                             "drain is a data-dependent host loop); use "
@@ -197,7 +234,7 @@ class RunSpec:
         keys raise, missing keys take the dataclass defaults."""
         sections = dict(topology=TopologySpec, traffic=TrafficSpec,
                         dynamics=DynamicsSpec, window=WindowSpec,
-                        metrics=MetricsSpec)
+                        shard=ShardSpec, metrics=MetricsSpec)
         kw: Dict[str, Any] = {}
         top_fields = {f.name for f in dataclasses.fields(cls)}
         for key, value in d.items():

@@ -20,6 +20,10 @@ Modules:
               partition-heal, churn waves, sustained streams)
   sim       — the lockstep engine, both backends, NetStats emission
   stream    — streaming windowed execution in O(N·window) memory
+  shard     — the windowed engine partitioned over a JAX device mesh
+              (shard_map row-blocks + per-round frontier exchange): the
+              process axis stops being single-host, N reaches 10^6+
+              (DESIGN.md §2.5; benchmarks/bench_scale.py)
   vc        — the vector-clock baseline, vectorized and measured
               (Table 1's O(N)/O(W·N) columns; DESIGN.md §3.4)
   metrics   — Fig. 7 metrics, oracle-compatible traces, multisets
@@ -44,7 +48,8 @@ from .scenario import (INF, TrafficModel, VecScenario, bursty_traffic,
                        static_scenario, sustained_scenario)
 from .sim import (SERIES_FIELDS, SlotSchedule, VecRunResult, execute_vec,
                   run_vec)
-from .stream import (WindowedRunResult, WindowOverflowError,
+from .shard import ShardedRunResult, execute_sharded
+from .stream import (ColumnWindow, WindowedRunResult, WindowOverflowError,
                      execute_windowed, run_vec_windowed)
 from .vc import VCVecRunResult, run_vec_vc
 
@@ -57,8 +62,9 @@ __all__ = [
     "sustained_scenario",
     "SERIES_FIELDS", "SlotSchedule", "VecRunResult", "run_vec",
     "execute_vec",
-    "WindowedRunResult", "WindowOverflowError", "run_vec_windowed",
-    "execute_windowed",
+    "WindowedRunResult", "WindowOverflowError", "ColumnWindow",
+    "run_vec_windowed", "execute_windowed",
+    "ShardedRunResult", "execute_sharded",
     "VCVecRunResult", "run_vec_vc",
     "safe_out_mask", "full_out_mask", "mean_shortest_path_vec",
     "unsafe_link_stats_vec", "build_trace", "delivered_multiset",

@@ -551,14 +551,17 @@ def bursty_traffic(seed: int, n: int, rate_hi: float, rate_lo: float,
 
 
 def _ring_entry(seed, n, k, max_delay, free_slots, beta):
+    """directed ring on slot 0 plus random extra out-links"""
     return ring_topology(seed, n, k, max_delay, free_slots)
 
 
 def _kregular_entry(seed, n, k, max_delay, free_slots, beta):
+    """random k-regular digraph (equal out- AND in-degree)"""
     return kregular_topology(seed, n, k, max_delay, free_slots)
 
 
 def _smallworld_entry(seed, n, k, max_delay, free_slots, beta):
+    """Watts-Strogatz ring lattice rewired with probability beta"""
     return smallworld_topology(seed, n, k, beta=beta, max_delay=max_delay,
                                free_slots=free_slots)
 
@@ -597,19 +600,23 @@ class TrafficModel:
 
     build: object
     mean_rate: object
+    description: str = ""        # one line for the CLI discovery surface
 
 
 _TRAFFIC = {
     "poisson": TrafficModel(
         build=lambda seed, n, t0, t1, mm, p:
             poisson_traffic(seed, n, p["rate"], t0, t1, mm),
-        mean_rate=lambda p: p["rate"]),
+        mean_rate=lambda p: p["rate"],
+        description="Poisson(rate) broadcasts per round, sustained"),
     "bursty": TrafficModel(
         build=lambda seed, n, t0, t1, mm, p:
             bursty_traffic(seed, n, p["rate"], p["rate_lo"], p["period"],
                            p["duty"], t0, t1, mm),
         mean_rate=lambda p: (p["duty"] * p["rate"]
-                             + (1 - p["duty"]) * p["rate_lo"])),
+                             + (1 - p["duty"]) * p["rate_lo"]),
+        description="on/off load: Poisson(rate) for a duty fraction of "
+        "each period, Poisson(rate_lo) otherwise"),
 }
 
 

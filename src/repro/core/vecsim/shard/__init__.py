@@ -1,0 +1,48 @@
+"""repro.core.vecsim.shard — the device-sharded streaming engine.
+
+The streaming windowed engine (``vecsim.stream``) removed the *traffic*
+cap — O(N·W) memory however many messages flow — but the process axis
+still had to fit one device, topping out around N ≈ 100k on a host.
+This package partitions that axis across a JAX device mesh with
+``shard_map``: each device owns an ``N/D`` row-block of every plane
+(arrival/delivery buffers, the ``(N, K)`` adjacency slot table, gating
+state), and the only cross-shard traffic is a per-round **frontier
+exchange** — a ring ``ppermute`` of this round's delivered columns and
+their scatter-min arrival contributions, replacing the global scatter.
+Pong detection rides a second, much thinner query ring; retirement
+aggregates are ``psum``-reduced across the mesh between segments.
+
+The round body replicates the monolithic JAX span semantics operation
+for operation (DESIGN.md §2.5 walks the partitioning argument), and the
+host driver shares the windowed engine's activation/retirement *logic*
+via :class:`~repro.core.vecsim.stream.ColumnWindow` — which is why a
+sharded run's delivered matrix, per-round series and ``NetStats`` are
+byte-identical to the windowed engine's on any scenario small enough to
+run both, at every device count (differentially fuzzed in
+``tests/test_vecsim_fuzz.py``, matrix-tested in
+``tests/test_vecsim_shard.py``).
+
+At scale the state never round-trips to the host between segments (the
+single-host engine's known bottleneck): spans, retirement reductions
+and column recycling all execute device-side, and the host sees only
+(W,)-sized aggregates.  ``benchmarks/bench_scale.py`` drives a
+sustained-traffic run at N ≥ 1M processes on a forced host-device mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=D``) — the
+population regime the paper's constant-size control information is
+about, and two orders of magnitude past the single-host engines.
+
+Modules:
+  mesh     — device-mesh resolution and process-axis padding
+  spanner  — the ``shard_map`` span runner and retirement kernels
+  driver   — ``execute_sharded``: the host driver and result type
+
+Reachable from the front door as ``engine="sharded"``
+(``repro.api.run``); auto-selected when the memory budget forces
+windowing and more than one device is visible (DESIGN.md §3.3).
+"""
+
+from .driver import ShardedRunResult, execute_sharded
+from .mesh import pad_rows, resolve_devices, shard_mesh
+
+__all__ = ["ShardedRunResult", "execute_sharded", "resolve_devices",
+           "shard_mesh", "pad_rows"]

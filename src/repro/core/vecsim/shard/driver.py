@@ -1,0 +1,224 @@
+"""``execute_sharded`` — the host driver of the device-sharded engine.
+
+Structurally the twin of ``stream.execute_windowed``: the same
+:class:`~repro.core.vecsim.stream.ColumnWindow` activates messages into
+live columns, the same segment loop advances rounds, and the same
+retirement *rules* recycle columns — but the state lives on the device
+mesh for the whole run.  Segments execute through the ``shard_map`` span
+runner, retirement decisions are made from ``psum``-reduced per-column
+aggregates, and column recycling is a masked device-side update; the
+host never materializes an ``(N, W)`` plane unless the run is small
+enough to collect the full delivered matrix (``collect="full"``).
+
+Byte-identity contract: for any scenario both engines can run, the
+returned delivered matrix, per-round series, ``NetStats``, per-message
+aggregates, ``peak_live`` and overflow behavior equal the windowed
+engine's exactly, at every device count — asserted by
+``tests/test_vecsim_shard.py`` and the differential fuzz suite.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..scenario import INF, VecScenario
+from ..sim import SERIES_FIELDS, SlotSchedule, init_topo_state, \
+    stats_from_series
+from ..stream import ColumnWindow, WindowedRunResult
+from .mesh import pad_rows, resolve_devices, shard_mesh
+from .spanner import STATE_KEYS, shard_retire_kernels, shard_span_runner
+
+__all__ = ["ShardedRunResult", "execute_sharded"]
+
+
+@dataclass
+class ShardedRunResult(WindowedRunResult):
+    """A windowed-engine result produced by the sharded engine: same
+    fields and semantics, plus the device count that executed it."""
+
+    n_devices: int = 1
+
+
+def _padded_state(scn: VecScenario, w: int, n_pad: int) -> Dict[str, np.ndarray]:
+    """Host-built initial state with inert padding rows: no links, no
+    arrivals, crashed (so the all-alive-delivered retirement rule and
+    the per-round stats never see them)."""
+    st = init_topo_state(scn, w)
+    n = scn.n
+    if n_pad == n:
+        return st
+    extra = n_pad - n
+    pad = dict(
+        arr=np.full((extra, w), INF, np.int32),
+        delivered=np.full((extra, w), -1, np.int32),
+        adj=np.full((extra, scn.k), -1, np.int32),
+        delay=np.ones((extra, scn.k), np.int32),
+        active=np.zeros((extra, scn.k), bool),
+        gate=np.full((extra, scn.k), -1, np.int32),
+        flush=np.full((extra, scn.k), INF, np.int32),
+        ping=np.full((extra, scn.k), -1, np.int32),
+        crashed=np.ones(extra, bool),
+        ever_del=np.zeros(extra, bool),
+    )
+    return {key: np.concatenate([st[key], pad[key]]) for key in st}
+
+
+def execute_sharded(scn: VecScenario, window: int,
+                    n_devices: Optional[int] = None,
+                    horizon: Optional[int] = None, seg_len: int = 32,
+                    snapshot_round: Optional[int] = None,
+                    collect: str = "auto") -> ShardedRunResult:
+    """Run ``scn`` through a ``window``-column streaming buffer sharded
+    over ``n_devices`` devices (``None`` = all visible).  Parameters
+    match :func:`~repro.core.vecsim.stream.execute_windowed`; the
+    backend is implicitly jax (the engine *is* a jax mesh program).
+
+    This is the engine implementation behind ``repro.api.run`` with
+    ``engine="sharded"``; prefer the front door in new code."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    d = resolve_devices(n_devices)
+    mesh = shard_mesh(d)
+    w = int(window)
+    if w < 1:
+        raise ValueError("window must be >= 1")
+    seg_len = max(1, int(seg_len))
+    n, m_app, m_total = scn.n, scn.m_app, scn.m_total
+    n_pad = pad_rows(n, d)
+    rounds = scn.rounds
+    pc = scn.mode == "pc"
+    gating = scn.n_adds > 0
+    if collect == "auto":
+        collect = "full" if n * max(m_total, 1) <= (1 << 26) else "aggregate"
+    if collect not in ("full", "aggregate"):
+        raise ValueError(f"unknown collect mode {collect!r}")
+
+    cw = ColumnWindow(scn, w)
+    row = NamedSharding(mesh, P("shard"))
+    rep = NamedSharding(mesh, P())
+    st0 = _padded_state(scn, w, n_pad)
+    state = tuple(jax.device_put(st0[key], row) for key in STATE_KEYS)
+    del st0
+
+    series = np.zeros((rounds, len(SERIES_FIELDS)), np.int64)
+    delivered_full = (np.full((n, m_total), -1, np.int32)
+                      if collect == "full" else None)
+    deliv_count = np.zeros(m_total, np.int64)
+    bcast_done = np.zeros(m_app, bool)
+    expired = np.zeros(m_total, bool)
+    first_receipts = 0
+    lat_sum = 0
+    lat_cnt = 0
+    snapshot: Optional[Dict[str, np.ndarray]] = None
+
+    caps = cw.segment_caps(rounds, seg_len)
+    runner = shard_span_runner(d, scn.k, pc, scn.always_gate,
+                               scn.pong_delay, gating=gating)
+    reduce_run, apply_run = shard_retire_kernels(d)
+    rounds_dev = np.int32(rounds)
+
+    def host_state() -> Dict[str, np.ndarray]:
+        return {key: np.asarray(v)[:n] for key, v in zip(STATE_KEYS, state)}
+
+    def run_segment(lo: int, hi: int) -> None:
+        nonlocal state
+        padded = cw.padded_schedule(lo, hi, caps)
+        sched_dev = {f.name: jax.device_put(getattr(padded, f.name), rep)
+                     for f in SlotSchedule.__dataclass_fields__.values()}
+        ts = np.full(seg_len, -3, np.int32)
+        ts[: hi - lo] = np.arange(lo, hi, dtype=np.int32)
+        state, stats = runner(state, sched_dev, jax.device_put(ts, rep))
+        series[lo:hi] = np.asarray(stats, np.int64)[: hi - lo]
+
+    def column_origins() -> np.ndarray:
+        """Per-column broadcast origin (app columns only; -1 elsewhere),
+        so the reduce kernel's owner shard can answer bcast_done."""
+        origins = np.full(w, -1, np.int32)
+        app = cw.slot_app & (cw.slot_msg >= 0)
+        if app.any():
+            origins[app] = scn.bcast_origin[cw.slot_msg[app]]
+        return origins
+
+    def record_and_free(cols: np.ndarray, by_expiry: np.ndarray,
+                        red, hung: np.ndarray) -> None:
+        """Fold retired columns into the host aggregates and recycle
+        their device-side planes — the sharded twin of the windowed
+        driver's ``record_and_free``."""
+        nonlocal state, first_receipts, lat_sum, lat_cnt
+        if not len(cols):
+            return
+        cnt, arrcnt, sumdel, _, _, _, _, bdone = red
+        ids = cw.slot_msg[cols]
+        deliv_count[ids] = cnt[cols]
+        expired[ids] |= by_expiry
+        first_receipts += int(arrcnt[cols].sum())
+        app = cw.slot_app[cols]
+        if delivered_full is not None:
+            delivered_full[:, ids] = np.asarray(state[1][:, cols])[:n]
+        retire = np.zeros(w, bool)
+        retire[cols] = True
+        if app.any():
+            acols = cols[app]
+            births = cw.slot_birth[acols].astype(np.int64)
+            lat_sum += int((sumdel[acols] - cnt[acols] * births).sum())
+            lat_cnt += int(cnt[acols].sum())
+            bcast_done[ids[app]] = bdone[acols] > 0
+        state = apply_run(state, retire, retire & cw.slot_app, hung)
+        cw.free_cols(cols)
+
+    def retire(t_now: int) -> int:
+        live = cw.slot_msg >= 0
+        if not live.any():
+            return 0
+        red = tuple(np.asarray(x)
+                    for x in reduce_run(state, column_origins(), rounds_dev))
+        cnt, arrcnt, sumdel, alive, alivedel, blockcnt, refcnt, bdone = red
+        full_del = alivedel == int(alive)
+        blocked = (blockcnt > 0) & cw.slot_app
+        ref = refcnt > 0
+        dead = (cnt == 0) & (cw.slot_birth < t_now)
+        done = live & ~ref & ((full_del & ~blocked) | dead)
+        by_exp = np.zeros(w, bool)
+        hung = np.zeros(w, bool)
+        if horizon is not None:
+            by_exp = live & ~done & (t_now - cw.slot_birth > horizon)
+            hung = by_exp & ref
+            done |= by_exp
+        cols = np.nonzero(done)[0]
+        record_and_free(cols, by_exp[cols], red, hung)
+        return len(cols)
+
+    t = 0
+    while t < rounds:
+        t_end = min(t + seg_len, rounds)
+        if snapshot_round is not None and t <= snapshot_round:
+            t_end = min(t_end, snapshot_round + 1)
+        t_end = cw.activate(t, t_end)
+        run_segment(t, t_end)
+        if snapshot_round is not None and t_end - 1 == snapshot_round:
+            snapshot = host_state()
+            snapshot["is_app"] = cw.slot_app.copy()
+            snapshot["slot_msg"] = cw.slot_msg.copy()
+        retire(t_end)
+        t = t_end
+
+    # Drain: whatever is still live keeps its end-of-run values, exactly
+    # like the windowed engine at t == rounds.
+    live_cols = cw.live_cols()
+    if len(live_cols):
+        red = tuple(np.asarray(x)
+                    for x in reduce_run(state, column_origins(), rounds_dev))
+        record_and_free(live_cols, np.zeros(len(live_cols), bool), red,
+                        np.zeros(w, bool))
+
+    stats = stats_from_series(series, first_receipts)
+    return ShardedRunResult(
+        scenario=scn, window=w, backend="jax", stats=stats, series=series,
+        delivered=delivered_full, deliv_count=deliv_count,
+        bcast_done=bcast_done, expired=expired, state=host_state(),
+        snapshot=snapshot, peak_live=cw.peak_live, lat_sum=lat_sum,
+        lat_cnt=lat_cnt, n_devices=d)

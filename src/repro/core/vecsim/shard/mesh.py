@@ -1,0 +1,67 @@
+"""Device-mesh plumbing for the sharded streaming engine.
+
+One 1-D mesh axis (``"shard"``) partitions the process axis; everything
+else (message columns, link slots) stays replicated or local.  CPU runs
+get a multi-device mesh by forcing host platform devices *before* jax
+initializes::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4
+
+(tests spawn subprocesses so the flag precedes jax import, same pattern
+as ``tests/test_engine.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["resolve_devices", "shard_mesh", "pad_rows"]
+
+
+def resolve_devices(n_devices: Optional[int] = None) -> int:
+    """Resolve a device-count request against what jax actually has.
+
+    ``None`` means "all visible devices".  Asking for more devices than
+    exist is an error naming the ``XLA_FLAGS`` escape hatch rather than
+    a silent fallback — a sharded run that quietly collapses to one
+    device would invalidate the benchmark it was asked for.
+    """
+    import jax
+
+    avail = jax.device_count()
+    if n_devices is None:
+        return avail
+    n_devices = int(n_devices)
+    if n_devices < 1:
+        raise ValueError(f"n_devices={n_devices} must be >= 1")
+    if n_devices > avail:
+        raise RuntimeError(
+            f"sharded engine asked for {n_devices} devices but jax sees "
+            f"{avail}; on CPU force host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n_devices} (before jax initializes)")
+    return n_devices
+
+
+@functools.lru_cache(maxsize=None)
+def shard_mesh(n_devices: int):
+    """The cached 1-D ``("shard",)`` mesh over the first ``n_devices``
+    devices (cached so every runner/kernel shares one Mesh object and
+    jit caches key consistently)."""
+    import jax
+
+    devs = jax.devices()[:resolve_devices(n_devices)]
+    return jax.sharding.Mesh(np.array(devs), ("shard",))
+
+
+def pad_rows(n: int, n_devices: int) -> int:
+    """Process-axis length padded up to a multiple of the device count.
+
+    Padding rows are inert by construction (no links, never any arrival,
+    marked crashed so the all-alive-delivered retirement rule ignores
+    them) and are sliced off every host-side export.
+    """
+    return -(-n // n_devices) * n_devices

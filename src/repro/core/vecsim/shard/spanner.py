@@ -1,0 +1,342 @@
+"""``shard_map`` span runner: the windowed round body over a device mesh.
+
+Partitioning (DESIGN.md §2.5): every per-process plane — ``arr`` /
+``delivered`` ``(N, W)`` buffers, the ``(N, K)`` adjacency/delay/gating
+tables, ``crashed``/``ever_del`` — is row-block sharded over a 1-D
+``("shard",)`` mesh; schedules, the ``is_app`` column mask and the round
+index stream are replicated.  Per round, three things cross shards:
+
+  * **frontier exchange** — the flood-forward + flush scatter (monolithic
+    phases 7/8) becomes a ring: each device's contribution plane for this
+    round's delivered columns (``vals`` = ``t + delay`` where sending,
+    ``INF`` elsewhere, with its global target rows) visits every device
+    via ``lax.ppermute``; each visit scatter-mins the rows it owns.
+    Scatter-min is associative/commutative on ints, so the result is
+    bit-equal to the monolithic global scatter regardless of hop order;
+  * **pong query ring** — pong detection reads ``delivered[q, s]`` at the
+    gated link's remote target; the ``(N/D, K)`` query triples (target,
+    ping slot, answer) ride a second ring and come home after D hops.
+    This ring is K columns wide, not W, and is elided entirely (with the
+    whole gating machinery) when the scenario schedules no additions;
+  * **stats psum** — the per-round series row is ``psum``-reduced so every
+    shard returns the identical replicated ``(rounds, 6)`` series.
+
+Everything else is owner-local: schedule events (removals, additions
+with the Algorithm 2 gating decision, crashes, broadcasts) apply on the
+shard owning their process row and drop elsewhere; arrivals/deliveries
+are element-wise.  The retirement kernels at the bottom give the host
+driver (``driver.py``) per-column aggregates (``psum`` over the mesh)
+and a masked column-recycle, so state never leaves the devices between
+segments.
+
+The body mirrors ``sim.jax_span_runner`` operation for operation —
+tests assert byte-identical delivered/series/NetStats against the
+windowed engine at every device count.
+"""
+
+from __future__ import annotations
+
+import functools
+
+from ..scenario import INF
+from ..sim import SERIES_FIELDS, _STATE_KEYS
+from .mesh import shard_mesh
+
+__all__ = ["shard_span_runner", "shard_retire_kernels", "STATE_KEYS"]
+
+STATE_KEYS = _STATE_KEYS
+
+
+def _shift(d: int):
+    """Forward ring permutation on the ``shard`` axis."""
+    return [(i, (i + 1) % d) for i in range(d)]
+
+
+@functools.lru_cache(maxsize=None)
+def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
+                      pong_delay: int, gating: bool = True):
+    """Jitted ``(state, sched, ts) -> (state, stats)`` sharded span
+    runner; same contract as :func:`~repro.core.vecsim.sim.
+    jax_span_runner` with state as row-block-sharded global arrays.
+    Negative rounds in ``ts`` are padding and leave the state untouched.
+    One compilation per (mesh, shape) signature, cached."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = shard_mesh(n_devices)
+    d = n_devices
+    inf = jnp.int32(INF)
+    perm = _shift(d)
+
+    def real_step(sched, state, t):
+        (arr, delivered, adj, delay, active, gate, flush, ping,
+         crashed, ever_del) = state
+        n_loc = arr.shape[0]
+        width = arr.shape[1]
+        me = jax.lax.axis_index("shard")
+        off = (me * n_loc).astype(jnp.int32)
+        is_app = sched["is_app"]
+        stats = jnp.zeros(len(SERIES_FIELDS), jnp.int64)
+
+        # -- 1. removals (owner-local; other shards drop) ---------------- #
+        if sched["rm_round"].shape[0]:
+            sel = sched["rm_round"] == t
+            pl = sched["rm_p"].astype(jnp.int32) - off
+            p_ = jnp.where(sel & (pl >= 0) & (pl < n_loc), pl, n_loc)
+            k_ = sched["rm_k"]
+            active = active.at[p_, k_].set(False, mode="drop")
+            gate = gate.at[p_, k_].set(-1, mode="drop")
+            flush = flush.at[p_, k_].set(inf, mode="drop")
+            ping = ping.at[p_, k_].set(-1, mode="drop")
+
+        # -- 2. additions (+ Algorithm 2 gating, owner-local) ------------- #
+        if sched["add_round"].shape[0]:
+            sel = sched["add_round"] == t
+            add_p, add_k = sched["add_p"], sched["add_k"]
+            add_slot = sched["add_slot"]
+            pl = add_p.astype(jnp.int32) - off
+            owned = (pl >= 0) & (pl < n_loc)
+            p_ = jnp.where(sel & owned, pl, n_loc)
+            adj = adj.at[p_, add_k].set(sched["add_q"], mode="drop")
+            delay = delay.at[p_, add_k].set(sched["add_delay"], mode="drop")
+            active = active.at[p_, add_k].set(True, mode="drop")
+            if pc:
+                safe_links = active & (gate < 0)
+                safe_cnt = safe_links.sum(axis=1)
+                pcl = jnp.clip(pl, 0, n_loc - 1)
+                own_slot_safe = safe_links[pcl, add_k]
+                other_safe = (safe_cnt[pcl]
+                              - own_slot_safe.astype(jnp.int32)) >= 1
+                if always_gate:
+                    want = other_safe
+                else:
+                    has_del = ever_del | ((delivered >= 0)
+                                          & is_app[None, :]).any(axis=1)
+                    want = other_safe & has_del[pcl]
+                want = want & ~crashed[pcl] & owned
+                gsel = sel & want
+                pg = jnp.where(gsel, pl, n_loc)
+                gate = gate.at[pg, add_k].set(t, mode="drop")
+                flush = flush.at[pg, add_k].set(inf, mode="drop")
+                ping = ping.at[pg, add_k].set(add_slot, mode="drop")
+                delivered = delivered.at[pg, add_slot].set(t, mode="drop")
+                csel = sel & ~want & owned
+                pc_ = jnp.where(csel, pl, n_loc)
+                gate = gate.at[pc_, add_k].set(-1, mode="drop")
+                flush = flush.at[pc_, add_k].set(inf, mode="drop")
+                ping = ping.at[pc_, add_k].set(-1, mode="drop")
+
+        # -- 3. crashes (owner-local) ------------------------------------- #
+        if sched["cr_round"].shape[0]:
+            sel = sched["cr_round"] == t
+            pl = sched["cr_pid"].astype(jnp.int32) - off
+            p_ = jnp.where(sel & (pl >= 0) & (pl < n_loc), pl, n_loc)
+            crashed = crashed.at[p_].set(True, mode="drop")
+
+        # -- 4. broadcasts (owner-local) ---------------------------------- #
+        if sched["bc_round"].shape[0]:
+            ol = sched["bc_origin"].astype(jnp.int32) - off
+            owned = (ol >= 0) & (ol < n_loc)
+            ocl = jnp.clip(ol, 0, n_loc - 1)
+            sel = (sched["bc_round"] == t) & owned & ~crashed[ocl]
+            o_ = jnp.where(sel, ol, n_loc)
+            delivered = delivered.at[o_, sched["bc_slot"]].max(t, mode="drop")
+
+        # -- 5. arrivals -> deliveries (element-wise, local) -------------- #
+        newly = (arr == t) & (delivered < 0) & ~crashed[:, None]
+        delivered = jnp.where(newly, t, delivered)
+
+        # -- 6. pong detection: the query ring ---------------------------- #
+        if pc and gating:
+            # Exactly the monolithic read delivered[clip(adj), clip(ping)]
+            # for *every* slot, masked afterwards — the triples visit all
+            # D shards and come home with the answer filled in by the
+            # target row's owner.
+            q = jnp.clip(adj, 0, n_loc * d - 1).reshape(-1)
+            s = jnp.clip(ping, 0, width - 1).reshape(-1)
+            ans = jnp.full(q.shape, jnp.int32(-1))
+            for _hop in range(d):
+                ql = q - off
+                hit = (ql >= 0) & (ql < n_loc)
+                qcl = jnp.clip(ql, 0, n_loc - 1)
+                ans = jnp.where(hit, delivered[qcl, s], ans)
+                if d > 1:
+                    q = jax.lax.ppermute(q, "shard", perm)
+                    s = jax.lax.ppermute(s, "shard", perm)
+                    ans = jax.lax.ppermute(ans, "shard", perm)
+            tgt_del = ans.reshape(adj.shape)
+            fire = ((gate >= 0) & (flush == inf) & (ping >= 0)
+                    & (tgt_del >= 0) & ~crashed[:, None])
+            flush = jnp.where(fire, t + pong_delay, flush)
+            stats = stats.at[4].set(fire.sum().astype(jnp.int64))
+
+        # -- 7+8. flush + forward: the frontier exchange ------------------ #
+        # Per link slot, the flush contributions (phase 7) and this
+        # round's flood-forward contributions (phase 8) min-combine into
+        # one (N/D, W) plane that rides the ring; both value t + delay
+        # over the same link, and scatter-min commutes, so the fusion is
+        # exact.  A slot flushed this round becomes safe *before* the
+        # forward pass, as in the monolithic body (gk_eff below).
+        new_del = delivered == t
+        napp = (new_del & is_app[None, :]).sum(axis=1)
+        nping = (new_del & ~is_app[None, :]).sum(axis=1)
+        has_new = new_del.any(axis=1) & ~crashed
+        elig_cnt = jnp.zeros(n_loc, jnp.int64)
+        flush_sent = jnp.int64(0)
+        for kk in range(k):
+            gk = gate[:, kk]
+            dk = (t + delay[:, kk])[:, None].astype(jnp.int32)
+            if pc and gating:
+                do = (flush[:, kk] == t) & active[:, kk] & ~crashed
+                win = ((delivered >= gk[:, None]) & (delivered < t)
+                       & do[:, None] & is_app[None, :])
+                flush_sent += win.sum().astype(jnp.int64)
+                gk_eff = jnp.where(flush[:, kk] == t, -1, gk)
+            else:
+                gk_eff = gk
+            ok = active[:, kk] & (gk_eff < 0) & (adj[:, kk] >= 0) & ~crashed
+            elig_cnt += ok.astype(jnp.int64)
+            fwd = ok & has_new
+            vals = jnp.where(new_del & fwd[:, None], dk, inf)
+            if pc and gating:
+                vals = jnp.minimum(vals, jnp.where(win, dk, inf))
+            tgt = adj[:, kk].astype(jnp.int32)
+            for hop in range(d):
+                tl = tgt - off
+                rows = jnp.where((tl >= 0) & (tl < n_loc), tl, n_loc)
+                arr = arr.at[rows, :].min(vals, mode="drop")
+                if hop < d - 1:
+                    vals = jax.lax.ppermute(vals, "shard", perm)
+                    tgt = jax.lax.ppermute(tgt, "shard", perm)
+        if pc and gating:
+            cleared = flush == t
+            gate = jnp.where(cleared, -1, gate)
+            ping = jnp.where(cleared, -1, ping)
+            flush = jnp.where(cleared, inf, flush)
+        stats = stats.at[0].set(napp.sum().astype(jnp.int64))
+        stats = stats.at[1].set((napp.astype(jnp.int64) * elig_cnt).sum())
+        stats = stats.at[2].set((nping.astype(jnp.int64) * elig_cnt).sum())
+        stats = stats.at[3].set(flush_sent)
+        stats = stats.at[5].set((gate >= 0).sum().astype(jnp.int64))
+        stats = jax.lax.psum(stats, "shard")
+
+        return (arr, delivered, adj, delay, active, gate, flush, ping,
+                crashed, ever_del), stats
+
+    def step(sched, state, t):
+        t = t.astype(jnp.int32)
+        return jax.lax.cond(
+            t >= 0,
+            lambda s: real_step(sched, s, t),
+            lambda s: (s, jnp.zeros(len(SERIES_FIELDS), jnp.int64)),
+            state)
+
+    def span(state, sched, ts):
+        return jax.lax.scan(lambda c, t: step(sched, c, t), state, ts)
+
+    # check_rep=False: lax.cond trips shard_map's replication checker
+    # (jax-ml/jax known limitation); the stats output really is
+    # replicated — it comes out of an explicit psum on every branch.
+    _run = jax.jit(shard_map(
+        span, mesh=mesh,
+        in_specs=(P("shard"), P(), P()),
+        out_specs=(P("shard"), P()),
+        check_rep=False))
+
+    def run(state, sched, ts):
+        # x64 so the int64 stats accumulators (and their psum) are
+        # honored; every state/schedule array carries an explicit dtype,
+        # so nothing else widens — byte-parity with the windowed series.
+        with enable_x64():
+            return _run(state, sched, ts)
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def shard_retire_kernels(n_devices: int):
+    """The two device-side retirement kernels the driver calls between
+    segments: ``reduce(state, origins, horizon_limit) -> per-column
+    aggregates`` (psum-replicated across the mesh) and ``apply(state,
+    retire_mask, app_retire, hung) -> state`` (fold ``ever_del``, clear
+    hung gates, recycle columns).  Together they are the sharded twin of
+    ``stream.execute_windowed``'s host-side ``retire`` /
+    ``record_and_free`` — the host only ever sees (W,)-sized arrays.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = shard_mesh(n_devices)
+    inf = jnp.int32(INF)
+
+    def reduce_fn(state, origins, rounds):
+        (arr, delivered, adj, delay, active, gate, flush, ping,
+         crashed, ever_del) = state
+        n_loc, w = arr.shape
+        me = jax.lax.axis_index("shard")
+        off = (me * n_loc).astype(jnp.int32)
+        got = delivered >= 0
+        cnt = got.sum(axis=0).astype(jnp.int64)
+        arrcnt = (arr < rounds).sum(axis=0).astype(jnp.int64)
+        sumdel = jnp.where(got, delivered, 0).sum(axis=0).astype(jnp.int64)
+        alive = (~crashed).sum().astype(jnp.int64)
+        alivedel = (got & ~crashed[:, None]).sum(axis=0).astype(jnp.int64)
+        gated = (gate >= 0) & active & ~crashed[:, None]
+        min_gate = jnp.where(gated, gate, inf).min(axis=1)
+        blocked = ((got & (delivered >= min_gate[:, None]))
+                   .sum(axis=0).astype(jnp.int64))
+        pidx = jnp.where((ping >= 0) & ~crashed[:, None], ping,
+                         w).reshape(-1)
+        ref = jnp.zeros(w, jnp.int64).at[pidx].add(1, mode="drop")
+        ol = origins - off
+        owned = (ol >= 0) & (ol < n_loc) & (origins >= 0)
+        ocl = jnp.clip(ol, 0, n_loc - 1)
+        bdone = jnp.where(owned, got[ocl, jnp.arange(w)],
+                          False).astype(jnp.int64)
+        out = (cnt, arrcnt, sumdel, alive, alivedel, blocked, ref, bdone)
+        return tuple(jax.lax.psum(x, "shard") for x in out)
+
+    _reduce = jax.jit(shard_map(
+        reduce_fn, mesh=mesh,
+        in_specs=(P("shard"), P(), P()),
+        out_specs=P()))
+
+    def apply_fn(state, retire, app_retire, hung):
+        (arr, delivered, adj, delay, active, gate, flush, ping,
+         crashed, ever_del) = state
+        w = arr.shape[1]
+        # app-delivery memory folds *before* the columns are wiped
+        ever_del = ever_del | ((delivered >= 0)
+                               & app_retire[None, :]).any(axis=1)
+        # a gate whose ping column is being force-expired can never
+        # resolve: clear it so the link goes safe (stream.retire's
+        # horizon escape hatch, device-side)
+        sel = (ping >= 0) & hung[jnp.clip(ping, 0, w - 1)]
+        gate = jnp.where(sel, -1, gate)
+        flush = jnp.where(sel, inf, flush)
+        ping = jnp.where(sel, -1, ping)
+        arr = jnp.where(retire[None, :], inf, arr)
+        delivered = jnp.where(retire[None, :], -1, delivered)
+        return (arr, delivered, adj, delay, active, gate, flush, ping,
+                crashed, ever_del)
+
+    _apply = jax.jit(shard_map(
+        apply_fn, mesh=mesh,
+        in_specs=(P("shard"), P(), P(), P()),
+        out_specs=P("shard")))
+
+    def reduce_run(state, origins, rounds):
+        with enable_x64():
+            return _reduce(state, origins, rounds)
+
+    def apply_run(state, retire, app_retire, hung):
+        with enable_x64():
+            return _apply(state, retire, app_retire, hung)
+
+    return reduce_run, apply_run

@@ -44,7 +44,7 @@ from __future__ import annotations
 
 import warnings
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -53,8 +53,8 @@ from .scenario import INF, VecScenario
 from .sim import (SERIES_FIELDS, SlotSchedule, init_topo_state, np_span,
                   resolve_backend, stats_from_series)
 
-__all__ = ["WindowedRunResult", "WindowOverflowError", "run_vec_windowed",
-           "execute_windowed"]
+__all__ = ["WindowedRunResult", "WindowOverflowError", "ColumnWindow",
+           "run_vec_windowed", "execute_windowed"]
 
 
 class WindowOverflowError(RuntimeError):
@@ -137,6 +137,165 @@ def _window_caps(rounds_arr: np.ndarray, total_rounds: int,
     return int((cum[hi] - cum[: total_rounds]).max())
 
 
+class ColumnWindow:
+    """Host-side live-column bookkeeping shared by the windowed drivers.
+
+    Owns the merged round-sorted activation stream (broadcasts + link
+    additions), the column -> message assignment, the live high-water
+    mark, and the segment-sliced slot-space schedules.  Both streaming
+    drivers — the single-host engine below and the device-sharded engine
+    (``vecsim.shard.driver``) — go through this one class, so they
+    activate, overflow and peak in byte-identical ways; only the span
+    execution and the retirement *mechanics* differ between them.
+    """
+
+    def __init__(self, scn: VecScenario, window: int):
+        self.scn = scn
+        self.w = int(window)
+        m_app = scn.m_app
+        # Merged activation stream: broadcasts then additions, round-
+        # sorted (stable in kind then index for same-round ties).
+        ev_round = np.concatenate([scn.bcast_round, scn.add_round])
+        ev_kind = np.concatenate([np.zeros(m_app, np.int8),
+                                  np.ones(scn.n_adds, np.int8)])
+        ev_idx = np.concatenate([np.arange(m_app, dtype=np.int64),
+                                 np.arange(scn.n_adds, dtype=np.int64)])
+        order = np.lexsort((ev_idx, ev_kind, ev_round))
+        self.ev_round = ev_round[order]
+        self.ev_kind = ev_kind[order]
+        self.ev_idx = ev_idx[order]
+        self.n_ev = len(self.ev_round)
+        self.next_ev = 0
+        self.peak_live = 0
+
+        self.slot_msg = np.full(self.w, -1, np.int64)   # global id, -1 = free
+        self.slot_birth = np.zeros(self.w, np.int32)    # activation round
+        self.slot_app = np.zeros(self.w, bool)
+        self.bc_live_slot = np.full(m_app, -1, np.int32)
+        self.add_live_slot = np.full(scn.n_adds, -1, np.int32)
+
+        # Round-sorted copies of the schedules so each segment slices
+        # with two binary searches instead of an O(M_total) mask
+        # (broadcasts are sorted by construction; churn/crash arrays are
+        # sorted here once).  Stable sort keeps same-round relative
+        # order, which the round body is insensitive to anyway
+        # (same-round events commute).
+        self.add_ord = np.argsort(scn.add_round, kind="stable")
+        self.add_round_s = scn.add_round[self.add_ord]
+        self.add_p_s = scn.add_p[self.add_ord]
+        self.add_k_s = scn.add_k[self.add_ord]
+        self.add_q_s = scn.add_q[self.add_ord]
+        self.add_delay_s = scn.add_delay[self.add_ord]
+        rm_ord = np.argsort(scn.rm_round, kind="stable")
+        self.rm_round_s = scn.rm_round[rm_ord]
+        self.rm_p_s, self.rm_k_s = scn.rm_p[rm_ord], scn.rm_k[rm_ord]
+        cr_ord = np.argsort(scn.crash_round, kind="stable")
+        self.cr_round_s = scn.crash_round[cr_ord]
+        self.cr_pid_s = scn.crash_pid[cr_ord]
+
+    def seg_schedule(self, lo: int, hi: int) -> SlotSchedule:
+        scn = self.scn
+        b0, b1 = np.searchsorted(scn.bcast_round, [lo, hi])
+        a0, a1 = np.searchsorted(self.add_round_s, [lo, hi])
+        r0, r1 = np.searchsorted(self.rm_round_s, [lo, hi])
+        c0, c1 = np.searchsorted(self.cr_round_s, [lo, hi])
+        return SlotSchedule(
+            is_app=self.slot_app,
+            bc_round=scn.bcast_round[b0:b1],
+            bc_origin=scn.bcast_origin[b0:b1],
+            bc_slot=self.bc_live_slot[b0:b1],
+            add_round=self.add_round_s[a0:a1],
+            add_p=self.add_p_s[a0:a1], add_k=self.add_k_s[a0:a1],
+            add_q=self.add_q_s[a0:a1],
+            add_delay=self.add_delay_s[a0:a1],
+            add_slot=self.add_live_slot[self.add_ord[a0:a1]],
+            rm_round=self.rm_round_s[r0:r1],
+            rm_p=self.rm_p_s[r0:r1], rm_k=self.rm_k_s[r0:r1],
+            cr_round=self.cr_round_s[c0:c1],
+            cr_pid=self.cr_pid_s[c0:c1])
+
+    def segment_caps(self, total_rounds: int,
+                     seg_len: int) -> Tuple[int, int, int, int]:
+        """Per-segment event-count caps (broadcasts, adds, removals,
+        crashes) so every padded segment schedule reuses one jitted
+        trace."""
+        scn = self.scn
+        return (_window_caps(scn.bcast_round, total_rounds, seg_len),
+                _window_caps(scn.add_round, total_rounds, seg_len),
+                _window_caps(scn.rm_round, total_rounds, seg_len),
+                _window_caps(scn.crash_round, total_rounds, seg_len))
+
+    def padded_schedule(self, lo: int, hi: int,
+                        caps: Tuple[int, int, int, int]) -> SlotSchedule:
+        """The segment schedule padded to ``caps`` with sentinel rounds
+        (-2 never matches a real round), shared by both jitted drivers
+        so the padding conventions cannot drift apart."""
+        sched = self.seg_schedule(lo, hi)
+        cap_bc, cap_add, cap_rm, cap_cr = caps
+        return SlotSchedule(
+            is_app=sched.is_app,
+            bc_round=_pad(sched.bc_round, cap_bc, -2),
+            bc_origin=_pad(sched.bc_origin, cap_bc, 0),
+            bc_slot=_pad(sched.bc_slot, cap_bc, 0),
+            add_round=_pad(sched.add_round, cap_add, -2),
+            add_p=_pad(sched.add_p, cap_add, 0),
+            add_k=_pad(sched.add_k, cap_add, 0),
+            add_q=_pad(sched.add_q, cap_add, 0),
+            add_delay=_pad(sched.add_delay, cap_add, 1),
+            add_slot=_pad(sched.add_slot, cap_add, 0),
+            rm_round=_pad(sched.rm_round, cap_rm, -2),
+            rm_p=_pad(sched.rm_p, cap_rm, 0),
+            rm_k=_pad(sched.rm_k, cap_rm, 0),
+            cr_round=_pad(sched.cr_round, cap_cr, -2),
+            cr_pid=_pad(sched.cr_pid, cap_cr, 0))
+
+    def activate(self, t: int, t_end: int) -> int:
+        """Assign free columns to events due before ``t_end``; returns
+        the (possibly shortened) segment end.  Raises
+        :class:`WindowOverflowError` when the buffer is already full at
+        ``t`` with an event due.  Also tracks the live high-water mark.
+        """
+        m_app = self.scn.m_app
+        if self.next_ev < self.n_ev and self.ev_round[self.next_ev] < t_end:
+            free = np.nonzero(self.slot_msg < 0)[0]
+            due = self.next_ev
+            while (due < self.n_ev and self.ev_round[due] < t_end
+                   and due - self.next_ev < len(free)):
+                col = int(free[due - self.next_ev])
+                kind, idx = int(self.ev_kind[due]), int(self.ev_idx[due])
+                self.slot_msg[col] = idx if kind == 0 else m_app + idx
+                self.slot_birth[col] = self.ev_round[due]
+                self.slot_app[col] = kind == 0
+                if kind == 0:
+                    self.bc_live_slot[idx] = col
+                else:
+                    self.add_live_slot[idx] = col
+                due += 1
+            self.next_ev = due
+            if self.next_ev < self.n_ev and self.ev_round[self.next_ev] < t_end:
+                # buffer full with events still due: stop the segment
+                # just before the first blocked event and retry after
+                # the next retirement sweep.
+                blocked_at = int(self.ev_round[self.next_ev])
+                if blocked_at <= t:
+                    raise WindowOverflowError(
+                        f"window={self.w} cannot hold the live messages "
+                        f"at round {t} "
+                        f"({int((self.slot_msg >= 0).sum())} live, "
+                        f"next event needs a free column); raise the "
+                        f"window or set a horizon")
+                t_end = blocked_at
+        self.peak_live = max(self.peak_live,
+                             int((self.slot_msg >= 0).sum()))
+        return t_end
+
+    def live_cols(self) -> np.ndarray:
+        return np.nonzero(self.slot_msg >= 0)[0]
+
+    def free_cols(self, cols: np.ndarray) -> None:
+        self.slot_msg[cols] = -1
+
+
 def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
                      horizon: Optional[int] = None, seg_len: int = 32,
                      snapshot_round: Optional[int] = None,
@@ -168,22 +327,9 @@ def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
     if collect not in ("full", "aggregate"):
         raise ValueError(f"unknown collect mode {collect!r}")
 
-    # Merged activation stream: broadcasts then additions, round-sorted.
-    ev_round = np.concatenate([scn.bcast_round, scn.add_round])
-    ev_kind = np.concatenate([np.zeros(m_app, np.int8),
-                              np.ones(scn.n_adds, np.int8)])
-    ev_idx = np.concatenate([np.arange(m_app, dtype=np.int64),
-                             np.arange(scn.n_adds, dtype=np.int64)])
-    order = np.lexsort((ev_idx, ev_kind, ev_round))
-    ev_round, ev_kind, ev_idx = ev_round[order], ev_kind[order], ev_idx[order]
-    n_ev = len(ev_round)
-
+    cw = ColumnWindow(scn, w)
     st = init_topo_state(scn, w)
-    slot_msg = np.full(w, -1, np.int64)      # global message id, -1 = free
-    slot_birth = np.zeros(w, np.int32)       # activation round
-    slot_app = np.zeros(w, bool)
-    bc_live_slot = np.full(m_app, -1, np.int32)
-    add_live_slot = np.full(scn.n_adds, -1, np.int32)
+    slot_msg, slot_birth, slot_app = cw.slot_msg, cw.slot_birth, cw.slot_app
 
     series = np.zeros((rounds, len(SERIES_FIELDS)), np.int64)
     delivered_full = (np.full((n, m_total), -1, np.int32)
@@ -194,7 +340,6 @@ def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
     first_receipts = 0
     lat_sum = 0
     lat_cnt = 0
-    peak_live = 0
     snapshot: Optional[Dict[str, np.ndarray]] = None
 
     if backend == "jax":
@@ -202,72 +347,17 @@ def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
 
         from .sim import (jax_span_runner, sched_to_device, state_to_device,
                           state_to_host)
-        cap_bc = _window_caps(scn.bcast_round, rounds, seg_len)
-        cap_add = _window_caps(scn.add_round, rounds, seg_len)
-        cap_rm = _window_caps(scn.rm_round, rounds, seg_len)
-        cap_cr = _window_caps(scn.crash_round, rounds, seg_len)
+        caps = cw.segment_caps(rounds, seg_len)
         runner = jax_span_runner(scn.k, pc, scn.always_gate, scn.pong_delay,
                                  gating=gating)
 
-    # Round-sorted copies of the schedules so each segment slices with
-    # two binary searches instead of an O(M_total) mask (broadcasts are
-    # sorted by construction; churn/crash arrays are sorted here once).
-    # Stable sort keeps same-round relative order, which the round body
-    # is insensitive to anyway (same-round events commute).
-    add_ord = np.argsort(scn.add_round, kind="stable")
-    add_round_s = scn.add_round[add_ord]
-    add_p_s, add_k_s = scn.add_p[add_ord], scn.add_k[add_ord]
-    add_q_s, add_delay_s = scn.add_q[add_ord], scn.add_delay[add_ord]
-    rm_ord = np.argsort(scn.rm_round, kind="stable")
-    rm_round_s = scn.rm_round[rm_ord]
-    rm_p_s, rm_k_s = scn.rm_p[rm_ord], scn.rm_k[rm_ord]
-    cr_ord = np.argsort(scn.crash_round, kind="stable")
-    cr_round_s = scn.crash_round[cr_ord]
-    cr_pid_s = scn.crash_pid[cr_ord]
-
-    def seg_schedule(lo: int, hi: int) -> SlotSchedule:
-        b0, b1 = np.searchsorted(scn.bcast_round, [lo, hi])
-        a0, a1 = np.searchsorted(add_round_s, [lo, hi])
-        r0, r1 = np.searchsorted(rm_round_s, [lo, hi])
-        c0, c1 = np.searchsorted(cr_round_s, [lo, hi])
-        return SlotSchedule(
-            is_app=slot_app,
-            bc_round=scn.bcast_round[b0:b1],
-            bc_origin=scn.bcast_origin[b0:b1],
-            bc_slot=bc_live_slot[b0:b1],
-            add_round=add_round_s[a0:a1],
-            add_p=add_p_s[a0:a1], add_k=add_k_s[a0:a1],
-            add_q=add_q_s[a0:a1],
-            add_delay=add_delay_s[a0:a1],
-            add_slot=add_live_slot[add_ord[a0:a1]],
-            rm_round=rm_round_s[r0:r1],
-            rm_p=rm_p_s[r0:r1], rm_k=rm_k_s[r0:r1],
-            cr_round=cr_round_s[c0:c1],
-            cr_pid=cr_pid_s[c0:c1])
-
     def run_segment(lo: int, hi: int) -> None:
-        sched = seg_schedule(lo, hi)
         if backend == "numpy":
-            np_span(st, sched, lo, hi, series, pc=pc,
+            np_span(st, cw.seg_schedule(lo, hi), lo, hi, series, pc=pc,
                     always_gate=scn.always_gate, pong_delay=scn.pong_delay,
                     gating=gating)
             return
-        padded = SlotSchedule(
-            is_app=sched.is_app,
-            bc_round=_pad(sched.bc_round, cap_bc, -2),
-            bc_origin=_pad(sched.bc_origin, cap_bc, 0),
-            bc_slot=_pad(sched.bc_slot, cap_bc, 0),
-            add_round=_pad(sched.add_round, cap_add, -2),
-            add_p=_pad(sched.add_p, cap_add, 0),
-            add_k=_pad(sched.add_k, cap_add, 0),
-            add_q=_pad(sched.add_q, cap_add, 0),
-            add_delay=_pad(sched.add_delay, cap_add, 1),
-            add_slot=_pad(sched.add_slot, cap_add, 0),
-            rm_round=_pad(sched.rm_round, cap_rm, -2),
-            rm_p=_pad(sched.rm_p, cap_rm, 0),
-            rm_k=_pad(sched.rm_k, cap_rm, 0),
-            cr_round=_pad(sched.cr_round, cap_cr, -2),
-            cr_pid=_pad(sched.cr_pid, cap_cr, 0))
+        padded = cw.padded_schedule(lo, hi, caps)
         ts = np.full(seg_len, -3, np.int32)
         ts[: hi - lo] = np.arange(lo, hi, dtype=np.int32)
         # The full state round-trips host<->device each segment so the
@@ -349,42 +439,13 @@ def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
         record_and_free(cols, by_exp[cols])
         return len(cols)
 
-    next_ev = 0
     t = 0
     while t < rounds:
         t_end = min(t + seg_len, rounds)
         if snapshot_round is not None and t <= snapshot_round:
             t_end = min(t_end, snapshot_round + 1)
         # Activate events due before t_end while free columns last.
-        if next_ev < n_ev and ev_round[next_ev] < t_end:
-            free = np.nonzero(slot_msg < 0)[0]
-            due = next_ev
-            while (due < n_ev and ev_round[due] < t_end
-                   and due - next_ev < len(free)):
-                col = int(free[due - next_ev])
-                kind, idx = int(ev_kind[due]), int(ev_idx[due])
-                slot_msg[col] = idx if kind == 0 else m_app + idx
-                slot_birth[col] = ev_round[due]
-                slot_app[col] = kind == 0
-                if kind == 0:
-                    bc_live_slot[idx] = col
-                else:
-                    add_live_slot[idx] = col
-                due += 1
-            next_ev = due
-            if next_ev < n_ev and ev_round[next_ev] < t_end:
-                # buffer full with events still due: stop the segment
-                # just before the first blocked event and retry after
-                # the next retirement sweep.
-                blocked_at = int(ev_round[next_ev])
-                if blocked_at <= t:
-                    raise WindowOverflowError(
-                        f"window={w} cannot hold the live messages at "
-                        f"round {t} ({int((slot_msg >= 0).sum())} live, "
-                        f"next event needs a free column); raise the "
-                        f"window or set a horizon")
-                t_end = blocked_at
-        peak_live = max(peak_live, int((slot_msg >= 0).sum()))
+        t_end = cw.activate(t, t_end)
         run_segment(t, t_end)
         if snapshot_round is not None and t_end - 1 == snapshot_round:
             snapshot = {key: v.copy() for key, v in st.items()}
@@ -403,7 +464,7 @@ def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
         scenario=scn, window=w, backend=backend, stats=stats, series=series,
         delivered=delivered_full, deliv_count=deliv_count,
         bcast_done=bcast_done, expired=expired, state=st, snapshot=snapshot,
-        peak_live=peak_live, lat_sum=lat_sum, lat_cnt=lat_cnt)
+        peak_live=cw.peak_live, lat_sum=lat_sum, lat_cnt=lat_cnt)
 
 
 def run_vec_windowed(scn: VecScenario, window: int, backend: str = "auto",

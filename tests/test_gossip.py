@@ -37,9 +37,18 @@ def converged_run():
 
 
 def test_gossip_loss_decreases(converged_run):
+    """Each per-round loss is the last inner step's loss on a *fresh*
+    batch, so consecutive entries are noisy samples of the true loss;
+    comparing single samples against a fixed margin flaked whenever the
+    final batch happened to be hard (the trajectory is deterministic per
+    environment but shifts with BLAS/XLA versions).  Compare 3-round
+    leading/trailing means instead: the convergence *trend* every
+    environment reproduces."""
     tr = converged_run
     for pod in tr.pods.values():
-        assert pod.losses[-1] < pod.losses[0] - 0.3, pod.losses
+        head = float(np.mean(pod.losses[:3]))
+        tail = float(np.mean(pod.losses[-3:]))
+        assert tail < head - 0.25, pod.losses
 
 
 def test_gossip_is_causally_safe(converged_run):

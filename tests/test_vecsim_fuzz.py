@@ -25,33 +25,16 @@ from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import check_trace  # noqa: E402
 from repro.core.vecsim import (WindowOverflowError, build_trace,  # noqa: E402
-                               churn_scenario, churn_wave_scenario,
-                               crash_scenario, cross_validate,
-                               delivered_multiset, link_add_scenario,
-                               partition_heal_scenario, run_vec,
-                               static_scenario, sustained_scenario)
+                               churn_scenario, cross_validate,
+                               delivered_multiset, run_vec,
+                               static_scenario)
+from vecsim_cases import BUILDERS, run_shard_matrix_subprocess  # noqa: E402
 
 BASE = dict(
     deadline=None,
     suppress_health_check=[HealthCheck.too_slow],
     derandomize=True,
 )
-
-BUILDERS = {
-    "static": lambda seed, n: static_scenario(seed, n),
-    "link_add": lambda seed, n: link_add_scenario(seed, n),
-    "churn": lambda seed, n: churn_scenario(seed, n),
-    "crash": lambda seed, n: crash_scenario(seed, n),
-    "waves": lambda seed, n: churn_wave_scenario(seed, n, waves=2),
-    "partition": lambda seed, n: partition_heal_scenario(
-        seed, max(n, 12), traffic_during_partition=bool(seed % 2)),
-    "sustained_kreg": lambda seed, n: sustained_scenario(
-        seed, n, k=5, rate=1.0 + (seed % 3), messages=24,
-        topology="kregular", max_delay=2),
-    "sustained_sw": lambda seed, n: sustained_scenario(
-        seed, n, k=5, rate=2.0, messages=24, topology="smallworld",
-        traffic="bursty", max_delay=2),
-}
 
 scenario_strategy = st.tuples(
     st.sampled_from(sorted(BUILDERS)),
@@ -155,6 +138,45 @@ def test_fuzz_windowed_multiset_stable_under_window_choice(seed):
             base = ms
         assert ms == base
     assert base is not None
+
+
+@settings(max_examples=6, **BASE)
+@given(spec=st.tuples(
+           st.sampled_from(["static", "link_add", "churn", "crash",
+                            "sustained_kreg"]),
+           st.integers(min_value=0, max_value=10 ** 6),
+           st.integers(min_value=12, max_value=32)),
+       shards=st.sampled_from([1, 2, 4]),
+       frac=st.sampled_from([1.0, 0.5]),
+       seg_len=st.sampled_from([8, 32]))
+def test_fuzz_sharded_equals_windowed(spec, shards, frac, seg_len):
+    """The sharded acceptance property, differentially: at every drawn
+    shard count the device-sharded engine is byte-identical to the
+    windowed engine (or both refuse with WindowOverflowError).  One
+    shard runs in-process; multi-shard draws spawn a child interpreter
+    because the forced host-device flag must precede jax init."""
+    name, seed, n = spec
+    if shards > 1:
+        run_shard_matrix_subprocess([(name, seed, n, frac, seg_len)],
+                                    shards=shards)
+        return
+    from repro.core.vecsim.shard import execute_sharded
+    scn = _build(spec)
+    w = max(4, int(scn.m_total * frac))
+    try:
+        mono = run_vec(scn, backend="numpy", window=w, seg_len=seg_len,
+                       collect="full")
+    except WindowOverflowError:
+        with pytest.raises(WindowOverflowError):
+            execute_sharded(scn, w, n_devices=1, collect="full",
+                            seg_len=seg_len)
+        return
+    sh = execute_sharded(scn, w, n_devices=1, collect="full",
+                         seg_len=seg_len)
+    np.testing.assert_array_equal(mono.delivered, sh.delivered)
+    np.testing.assert_array_equal(mono.series, sh.series)
+    assert mono.stats == sh.stats
+    assert mono.peak_live == sh.peak_live
 
 
 @settings(max_examples=25, **BASE)
