@@ -117,7 +117,7 @@ def main():
     ap.add_argument("--engine", choices=("exact", "vec"), default="exact")
     ap.add_argument("--n", type=int, default=None,
                     help="processes (default: 300 exact / 50000 vec)")
-    ap.add_argument("--backend", choices=("numpy", "jax", "auto"),
+    ap.add_argument("--backend", choices=("numpy", "jax", "pallas", "auto"),
                     default="numpy",
                     help="vec-engine backend (numpy is fastest on CPU; "
                          "jax is the accelerator/sharding path)")

@@ -120,7 +120,7 @@ def main():
     ap.add_argument("--engine", choices=("exact", "vec"), default="exact")
     ap.add_argument("--n", type=int, default=None,
                     help="single population size (default: engine sweep)")
-    ap.add_argument("--backend", choices=("numpy", "jax", "auto"),
+    ap.add_argument("--backend", choices=("numpy", "jax", "pallas", "auto"),
                     default="numpy")
     ap.add_argument("--window", type=int, default=None,
                     help="route the pc vec runs through the streaming "

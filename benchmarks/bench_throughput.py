@@ -108,7 +108,7 @@ def main() -> None:
     ap.add_argument("--window", type=int, default=8192,
                     help="live message columns (memory = 8·N·window bytes)")
     ap.add_argument("--k", type=int, default=8, help="out-links per process")
-    ap.add_argument("--backend", choices=("numpy", "jax", "auto"),
+    ap.add_argument("--backend", choices=("numpy", "jax", "pallas", "auto"),
                     default="auto",
                     help="jax is the fast path for sustained runs: the "
                     "jitted segment scan fuses the per-round masks that "

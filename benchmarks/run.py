@@ -31,8 +31,11 @@ def main() -> None:
                     default="exact")
     ap.add_argument("--n", type=int, default=None,
                     help="population override for the protocol benches")
-    ap.add_argument("--backend", choices=("numpy", "jax", "auto"),
+    ap.add_argument("--backend", choices=("numpy", "jax", "pallas", "auto"),
                     default="numpy", help="vec-engine backend")
+    ap.add_argument("--compare-backends", action="store_true",
+                    help="also run a harness-sized jax-vs-pallas point "
+                         "(full run: benchmarks/bench_backend.py)")
     ap.add_argument("--window", type=int, default=None,
                     help="route the vec sweeps (and the throughput "
                          "bench) through the streaming windowed engine "
@@ -54,8 +57,8 @@ def main() -> None:
                 f"{flags} --xla_force_host_platform_device_count="
                 f"{args.scale_devices}").strip()
     # imported after the device-count env var so it precedes jax init
-    from benchmarks import bench_engine, bench_fig7, bench_scale, \
-        bench_table1, bench_throughput, bench_train
+    from benchmarks import bench_backend, bench_engine, bench_fig7, \
+        bench_scale, bench_table1, bench_throughput, bench_train
     engines = ("exact", "vec") if args.engine == "both" else (args.engine,)
 
     print("name,us_per_call,derived")
@@ -86,6 +89,16 @@ def main() -> None:
                         messages=20_000, rate=200.0,
                         window=args.window if args.window else 4096,
                         backend=args.backend, seg_len=8, out=None):
+                    print(f"{prefix}{name},{us:.2f},{derived:.3f}",
+                          flush=True)
+            except Exception:                  # noqa: BLE001
+                failed += 1
+                traceback.print_exc()
+        if eng == "vec" and args.compare_backends:
+            try:
+                for name, us, derived in bench_backend.rows(
+                        n=256, messages=512, rate=16.0, window=128,
+                        seg_len=8, out=None):
                     print(f"{prefix}{name},{us:.2f},{derived:.3f}",
                           flush=True)
             except Exception:                  # noqa: BLE001

@@ -64,7 +64,7 @@ def main():
                     default=[1000, 5000, 20000, 50000])
     ap.add_argument("--exact-max", type=int, default=2000,
                     help="run the event simulator up to this N for contrast")
-    ap.add_argument("--backend", choices=("numpy", "jax", "auto"),
+    ap.add_argument("--backend", choices=("numpy", "jax", "pallas", "auto"),
                     default="numpy")
     ap.add_argument("--window", type=int, default=None,
                     help="stream each point through the windowed engine "

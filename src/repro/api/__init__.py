@@ -21,9 +21,9 @@ the schema, the registry keys, and the auto-selection rule.
 """
 
 from ..core.vecsim import TrafficModel
-from .registry import (ENGINES, PROTOCOLS, SCENARIOS, TOPOLOGIES, TRAFFIC,
-                       EngineEntry, ProtocolEntry, Registry, ScenarioEntry,
-                       describe_entry)
+from .registry import (BACKENDS, ENGINES, PROTOCOLS, SCENARIOS, TOPOLOGIES,
+                       TRAFFIC, BackendEntry, EngineEntry, ProtocolEntry,
+                       Registry, ScenarioEntry, describe_entry)
 from .run import RunReport, build_scenario, run, select_engine
 from .spec import (DynamicsSpec, MetricsSpec, RunSpec, ShardSpec, SpecError,
                    TopologySpec, TrafficSpec, WindowSpec)
@@ -32,7 +32,8 @@ __all__ = [
     "RunSpec", "TopologySpec", "TrafficSpec", "DynamicsSpec", "WindowSpec",
     "ShardSpec", "MetricsSpec", "SpecError",
     "run", "RunReport", "build_scenario", "select_engine",
-    "Registry", "ProtocolEntry", "EngineEntry", "ScenarioEntry",
-    "TrafficModel", "describe_entry",
-    "PROTOCOLS", "ENGINES", "TOPOLOGIES", "TRAFFIC", "SCENARIOS",
+    "Registry", "ProtocolEntry", "EngineEntry", "BackendEntry",
+    "ScenarioEntry", "TrafficModel", "describe_entry",
+    "PROTOCOLS", "ENGINES", "BACKENDS", "TOPOLOGIES", "TRAFFIC",
+    "SCENARIOS",
 ]

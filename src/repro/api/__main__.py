@@ -17,8 +17,8 @@ import argparse
 import json
 import sys
 
-from . import (ENGINES, PROTOCOLS, SCENARIOS, TOPOLOGIES, TRAFFIC, RunSpec,
-               SpecError, describe_entry, run)
+from . import (BACKENDS, ENGINES, PROTOCOLS, SCENARIOS, TOPOLOGIES, TRAFFIC,
+               RunSpec, SpecError, describe_entry, run)
 
 
 def _spec_dict(src: str) -> dict:
@@ -48,7 +48,8 @@ def build_parser() -> argparse.ArgumentParser:
     top.add_argument("--protocol", choices=sorted(PROTOCOLS.keys()))
     top.add_argument("--engine",
                      choices=["auto"] + sorted(ENGINES.keys()))
-    top.add_argument("--backend", choices=("auto", "numpy", "jax"))
+    top.add_argument("--backend",
+                     choices=["auto"] + sorted(BACKENDS.keys()))
     top.add_argument("--n", type=int)
     top.add_argument("--seed", type=int)
     top.add_argument("--memory-budget-mb", type=int)
@@ -117,7 +118,9 @@ def spec_from_args(args: argparse.Namespace) -> RunSpec:
 
 def print_registries() -> None:
     """The discovery surface: every registered key on every axis, with
-    its one-line description (``python -m repro.api --list``)."""
+    its one-line description (``python -m repro.api --list``).  The
+    backends section additionally runs each entry's availability probe
+    so the note says whether (and how) that backend can run *here*."""
     for name, registry in (("protocols", PROTOCOLS), ("engines", ENGINES),
                            ("topologies", TOPOLOGIES), ("traffic", TRAFFIC),
                            ("scenarios (dynamics kinds)", SCENARIOS)):
@@ -125,6 +128,12 @@ def print_registries() -> None:
         for key in sorted(registry.keys()):
             desc = describe_entry(registry.get(key))
             print(f"  {key:<16} {desc}" if desc else f"  {key}")
+    print("backends:")
+    for key in sorted(BACKENDS.keys()):
+        entry = BACKENDS.get(key)
+        ok, note = entry.probe()
+        status = "available" if ok else "UNAVAILABLE"
+        print(f"  {key:<16} {entry.description} [{status}: {note}]")
 
 
 def report_csv_rows(rep) -> list:

@@ -26,9 +26,9 @@ from typing import Any, Callable, Dict, Iterable, Optional
 from ..core.vecsim import scenario as _scn
 from .spec import RunSpec, SpecError
 
-__all__ = ["Registry", "ProtocolEntry", "EngineEntry", "ScenarioEntry",
-           "PROTOCOLS", "ENGINES", "TOPOLOGIES", "TRAFFIC", "SCENARIOS",
-           "describe_entry"]
+__all__ = ["Registry", "ProtocolEntry", "EngineEntry", "BackendEntry",
+           "ScenarioEntry", "PROTOCOLS", "ENGINES", "BACKENDS",
+           "TOPOLOGIES", "TRAFFIC", "SCENARIOS", "describe_entry"]
 
 
 class Registry:
@@ -79,6 +79,7 @@ class Registry:
 
 PROTOCOLS = Registry("protocol")
 ENGINES = Registry("engine")        # populated by repro.api.run on import
+BACKENDS = Registry("backend")
 # Live views of the vecsim dispatch tables: a topology registered here is
 # buildable by every scenario builder (uniform signature
 # (seed, n, k, max_delay, free_slots, beta) -> (adj0, delay0)); a
@@ -102,6 +103,25 @@ class ProtocolEntry:
     description: str
     mode: Optional[str]        # VecScenario.mode for the shared vec engine
     windowed: bool
+
+
+@dataclass(frozen=True)
+class BackendEntry:
+    """One compute backend of the vec engines, with a lazy availability
+    probe: ``probe() -> (ok, note)`` tells the discovery surface (and
+    ``select_engine``) whether the backend can run here and why/how.
+    The probe never raises and never imports at registration time."""
+
+    name: str
+    description: str
+    probe: Callable[[], tuple]
+
+    @property
+    def available(self) -> bool:
+        return bool(self.probe()[0])
+
+    def availability_note(self) -> str:
+        return str(self.probe()[1])
 
 
 @dataclass(frozen=True)
@@ -144,6 +164,39 @@ PROTOCOLS.register("vc", ProtocolEntry(
     "vc", "vector-clock causal broadcast: O(N) piggybacked clocks, "
     "O(W·N) delivery drain (Table 1 baseline, measured)", mode=None,
     windowed=False))
+
+
+# --------------------------------------------------------------------- #
+# Backends: how the vec engines execute a round body
+# --------------------------------------------------------------------- #
+def _probe_numpy():
+    return True, "always available"
+
+
+def _probe_jax():
+    try:
+        import jax
+    except Exception as exc:  # pragma: no cover - environment-dependent
+        return False, f"jax not importable: {exc}"
+    return True, f"jax {jax.__version__} on {jax.default_backend()}"
+
+
+def _probe_pallas():
+    from ..core.vecsim.kernels import pallas_available
+    return pallas_available()
+
+
+BACKENDS.register("numpy", BackendEntry(
+    "numpy", "mutating numpy reference: readable, host-speed, the "
+    "semantics every other backend must match byte-for-byte",
+    _probe_numpy))
+BACKENDS.register("jax", BackendEntry(
+    "jax", "jitted lax.scan round body (vec/windowed) and the shard_map "
+    "mesh program (sharded)", _probe_jax))
+BACKENDS.register("pallas", BackendEntry(
+    "pallas", "fused Pallas delivery-sweep kernels in the round body "
+    "(vecsim.kernels, DESIGN.md §2.6); never auto-selected off-TPU",
+    _probe_pallas))
 
 
 # --------------------------------------------------------------------- #

@@ -132,7 +132,20 @@ def select_engine(spec: RunSpec, scn: VecScenario
                   ) -> Tuple[str, Optional[int]]:
     """Apply the DESIGN.md §3 auto-selection rule; explicit engines pass
     through unchanged (with the spec's window, if any — validate()
-    rejects a window on the monolithic/exact engines)."""
+    rejects a window on the monolithic/exact engines).
+
+    An explicit ``backend="pallas"`` fails here — eagerly, with a
+    :class:`SpecError` naming the probe's reason — when the kernels
+    cannot initialize; ``backend="auto"`` instead quietly resolves to
+    the jax backend wherever Pallas is unavailable (or interpret-only,
+    which would be byte-identical but slower)."""
+    if spec.backend == "pallas":
+        from .registry import BACKENDS
+        ok, note = BACKENDS.get("pallas").probe()
+        if not ok:
+            raise SpecError(
+                f"backend='pallas' requested but Pallas cannot "
+                f"initialize ({note}); use backend='jax' or 'auto'")
     if spec.engine != "auto":
         return spec.engine, spec.window.window
     if spec.window.window is not None:
@@ -265,7 +278,7 @@ def _run_sharded(spec: RunSpec, scn: VecScenario, window: Optional[int],
     res = execute_sharded(
         scn, window, n_devices=devices, horizon=spec.window.horizon,
         seg_len=spec.window.seg_len, snapshot_round=snapshot_round,
-        collect=spec.window.collect)
+        collect=spec.window.collect, backend=spec.backend)
     extras = _vec_extras(spec, res)
     extras["peak_live"] = res.peak_live
     extras["expired_columns"] = int(res.expired.sum())

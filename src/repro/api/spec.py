@@ -106,7 +106,7 @@ class RunSpec:
 
     protocol: str = "pc"       # pc | r | vc   (repro.api.PROTOCOLS)
     engine: str = "auto"       # auto | exact | vec | windowed
-    backend: str = "auto"      # auto | numpy | jax
+    backend: str = "auto"      # auto | numpy | jax | pallas
     n: int = 64                # processes
     seed: int = 0
     pong_delay: int = 1
@@ -144,9 +144,10 @@ class RunSpec:
             raise SpecError(
                 f"engine={self.engine!r} must be 'auto' or one of "
                 f"{sorted(reg.ENGINES.keys())}")
-        if self.backend not in ("auto", "numpy", "jax"):
-            raise SpecError(f"backend={self.backend!r} must be one of "
-                            f"['auto', 'jax', 'numpy']")
+        if self.backend != "auto" and self.backend not in reg.BACKENDS:
+            raise SpecError(
+                f"backend={self.backend!r} must be 'auto' or one of "
+                f"{sorted(reg.BACKENDS.keys())}")
         if self.n < 2:
             raise SpecError(f"n={self.n} must be >= 2")
         if self.memory_budget_mb < 1:
@@ -207,8 +208,9 @@ class RunSpec:
                     "backend='jax' or 'auto'")
         if self.engine == "sharded" and self.backend == "numpy":
             raise SpecError("engine 'sharded' is a jax device-mesh "
-                            "program; use backend='jax' or 'auto'")
-        if self.backend == "jax" and self.protocol == "vc":
+                            "program; use backend='jax', 'pallas' or "
+                            "'auto'")
+        if self.backend in ("jax", "pallas") and self.protocol == "vc":
             raise SpecError("protocol 'vc' is numpy-only (the delivery "
                             "drain is a data-dependent host loop); use "
                             "backend='numpy' or 'auto'")

@@ -18,8 +18,12 @@ Modules:
   scenario  — preplanned runs (topologies + broadcast/churn/crash/traffic
               schedules: ring/k-regular/small-world, Poisson/bursty load,
               partition-heal, churn waves, sustained streams)
-  sim       — the lockstep engine, both backends, NetStats emission
+  sim       — the lockstep engine, numpy/jax/pallas backends, NetStats
+              emission
   stream    — streaming windowed execution in O(N·window) memory
+  kernels   — fused Pallas delivery-sweep kernels behind
+              ``backend="pallas"`` (kernel/ops/ref layout, interpret
+              mode on CPU; DESIGN.md §2.6)
   shard     — the windowed engine partitioned over a JAX device mesh
               (shard_map row-blocks + per-round frontier exchange): the
               process axis stops being single-host, N reaches 10^6+

@@ -1,0 +1,336 @@
+"""Dispatch layer for the delivery-sweep Pallas kernels.
+
+Each op pads the live column window to a multiple of the column-tile
+width, launches the kernel over a 1-D grid of column tiles, reduces the
+per-tile stat partials, and slices the planes back — callers (the span
+runners in ``sim.py`` / ``shard/spanner.py`` and the windowed driver's
+retirement sweep in ``stream.py``) see exact ``(N, W)`` semantics.
+
+``interpret=None`` resolves via :func:`default_interpret`: compiled
+kernels on a real TPU, the Pallas interpreter everywhere else.  The
+interpreter lowers to ordinary jitted XLA ops, so interpret-mode
+backends are byte-identical to (and test against) the jax backend on
+CPU; the padding columns are inert (``arr=INF``, ``delivered=-1``,
+``is_app=False``) and can never deliver, flush or count.
+
+Availability is probed lazily (:func:`pallas_available`) so the numpy
+backend keeps working on hosts without jax; ``repro.api`` surfaces the
+probe's note in ``--list`` and turns a failed probe into a
+``SpecError`` when ``backend="pallas"`` is requested explicitly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..scenario import INF
+
+__all__ = ["PallasUnavailableError", "pallas_available", "require_pallas",
+           "default_interpret", "deliver_sweep", "fused_sweep",
+           "frontier_sweep", "retire_scan", "retire_scan_jit",
+           "slot_frontier", "ring_apply"]
+
+_INF = np.int32(INF)
+
+
+class PallasUnavailableError(RuntimeError):
+    """``backend="pallas"`` was requested but Pallas cannot initialize."""
+
+
+@functools.lru_cache(maxsize=1)
+def pallas_available() -> Tuple[bool, str]:
+    """(ok, note): can the Pallas kernels run here, and how."""
+    try:
+        import jax
+        from jax.experimental import pallas  # noqa: F401
+    except Exception as exc:  # pragma: no cover - environment-dependent
+        return False, f"jax/pallas import failed: {exc}"
+    try:
+        platform = jax.default_backend()
+    except Exception as exc:  # pragma: no cover - environment-dependent
+        return False, f"jax backend init failed: {exc}"
+    if platform == "tpu":
+        return True, "compiled TPU kernels"
+    return True, (f"interpret mode on {platform} (byte-identical to the "
+                  "jax backend; compiled speed needs a TPU)")
+
+
+def require_pallas() -> None:
+    ok, note = pallas_available()
+    if not ok:
+        raise PallasUnavailableError(
+            f"backend='pallas' requested but Pallas cannot initialize "
+            f"({note}); use backend='jax' or 'auto'")
+
+
+def default_interpret() -> bool:
+    """Interpret unless an actual TPU can compile the kernels."""
+    ok, note = pallas_available()
+    return not (ok and note == "compiled TPU kernels")
+
+
+def _resolve(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return default_interpret()
+    return bool(interpret)
+
+
+def _tiles(w: int, block_w: Optional[int]) -> Tuple[int, int, int]:
+    """(padded width, tile width, tile count) for a ``w``-column window."""
+    bw = int(block_w) if block_w else max(w, 1)
+    bw = max(1, min(bw, max(w, 1)))
+    wp = -(-max(w, 1) // bw) * bw
+    return wp, bw, wp // bw
+
+
+def _pad_cols(x, wp: int, fill):
+    import jax.numpy as jnp
+    w = x.shape[-1]
+    if w == wp:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, wp - w)]
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def _t_arr(t):
+    import jax.numpy as jnp
+    return jnp.asarray(t, jnp.int32).reshape(1)
+
+
+def deliver_sweep(arr, delivered, crashed, is_app, t, *,
+                  block_w: Optional[int] = None,
+                  interpret: Optional[bool] = None):
+    """Phase 5 over the live window: ``(delivered', napp, nping)``."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    from .kernel import deliver_sweep_kernel
+    n, w = arr.shape
+    wp, bw, nt = _tiles(w, block_w)
+    out_del, napp, nping = pl.pallas_call(
+        deliver_sweep_kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((bw,), lambda i: (i,)),
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, wp), jnp.int32),
+            jax.ShapeDtypeStruct((nt, n), jnp.int32),
+            jax.ShapeDtypeStruct((nt, n), jnp.int32),
+        ],
+        interpret=_resolve(interpret),
+    )(_t_arr(t), crashed, _pad_cols(is_app, wp, False),
+      _pad_cols(arr, wp, _INF), _pad_cols(delivered, wp, -1))
+    return (out_del[:, :w], napp.sum(axis=0).astype(jnp.int32),
+            nping.sum(axis=0).astype(jnp.int32))
+
+
+def fused_sweep(arr, delivered, crashed, adj, delay, fwd_ok, is_app, t, *,
+                block_w: Optional[int] = None,
+                interpret: Optional[bool] = None):
+    """Gating-free fused sweep: ``(arr', delivered', napp, nping)``."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    from .kernel import fused_sweep_kernel
+    n, w = arr.shape
+    k = adj.shape[1]
+    wp, bw, nt = _tiles(w, block_w)
+    out_arr, out_del, napp, nping = pl.pallas_call(
+        functools.partial(fused_sweep_kernel, k=k, n=n),
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((bw,), lambda i: (i,)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, wp), jnp.int32),
+            jax.ShapeDtypeStruct((n, wp), jnp.int32),
+            jax.ShapeDtypeStruct((nt, n), jnp.int32),
+            jax.ShapeDtypeStruct((nt, n), jnp.int32),
+        ],
+        interpret=_resolve(interpret),
+    )(_t_arr(t), crashed, _pad_cols(is_app, wp, False), adj, delay, fwd_ok,
+      _pad_cols(arr, wp, _INF), _pad_cols(delivered, wp, -1))
+    return (out_arr[:, :w], out_del[:, :w],
+            napp.sum(axis=0).astype(jnp.int32),
+            nping.sum(axis=0).astype(jnp.int32))
+
+
+def frontier_sweep(arr, delivered, adj, delay, gate, do, fwd_ok, is_app,
+                   t, *, block_w: Optional[int] = None,
+                   interpret: Optional[bool] = None):
+    """Gated fused sweep (flush + forward): ``(arr', flush_sent)``."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    from .kernel import frontier_sweep_kernel
+    n, w = arr.shape
+    k = adj.shape[1]
+    wp, bw, nt = _tiles(w, block_w)
+    out_arr, flush = pl.pallas_call(
+        functools.partial(frontier_sweep_kernel, k=k, n=n),
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((bw,), lambda i: (i,)),
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, wp), jnp.int32),
+            jax.ShapeDtypeStruct((nt,), jnp.int32),
+        ],
+        interpret=_resolve(interpret),
+    )(_t_arr(t), adj, delay, gate, do, fwd_ok,
+      _pad_cols(is_app, wp, False), _pad_cols(delivered, wp, -1),
+      _pad_cols(arr, wp, _INF))
+    return out_arr[:, :w], flush.sum().astype(jnp.int32)
+
+
+def retire_scan(delivered, crashed, min_gate, *,
+                block_w: Optional[int] = None,
+                interpret: Optional[bool] = None):
+    """Per-column retirement reductions: ``(cnt, alivedel, blocked)``."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    from .kernel import retire_scan_kernel
+    n, w = delivered.shape
+    wp, bw, nt = _tiles(w, block_w)
+    cnt, alivedel, blocked = pl.pallas_call(
+        retire_scan_kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bw), lambda i: (0, i)),
+            pl.BlockSpec((1, bw), lambda i: (0, i)),
+            pl.BlockSpec((1, bw), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, wp), jnp.int32),
+            jax.ShapeDtypeStruct((1, wp), jnp.int32),
+            jax.ShapeDtypeStruct((1, wp), jnp.int32),
+        ],
+        interpret=_resolve(interpret),
+    )(crashed, jnp.asarray(min_gate, jnp.int32),
+      _pad_cols(jnp.asarray(delivered, jnp.int32), wp, -1))
+    return cnt[0, :w], alivedel[0, :w], blocked[0, :w]
+
+
+@functools.lru_cache(maxsize=None)
+def retire_scan_jit(block_w: Optional[int] = None,
+                    interpret: Optional[bool] = None):
+    """Cached jitted :func:`retire_scan` for eager per-segment host
+    calls (the windowed driver's retirement sweep): the span runners
+    amortize their traces through ``lru_cache``d jitted scans, and this
+    gives the host-side reduction the same treatment — one trace per
+    plane shape instead of a fresh interpreter lowering every sweep."""
+    import jax
+    return jax.jit(functools.partial(retire_scan, block_w=block_w,
+                                     interpret=interpret))
+
+
+def slot_frontier(delivered, gate_k, delay_k, do_k, fwd_k, is_app, t, *,
+                  gating: bool, block_w: Optional[int] = None,
+                  interpret: Optional[bool] = None):
+    """One slot's ring contribution plane: ``(vals, win_cnt)``."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    from .kernel import slot_frontier_kernel
+    n, w = delivered.shape
+    wp, bw, nt = _tiles(w, block_w)
+    vals, win = pl.pallas_call(
+        functools.partial(slot_frontier_kernel, gating=gating),
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((bw,), lambda i: (i,)),
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, wp), jnp.int32),
+            jax.ShapeDtypeStruct((nt,), jnp.int32),
+        ],
+        interpret=_resolve(interpret),
+    )(_t_arr(t), gate_k, delay_k, do_k, fwd_k,
+      _pad_cols(is_app, wp, False), _pad_cols(delivered, wp, -1))
+    return vals[:, :w], win.sum().astype(jnp.int32)
+
+
+def ring_apply(arr, vals, tgt, off, *, block_w: Optional[int] = None,
+               interpret: Optional[bool] = None):
+    """Owner-local scatter-min of a visiting ring plane: ``arr'``."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    from .kernel import ring_apply_kernel
+    n, w = arr.shape
+    wp, bw, nt = _tiles(w, block_w)
+    out = pl.pallas_call(
+        functools.partial(ring_apply_kernel, n_loc=n),
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((n, bw), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, wp), jnp.int32),
+        interpret=_resolve(interpret),
+    )(jnp.asarray(off, jnp.int32).reshape(1), tgt,
+      _pad_cols(vals, wp, _INF), _pad_cols(arr, wp, _INF))
+    return out[:, :w]

@@ -1,0 +1,112 @@
+"""Plain-lax references for every delivery-sweep kernel.
+
+Each function here is the unfused jax.numpy statement of what the
+Pallas kernel in ``kernel.py`` computes — same inputs, same outputs,
+same dtypes — written with the global gather/scatter primitives the
+jax backend uses (``.at[].min`` with ``mode="drop"``).  The kernel unit
+tests (``tests/test_vecsim_kernels.py``) assert byte-equality between
+kernel and ref on random inputs, including ragged column tiles, the
+single-column window and all-retired (empty) segments.
+
+Invariant shared with the engines: an ``active`` link always carries a
+valid target (``adj >= 0``), so the flush mask never scatters through a
+negative row; the forward mask checks ``adj >= 0`` explicitly.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..scenario import INF
+
+__all__ = ["deliver_sweep_ref", "fused_sweep_ref", "frontier_sweep_ref",
+           "retire_scan_ref", "slot_frontier_ref", "ring_apply_ref"]
+
+_INF = np.int32(INF)
+
+
+def _scatter_min(arr, rows, vals, valid):
+    arr = jnp.asarray(arr)
+    n = arr.shape[0]
+    rows = jnp.where(valid, rows, n)
+    return arr.at[rows, :].min(vals, mode="drop")
+
+
+def deliver_sweep_ref(arr, delivered, crashed, is_app, t):
+    """(delivered', napp, nping) — phase 5 + per-row delivery counts."""
+    newly = (arr == t) & (delivered < 0) & ~crashed[:, None]
+    delivered = jnp.where(newly, t, delivered)
+    new_del = delivered == t
+    napp = (new_del & is_app[None, :]).sum(axis=1).astype(jnp.int32)
+    nping = (new_del & ~is_app[None, :]).sum(axis=1).astype(jnp.int32)
+    return delivered, napp, nping
+
+
+def fused_sweep_ref(arr, delivered, crashed, adj, delay, fwd_ok, is_app, t):
+    """(arr', delivered', napp, nping) — the gating-free fused sweep:
+    deliver, count, and forward-scatter in one logical pass."""
+    delivered, napp, nping = deliver_sweep_ref(arr, delivered, crashed,
+                                               is_app, t)
+    new_del = delivered == t
+    for kk in range(adj.shape[1]):
+        ok = fwd_ok[:, kk]
+        vals = jnp.where(new_del & ok[:, None],
+                         (t + delay[:, kk])[:, None].astype(jnp.int32),
+                         _INF)
+        arr = _scatter_min(arr, adj[:, kk], vals, ok)
+    return arr, delivered, napp, nping
+
+
+def frontier_sweep_ref(arr, delivered, adj, delay, gate, do, fwd_ok,
+                       is_app, t):
+    """(arr', flush_sent) — the gated fused sweep (phases 7 + 8):
+    ``delivered`` is post-phase-5; ``do`` marks links flushing this
+    round, ``fwd_ok`` links forward-eligible after the flush clears."""
+    new_del = delivered == t
+    flush_sent = jnp.int32(0)
+    for kk in range(adj.shape[1]):
+        dk = (t + delay[:, kk])[:, None].astype(jnp.int32)
+        win = ((delivered >= gate[:, kk][:, None]) & (delivered < t)
+               & do[:, kk][:, None] & is_app[None, :])
+        flush_sent += win.sum().astype(jnp.int32)
+        ok = fwd_ok[:, kk]
+        vals = jnp.minimum(jnp.where(new_del & ok[:, None], dk, _INF),
+                           jnp.where(win, dk, _INF))
+        arr = _scatter_min(arr, adj[:, kk], vals, ok | do[:, kk])
+    return arr, flush_sent
+
+
+def retire_scan_ref(delivered, crashed, min_gate):
+    """(cnt, alivedel, blocked) — per-column retirement reductions."""
+    got = delivered >= 0
+    cnt = got.sum(axis=0).astype(jnp.int32)
+    alivedel = (got & ~crashed[:, None]).sum(axis=0).astype(jnp.int32)
+    blocked = (got & (delivered >= min_gate[:, None])).sum(
+        axis=0).astype(jnp.int32)
+    return cnt, alivedel, blocked
+
+
+def slot_frontier_ref(delivered, gate_k, delay_k, do_k, fwd_k, is_app, t,
+                      *, gating: bool):
+    """(vals, win_cnt) — one slot's combined flush+forward value plane
+    for the sharded ring."""
+    dk = (t + delay_k)[:, None].astype(jnp.int32)
+    vals = jnp.where((delivered == t) & fwd_k[:, None], dk, _INF)
+    if not gating:
+        return vals, jnp.int32(0)
+    win = ((delivered >= gate_k[:, None]) & (delivered < t)
+           & do_k[:, None] & is_app[None, :])
+    vals = jnp.minimum(vals, jnp.where(win, dk, _INF))
+    return vals, win.sum().astype(jnp.int32)
+
+
+def ring_apply_ref(arr, vals, tgt, off):
+    """arr' — owner-local scatter-min of a visiting value plane: rows
+    targeting ``[off, off + n_loc)`` apply, the rest drop."""
+    arr = jnp.asarray(arr)
+    n_loc = arr.shape[0]
+    tl = tgt - off
+    local = (tl >= 0) & (tl < n_loc)
+    rows = jnp.where(local, tl, n_loc)
+    return arr.at[rows, :].min(vals, mode="drop")

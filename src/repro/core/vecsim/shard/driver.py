@@ -29,7 +29,8 @@ from ..sim import SERIES_FIELDS, SlotSchedule, init_topo_state, \
     stats_from_series
 from ..stream import ColumnWindow, WindowedRunResult
 from .mesh import pad_rows, resolve_devices, shard_mesh
-from .spanner import STATE_KEYS, shard_retire_kernels, shard_span_runner
+from .spanner import (STATE_KEYS, resolve_shard_backend,
+                      shard_retire_kernels, shard_span_runner)
 
 __all__ = ["ShardedRunResult", "execute_sharded"]
 
@@ -70,16 +71,23 @@ def execute_sharded(scn: VecScenario, window: int,
                     n_devices: Optional[int] = None,
                     horizon: Optional[int] = None, seg_len: int = 32,
                     snapshot_round: Optional[int] = None,
-                    collect: str = "auto") -> ShardedRunResult:
+                    collect: str = "auto",
+                    backend: str = "jax") -> ShardedRunResult:
     """Run ``scn`` through a ``window``-column streaming buffer sharded
     over ``n_devices`` devices (``None`` = all visible).  Parameters
     match :func:`~repro.core.vecsim.stream.execute_windowed`; the
-    backend is implicitly jax (the engine *is* a jax mesh program).
+    engine *is* a jax mesh program, so ``backend`` only chooses how the
+    per-shard round body executes: ``"jax"`` (plain lax, the default)
+    or ``"pallas"`` (per-shard delivery-sweep kernel launches inside
+    ``shard_map``, DESIGN.md §2.6); ``"auto"`` resolves like the other
+    engines (pallas only where the kernels compile).
 
     This is the engine implementation behind ``repro.api.run`` with
     ``engine="sharded"``; prefer the front door in new code."""
     import jax
     from jax.sharding import NamedSharding, PartitionSpec as P
+
+    backend = resolve_shard_backend(backend)
 
     d = resolve_devices(n_devices)
     mesh = shard_mesh(d)
@@ -117,7 +125,8 @@ def execute_sharded(scn: VecScenario, window: int,
 
     caps = cw.segment_caps(rounds, seg_len)
     runner = shard_span_runner(d, scn.k, pc, scn.always_gate,
-                               scn.pong_delay, gating=gating)
+                               scn.pong_delay, gating=gating,
+                               backend=backend)
     reduce_run, apply_run = shard_retire_kernels(d)
     rounds_dev = np.int32(rounds)
 
@@ -217,7 +226,7 @@ def execute_sharded(scn: VecScenario, window: int,
 
     stats = stats_from_series(series, first_receipts)
     return ShardedRunResult(
-        scenario=scn, window=w, backend="jax", stats=stats, series=series,
+        scenario=scn, window=w, backend=backend, stats=stats, series=series,
         delivered=delivered_full, deliv_count=deliv_count,
         bcast_done=bcast_done, expired=expired, state=host_state(),
         snapshot=snapshot, peak_live=cw.peak_live, lat_sum=lat_sum,

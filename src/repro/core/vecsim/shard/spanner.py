@@ -42,9 +42,30 @@ from ..scenario import INF
 from ..sim import SERIES_FIELDS, _STATE_KEYS
 from .mesh import shard_mesh
 
-__all__ = ["shard_span_runner", "shard_retire_kernels", "STATE_KEYS"]
+__all__ = ["shard_span_runner", "shard_retire_kernels",
+           "resolve_shard_backend", "STATE_KEYS"]
 
 STATE_KEYS = _STATE_KEYS
+
+
+def resolve_shard_backend(backend: str) -> str:
+    """Validate/resolve the sharded engine's round-body backend — the
+    one place the accepted names live.  ``"jax"`` passes through,
+    ``"pallas"`` requires the kernels to initialize, and ``"auto"``
+    resolves like the other engines (numpy can never shard, so auto
+    lands on jax wherever Pallas does not compile)."""
+    if backend == "auto":
+        from ..sim import resolve_backend
+        backend = resolve_backend("auto")
+        if backend == "numpy":  # pragma: no cover - needs jax to get here
+            backend = "jax"
+    if backend == "pallas":
+        from .. import kernels
+        kernels.require_pallas()
+    elif backend != "jax":
+        raise ValueError(f"unknown sharded backend {backend!r} (the mesh "
+                         "program runs backend 'jax' or 'pallas')")
+    return backend
 
 
 def _shift(d: int):
@@ -54,17 +75,32 @@ def _shift(d: int):
 
 @functools.lru_cache(maxsize=None)
 def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
-                      pong_delay: int, gating: bool = True):
+                      pong_delay: int, gating: bool = True,
+                      backend: str = "jax"):
     """Jitted ``(state, sched, ts) -> (state, stats)`` sharded span
     runner; same contract as :func:`~repro.core.vecsim.sim.
     jax_span_runner` with state as row-block-sharded global arrays.
     Negative rounds in ``ts`` are padding and leave the state untouched.
-    One compilation per (mesh, shape) signature, cached."""
+    One compilation per (mesh, shape) signature, cached.
+
+    ``backend="pallas"`` launches the delivery-sweep kernels
+    (``vecsim.kernels``) per shard inside the ``shard_map`` body: the
+    deliver sweep on the local row block, one ``slot_frontier`` kernel
+    per link slot building the combined flush+forward contribution
+    plane, and a ``ring_apply`` kernel at each ring hop scattering the
+    visiting plane into the rows this shard owns.  The ring permutes
+    and the pong query ring stay ``lax.ppermute`` — byte-identical to
+    the jax body at every device count."""
     import jax
     import jax.numpy as jnp
     from jax.experimental import enable_x64
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    backend = resolve_shard_backend(backend)
+    pallas = backend == "pallas"
+    if pallas:
+        from .. import kernels as kx
 
     mesh = shard_mesh(n_devices)
     d = n_devices
@@ -146,8 +182,14 @@ def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
             delivered = delivered.at[o_, sched["bc_slot"]].max(t, mode="drop")
 
         # -- 5. arrivals -> deliveries (element-wise, local) -------------- #
-        newly = (arr == t) & (delivered < 0) & ~crashed[:, None]
-        delivered = jnp.where(newly, t, delivered)
+        if pallas:
+            delivered, napp32, nping32 = kx.deliver_sweep(
+                arr, delivered, crashed, is_app, t)
+            napp = napp32.astype(jnp.int64)
+            nping = nping32.astype(jnp.int64)
+        else:
+            newly = (arr == t) & (delivered < 0) & ~crashed[:, None]
+            delivered = jnp.where(newly, t, delivered)
 
         # -- 6. pong detection: the query ring ---------------------------- #
         if pc and gating:
@@ -180,10 +222,11 @@ def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
         # over the same link, and scatter-min commutes, so the fusion is
         # exact.  A slot flushed this round becomes safe *before* the
         # forward pass, as in the monolithic body (gk_eff below).
-        new_del = delivered == t
-        napp = (new_del & is_app[None, :]).sum(axis=1)
-        nping = (new_del & ~is_app[None, :]).sum(axis=1)
-        has_new = new_del.any(axis=1) & ~crashed
+        if not pallas:
+            new_del = delivered == t
+            napp = (new_del & is_app[None, :]).sum(axis=1)
+            nping = (new_del & ~is_app[None, :]).sum(axis=1)
+            has_new = new_del.any(axis=1) & ~crashed
         elig_cnt = jnp.zeros(n_loc, jnp.int64)
         flush_sent = jnp.int64(0)
         for kk in range(k):
@@ -191,23 +234,37 @@ def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
             dk = (t + delay[:, kk])[:, None].astype(jnp.int32)
             if pc and gating:
                 do = (flush[:, kk] == t) & active[:, kk] & ~crashed
-                win = ((delivered >= gk[:, None]) & (delivered < t)
-                       & do[:, None] & is_app[None, :])
-                flush_sent += win.sum().astype(jnp.int64)
                 gk_eff = jnp.where(flush[:, kk] == t, -1, gk)
             else:
+                do = jnp.zeros_like(crashed)
                 gk_eff = gk
             ok = active[:, kk] & (gk_eff < 0) & (adj[:, kk] >= 0) & ~crashed
             elig_cnt += ok.astype(jnp.int64)
-            fwd = ok & has_new
-            vals = jnp.where(new_del & fwd[:, None], dk, inf)
-            if pc and gating:
-                vals = jnp.minimum(vals, jnp.where(win, dk, inf))
+            if pallas:
+                # slot kernel: combined flush+forward contribution plane
+                # (a row with a delivery this round is never crashed, so
+                # the jax body's has_new conjunct is implied by new_del)
+                vals, win_cnt = kx.slot_frontier(
+                    delivered, gk, delay[:, kk], do, ok, is_app, t,
+                    gating=pc and gating)
+                flush_sent += win_cnt.astype(jnp.int64)
+            else:
+                if pc and gating:
+                    win = ((delivered >= gk[:, None]) & (delivered < t)
+                           & do[:, None] & is_app[None, :])
+                    flush_sent += win.sum().astype(jnp.int64)
+                fwd = ok & has_new
+                vals = jnp.where(new_del & fwd[:, None], dk, inf)
+                if pc and gating:
+                    vals = jnp.minimum(vals, jnp.where(win, dk, inf))
             tgt = adj[:, kk].astype(jnp.int32)
             for hop in range(d):
-                tl = tgt - off
-                rows = jnp.where((tl >= 0) & (tl < n_loc), tl, n_loc)
-                arr = arr.at[rows, :].min(vals, mode="drop")
+                if pallas:
+                    arr = kx.ring_apply(arr, vals, tgt, off)
+                else:
+                    tl = tgt - off
+                    rows = jnp.where((tl >= 0) & (tl < n_loc), tl, n_loc)
+                    arr = arr.at[rows, :].min(vals, mode="drop")
                 if hop < d - 1:
                     vals = jax.lax.ppermute(vals, "shard", perm)
                     tgt = jax.lax.ppermute(tgt, "shard", perm)

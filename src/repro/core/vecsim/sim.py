@@ -28,13 +28,16 @@ The round body is written in *slot space*: schedules name the message
 same spans over a fixed-width live-column buffer, which is what makes
 windowed and monolithic runs byte-identical wherever both can run.
 
-Two backends execute the identical semantics:
+Three backends execute the identical semantics:
 
   * ``numpy``  — readable reference, mutation + ``np.minimum.at`` scatter;
   * ``jax``    — one ``lax.scan`` over rounds, jitted; the process axis is
-    pure scatter/gather so the body matches ``repro.core.engine.step``.
+    pure scatter/gather so the body matches ``repro.core.engine.step``;
+  * ``pallas`` — the same scan with the per-round delivery sweep fused
+    into Pallas kernels (``vecsim.kernels``, DESIGN.md §2.6); interpret
+    mode on CPU, compiled on TPU.
 
-Tests assert the two backends produce byte-identical ``delivered``
+Tests assert the backends produce byte-identical ``delivered``
 matrices and per-round stats series on random scenarios.
 """
 
@@ -51,7 +54,7 @@ from ..types import LegacyEntryPointWarning, NetStats
 from .scenario import INF, VecScenario
 
 __all__ = ["VecRunResult", "run_vec", "execute_vec", "SERIES_FIELDS",
-           "SlotSchedule", "full_schedule"]
+           "SlotSchedule", "full_schedule", "span_runner_for"]
 
 # Wire-size model shared with repro.core.base.control_bytes.
 _CTRL_APP = 16    # AppMsg: (origin, counter)
@@ -313,53 +316,20 @@ _STATE_KEYS = ("arr", "delivered", "adj", "delay", "active", "gate",
                "flush", "ping", "crashed", "ever_del")
 
 
-def state_to_device(st: Dict[str, np.ndarray]):
+def _device_phase_lib(pc: bool, always_gate: bool):
+    """Shared lax implementations of the schedule-event phases (1-4) and
+    the pong-detection comparison (6), used by both the jax and pallas
+    span runners so the two backends cannot drift apart on the
+    event-application semantics."""
     import jax.numpy as jnp
-    return tuple(jnp.asarray(st[key]) for key in _STATE_KEYS)
-
-
-def state_to_host(state) -> Dict[str, np.ndarray]:
-    # np.array (not asarray): views of jax CPU buffers are read-only and
-    # the windowed driver mutates the host state between segments.
-    return {key: np.array(v) for key, v in zip(_STATE_KEYS, state)}
-
-
-def sched_to_device(sched: SlotSchedule) -> Dict[str, object]:
-    import jax.numpy as jnp
-    return {f.name: jnp.asarray(getattr(sched, f.name))
-            for f in sched.__dataclass_fields__.values()}
-
-
-@functools.lru_cache(maxsize=None)
-def jax_span_runner(k: int, pc: bool, always_gate: bool, pong_delay: int,
-                    gating: bool = True):
-    """Jitted ``(state, sched, ts) -> (state, stats)`` span runner.  One
-    compilation per distinct (state, sched, ts) shape signature; negative
-    rounds in ``ts`` are padding and leave the state untouched.
-    ``gating=False`` (scenario-wide no-additions promise, see
-    :func:`np_span`) elides the pong/flush phases from the trace."""
-    import jax
-    import jax.numpy as jnp
-
-    from jax.experimental import enable_x64
 
     inf = jnp.int32(INF)
 
-    def scatter_min(arr, rows, vals, valid):
-        n = arr.shape[0]
-        rows = jnp.where(valid, rows, n)          # out of bounds -> dropped
-        return arr.at[rows, :].min(vals, mode="drop")
-
-    def real_step(sched, state, t):
+    def apply_events(sched, state, t):
         (arr, delivered, adj, delay, active, gate, flush, ping,
          crashed, ever_del) = state
         n = arr.shape[0]
         is_app = sched["is_app"]
-        # int64: per-round send counts reach rate·N·k, which wraps int32
-        # at the sustained scales this engine exists for (the numpy twin
-        # accumulates in int64 too); the runner executes under enable_x64
-        # so the dtype is honored.
-        stats = jnp.zeros(len(SERIES_FIELDS), jnp.int64)
 
         # -- 1. removals -------------------------------------------------- #
         if sched["rm_round"].shape[0]:
@@ -419,17 +389,80 @@ def jax_span_runner(k: int, pc: bool, always_gate: bool, pong_delay: int,
             o_ = jnp.where(sel, origin, n)
             delivered = delivered.at[o_, sched["bc_slot"]].max(t, mode="drop")
 
+        return (arr, delivered, adj, delay, active, gate, flush, ping,
+                crashed, ever_del)
+
+    def pong_fire(delivered, adj, gate, flush, ping, crashed):
+        """Phase 6 comparison: which gated links observe their ping
+        delivered at the link target this round."""
+        n = delivered.shape[0]
+        q_ = jnp.clip(adj, 0, n - 1)
+        s_ = jnp.clip(ping, 0, delivered.shape[1] - 1)
+        tgt_del = delivered[q_, s_]
+        return ((gate >= 0) & (flush == inf) & (ping >= 0)
+                & (tgt_del >= 0) & ~crashed[:, None])
+
+    return apply_events, pong_fire
+
+
+def state_to_device(st: Dict[str, np.ndarray]):
+    import jax.numpy as jnp
+    return tuple(jnp.asarray(st[key]) for key in _STATE_KEYS)
+
+
+def state_to_host(state) -> Dict[str, np.ndarray]:
+    # np.array (not asarray): views of jax CPU buffers are read-only and
+    # the windowed driver mutates the host state between segments.
+    return {key: np.array(v) for key, v in zip(_STATE_KEYS, state)}
+
+
+def sched_to_device(sched: SlotSchedule) -> Dict[str, object]:
+    import jax.numpy as jnp
+    return {f.name: jnp.asarray(getattr(sched, f.name))
+            for f in sched.__dataclass_fields__.values()}
+
+
+@functools.lru_cache(maxsize=None)
+def jax_span_runner(k: int, pc: bool, always_gate: bool, pong_delay: int,
+                    gating: bool = True):
+    """Jitted ``(state, sched, ts) -> (state, stats)`` span runner.  One
+    compilation per distinct (state, sched, ts) shape signature; negative
+    rounds in ``ts`` are padding and leave the state untouched.
+    ``gating=False`` (scenario-wide no-additions promise, see
+    :func:`np_span`) elides the pong/flush phases from the trace."""
+    import jax
+    import jax.numpy as jnp
+
+    from jax.experimental import enable_x64
+
+    inf = jnp.int32(INF)
+
+    def scatter_min(arr, rows, vals, valid):
+        n = arr.shape[0]
+        rows = jnp.where(valid, rows, n)          # out of bounds -> dropped
+        return arr.at[rows, :].min(vals, mode="drop")
+
+    apply_events, pong_fire = _device_phase_lib(pc, always_gate)
+
+    def real_step(sched, state, t):
+        # -- 1-4. removals / additions / crashes / broadcasts --------------- #
+        (arr, delivered, adj, delay, active, gate, flush, ping,
+         crashed, ever_del) = apply_events(sched, state, t)
+        n = arr.shape[0]
+        is_app = sched["is_app"]
+        # int64: per-round send counts reach rate·N·k, which wraps int32
+        # at the sustained scales this engine exists for (the numpy twin
+        # accumulates in int64 too); the runner executes under enable_x64
+        # so the dtype is honored.
+        stats = jnp.zeros(len(SERIES_FIELDS), jnp.int64)
+
         # -- 5. arrivals -> deliveries -------------------------------------- #
         newly = (arr == t) & (delivered < 0) & ~crashed[:, None]
         delivered = jnp.where(newly, t, delivered)
 
         # -- 6. pong detection ---------------------------------------------- #
         if pc and gating:
-            q_ = jnp.clip(adj, 0, n - 1)
-            s_ = jnp.clip(ping, 0, delivered.shape[1] - 1)
-            tgt_del = delivered[q_, s_]
-            fire = ((gate >= 0) & (flush == inf) & (ping >= 0)
-                    & (tgt_del >= 0) & ~crashed[:, None])
+            fire = pong_fire(delivered, adj, gate, flush, ping, crashed)
             flush = jnp.where(fire, t + pong_delay, flush)
             stats = stats.at[4].set(fire.sum().astype(jnp.int64))
 
@@ -495,11 +528,112 @@ def jax_span_runner(k: int, pc: bool, always_gate: bool, pong_delay: int,
     return run
 
 
-def _run_jax(scn: VecScenario, snapshot_round: Optional[int]):
+@functools.lru_cache(maxsize=None)
+def pallas_span_runner(k: int, pc: bool, always_gate: bool, pong_delay: int,
+                       gating: bool = True,
+                       interpret: Optional[bool] = None):
+    """Jitted ``(state, sched, ts) -> (state, stats)`` span runner with
+    the per-round delivery sweep fused into Pallas kernels (DESIGN.md
+    §2.6) — same contract and byte-identical results as
+    :func:`jax_span_runner`.
+
+    Schedule events and pong detection stay in lax (shared with the jax
+    runner through :func:`_device_phase_lib`); the ``(N, W)``-plane
+    phases launch kernels: the gating-free path runs the single fused
+    deliver+forward sweep, the gated path splits at the pong boundary
+    (deliver kernel, lax pong ring, flush+forward kernel).  The int64
+    NetStats math runs in lax over the kernels' int32 per-row counts.
+    """
+    import jax
     import jax.numpy as jnp
 
-    run = jax_span_runner(scn.k, scn.mode == "pc", scn.always_gate,
-                          scn.pong_delay, gating=scn.n_adds > 0)
+    from jax.experimental import enable_x64
+
+    from . import kernels as kx
+
+    kx.require_pallas()
+    inf = jnp.int32(INF)
+    apply_events, pong_fire = _device_phase_lib(pc, always_gate)
+
+    def real_step(sched, state, t):
+        # -- 1-4. removals / additions / crashes / broadcasts --------------- #
+        (arr, delivered, adj, delay, active, gate, flush, ping,
+         crashed, ever_del) = apply_events(sched, state, t)
+        is_app = sched["is_app"]
+        stats = jnp.zeros(len(SERIES_FIELDS), jnp.int64)
+
+        if pc and gating:
+            # -- 5. deliver-sweep kernel ------------------------------------ #
+            delivered, napp, nping = kx.deliver_sweep(
+                arr, delivered, crashed, is_app, t, interpret=interpret)
+            # -- 6. pong detection (cross-column gather; lax) --------------- #
+            fire = pong_fire(delivered, adj, gate, flush, ping, crashed)
+            flush = jnp.where(fire, t + pong_delay, flush)
+            stats = stats.at[4].set(fire.sum().astype(jnp.int64))
+            # -- 7+8. fused flush + forward frontier-sweep kernel ----------- #
+            # A slot flushing this round forwards as safe in the same
+            # round (the monolithic body clears gates between phases 7
+            # and 8): gk_eff mirrors that clearing for the fwd mask.
+            do = (flush == t) & active & ~crashed[:, None]
+            gk_eff = jnp.where(flush == t, -1, gate)
+            fwd_ok = (active & (gk_eff < 0) & (adj >= 0)
+                      & ~crashed[:, None])
+            arr, flush_sent = kx.frontier_sweep(
+                arr, delivered, adj, delay, gate, do, fwd_ok, is_app, t,
+                interpret=interpret)
+            stats = stats.at[3].set(flush_sent.astype(jnp.int64))
+            cleared = flush == t
+            gate = jnp.where(cleared, -1, gate)
+            ping = jnp.where(cleared, -1, ping)
+            flush = jnp.where(cleared, inf, flush)
+        else:
+            # -- 5+8. single fused deliver + forward sweep kernel ----------- #
+            fwd_ok = (active & (gate < 0) & (adj >= 0) & ~crashed[:, None])
+            arr, delivered, napp, nping = kx.fused_sweep(
+                arr, delivered, crashed, adj, delay, fwd_ok, is_app, t,
+                interpret=interpret)
+
+        elig_cnt = fwd_ok.sum(axis=1).astype(jnp.int64)
+        napp = napp.astype(jnp.int64)
+        nping = nping.astype(jnp.int64)
+        stats = stats.at[0].set(napp.sum())
+        stats = stats.at[1].set((napp * elig_cnt).sum())
+        stats = stats.at[2].set((nping * elig_cnt).sum())
+        stats = stats.at[5].set((gate >= 0).sum().astype(jnp.int64))
+
+        return (arr, delivered, adj, delay, active, gate, flush, ping,
+                crashed, ever_del), stats
+
+    def step(sched, state, t):
+        t = t.astype(jnp.int32)
+        return jax.lax.cond(
+            t >= 0,
+            lambda s: real_step(sched, s, t),
+            lambda s: (s, jnp.zeros(len(SERIES_FIELDS), jnp.int64)),
+            state)
+
+    @jax.jit
+    def _run(state, sched, ts):
+        return jax.lax.scan(lambda c, t: step(sched, c, t), state, ts)
+
+    def run(state, sched, ts):
+        with enable_x64():
+            return _run(state, sched, ts)
+
+    return run
+
+
+def span_runner_for(backend: str):
+    """The device span-runner factory for a backend name."""
+    return pallas_span_runner if backend == "pallas" else jax_span_runner
+
+
+def _run_jax(scn: VecScenario, snapshot_round: Optional[int],
+             backend: str = "jax"):
+    import jax.numpy as jnp
+
+    run = span_runner_for(backend)(scn.k, scn.mode == "pc", scn.always_gate,
+                                   scn.pong_delay, gating=scn.n_adds > 0)
     sched = sched_to_device(full_schedule(scn))
     state0 = state_to_device(_init_state(scn))
     if snapshot_round is None:
@@ -519,12 +653,28 @@ def _run_jax(scn: VecScenario, snapshot_round: Optional[int]):
 
 
 def resolve_backend(backend: str) -> str:
+    """Resolve ``"auto"`` and validate explicit backend names.
+
+    ``auto`` picks jax when importable (numpy otherwise) — and the
+    fused Pallas kernels only when an actual TPU can compile them;
+    anywhere Pallas is unavailable or interpret-only, auto falls back
+    to the jax backend.  ``backend="pallas"`` asked for by name raises
+    :class:`~repro.core.vecsim.kernels.PallasUnavailableError` when the
+    kernels cannot initialize."""
     if backend == "auto":
         try:
-            import jax  # noqa: F401
-            return "jax"
+            import jax
         except ImportError:
             return "numpy"
+        from . import kernels
+        ok, _ = kernels.pallas_available()
+        if ok and jax.default_backend() == "tpu":
+            return "pallas"
+        return "jax"
+    if backend == "pallas":
+        from . import kernels
+        kernels.require_pallas()
+        return "pallas"
     if backend not in ("numpy", "jax"):
         raise ValueError(f"unknown backend {backend!r}")
     return backend
@@ -560,8 +710,8 @@ def execute_vec(scn: VecScenario, backend: str = "auto",
         raise TypeError(f"monolithic run_vec got windowed-only arguments "
                         f"{extra}")
     backend = resolve_backend(backend)
-    if backend == "jax":
-        st, series, snapshot = _run_jax(scn, snapshot_round)
+    if backend in ("jax", "pallas"):
+        st, series, snapshot = _run_jax(scn, snapshot_round, backend)
     else:
         st, series, snapshot = _run_np(scn, snapshot_round)
     first_receipts = int((st["arr"] < scn.rounds).sum())

@@ -342,14 +342,14 @@ def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
     lat_cnt = 0
     snapshot: Optional[Dict[str, np.ndarray]] = None
 
-    if backend == "jax":
+    if backend in ("jax", "pallas"):
         import jax.numpy as jnp
 
-        from .sim import (jax_span_runner, sched_to_device, state_to_device,
+        from .sim import (sched_to_device, span_runner_for, state_to_device,
                           state_to_host)
         caps = cw.segment_caps(rounds, seg_len)
-        runner = jax_span_runner(scn.k, pc, scn.always_gate, scn.pong_delay,
-                                 gating=gating)
+        runner = span_runner_for(backend)(scn.k, pc, scn.always_gate,
+                                          scn.pong_delay, gating=gating)
 
     def run_segment(lo: int, hi: int) -> None:
         if backend == "numpy":
@@ -406,16 +406,29 @@ def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
         delivered, gate, ping = st["delivered"], st["gate"], st["ping"]
         flush, crashed, active = st["flush"], st["crashed"], st["active"]
         alive = ~crashed
-        full_del = (delivered[alive] >= 0).all(axis=0)
-        cnt = (delivered >= 0).sum(axis=0)
         gated = (gate >= 0) & active & ~crashed[:, None]
-        if gated.any():
+        if backend == "pallas":
+            # The retirement-scan kernel folds the per-column reductions
+            # (total / alive-row delivery counts, gate-window blockers)
+            # into one pass over the live planes; the retirement
+            # *decisions* stay host-side, identically to the numpy path.
+            from . import kernels as kx
             min_gate = np.where(gated, gate, INF).min(axis=1)
-            blocked = (((delivered >= 0)
-                        & (delivered >= min_gate[:, None])).any(axis=0)
-                       & slot_app)
+            cnt, alivedel, blockcnt = (
+                np.asarray(x)
+                for x in kx.retire_scan_jit()(delivered, crashed, min_gate))
+            full_del = alivedel == int(alive.sum())
+            blocked = (blockcnt > 0) & slot_app
         else:
-            blocked = np.zeros(w, bool)
+            full_del = (delivered[alive] >= 0).all(axis=0)
+            cnt = (delivered >= 0).sum(axis=0)
+            if gated.any():
+                min_gate = np.where(gated, gate, INF).min(axis=1)
+                blocked = (((delivered >= 0)
+                            & (delivered >= min_gate[:, None])).any(axis=0)
+                           & slot_app)
+            else:
+                blocked = np.zeros(w, bool)
         ref = np.zeros(w, bool)
         pv = ping[(ping >= 0) & ~crashed[:, None]]
         ref[pv] = True

@@ -8,7 +8,9 @@ results compared byte-for-byte:
 
   * NumPy backend  == JAX backend (delivered matrix + stats series);
   * windowed streaming == monolithic (delivered + series + NetStats),
-    at several window sizes down to the overflow boundary;
+    at several window sizes down to the overflow boundary, with the
+    backend drawn from {numpy, jax, pallas} — pallas runs the fused
+    delivery-sweep kernels (``vecsim.kernels``) in interpret mode;
   * vec delivered multiset == exact event-engine multiset (crossval);
   * oracle-clean traces (causal order, integrity, validity, agreement
     among correct processes) on crash and churn runs.
@@ -63,7 +65,7 @@ def test_fuzz_numpy_jax_backends_byte_identical(spec):
 @given(spec=scenario_strategy,
        frac=st.sampled_from([1.0, 0.6, 0.3]),
        seg_len=st.sampled_from([4, 16, 64]),
-       backend=st.sampled_from(["numpy", "jax"]))
+       backend=st.sampled_from(["numpy", "jax", "pallas"]))
 def test_fuzz_windowed_equals_monolithic(spec, frac, seg_len, backend):
     """The acceptance-criterion property: wherever both runs fit, the
     windowed delivered matrix is byte-identical to the monolithic one.
@@ -148,17 +150,19 @@ def test_fuzz_windowed_multiset_stable_under_window_choice(seed):
            st.integers(min_value=12, max_value=32)),
        shards=st.sampled_from([1, 2, 4]),
        frac=st.sampled_from([1.0, 0.5]),
-       seg_len=st.sampled_from([8, 32]))
-def test_fuzz_sharded_equals_windowed(spec, shards, frac, seg_len):
+       seg_len=st.sampled_from([8, 32]),
+       backend=st.sampled_from(["jax", "pallas"]))
+def test_fuzz_sharded_equals_windowed(spec, shards, frac, seg_len, backend):
     """The sharded acceptance property, differentially: at every drawn
-    shard count the device-sharded engine is byte-identical to the
+    shard count and round-body backend (plain lax or per-shard Pallas
+    kernel launches) the device-sharded engine is byte-identical to the
     windowed engine (or both refuse with WindowOverflowError).  One
     shard runs in-process; multi-shard draws spawn a child interpreter
     because the forced host-device flag must precede jax init."""
     name, seed, n = spec
     if shards > 1:
         run_shard_matrix_subprocess([(name, seed, n, frac, seg_len)],
-                                    shards=shards)
+                                    shards=shards, backend=backend)
         return
     from repro.core.vecsim.shard import execute_sharded
     scn = _build(spec)
@@ -169,10 +173,10 @@ def test_fuzz_sharded_equals_windowed(spec, shards, frac, seg_len):
     except WindowOverflowError:
         with pytest.raises(WindowOverflowError):
             execute_sharded(scn, w, n_devices=1, collect="full",
-                            seg_len=seg_len)
+                            seg_len=seg_len, backend=backend)
         return
     sh = execute_sharded(scn, w, n_devices=1, collect="full",
-                         seg_len=seg_len)
+                         seg_len=seg_len, backend=backend)
     np.testing.assert_array_equal(mono.delivered, sh.delivered)
     np.testing.assert_array_equal(mono.series, sh.series)
     assert mono.stats == sh.stats

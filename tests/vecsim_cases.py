@@ -60,7 +60,7 @@ for name, seed, n, frac, seg in {cases!r}:
         win = None
     try:
         sh = execute_sharded(scn, w, n_devices={shards}, collect="full",
-                             seg_len=seg)
+                             seg_len=seg, backend={backend!r})
     except WindowOverflowError:
         sh = None
     assert (win is None) == (sh is None), (name, "overflow parity")
@@ -81,13 +81,16 @@ print("ALL_OK")
 """
 
 
-def run_shard_matrix_subprocess(cases, shards, extra: str = ""):
+def run_shard_matrix_subprocess(cases, shards, extra: str = "",
+                                backend: str = "jax"):
     """Run ``cases`` — ``(builder, seed, n, window_frac, seg_len)``
     tuples — in a child interpreter with ``shards`` forced host devices,
     asserting the sharded engine is byte-identical to the windowed
     reference on each (or that both overflow).  ``extra`` appends
     arbitrary assertion code to the child (used for the auto-selection
-    check, which also needs the multi-device mesh)."""
+    check, which also needs the multi-device mesh).  ``backend`` picks
+    the sharded round body — ``"jax"`` or ``"pallas"`` (interpret-mode
+    kernel launches inside the child's shard_map)."""
     import os
     import subprocess
     import sys
@@ -95,7 +98,8 @@ def run_shard_matrix_subprocess(cases, shards, extra: str = ""):
     tests_dir = os.path.dirname(os.path.abspath(__file__))
     repo_root = os.path.dirname(tests_dir)
     snippet = _SNIPPET.format(shards=shards, tests_dir=tests_dir,
-                              cases=list(cases), extra=extra)
+                              cases=list(cases), extra=extra,
+                              backend=backend)
     env = dict(os.environ, PYTHONPATH="src")
     out = subprocess.run([sys.executable, "-c", snippet],
                          capture_output=True, text=True, env=env,
