@@ -35,7 +35,7 @@ sys.path.insert(0, os.path.join(
 def run_point(n: int, devices: int, messages: int, rate: float,
               window: int, k: int, topology: str, traffic: str,
               seg_len: int, horizon: int | None, max_delay: int,
-              seed: int) -> dict:
+              seed: int, scan: str = "auto") -> dict:
     from dataclasses import replace
 
     from repro.api import (RunSpec, ShardSpec, TopologySpec, TrafficSpec,
@@ -44,7 +44,7 @@ def run_point(n: int, devices: int, messages: int, rate: float,
 
     spec = RunSpec(
         protocol="pc", engine="sharded", n=n, seed=seed,
-        shard=ShardSpec(devices=devices),
+        shard=ShardSpec(devices=devices, scan=scan),
         topology=TopologySpec(kind=topology, k=k, max_delay=max_delay),
         traffic=TrafficSpec(kind=traffic, rate=rate, messages=messages),
         window=WindowSpec(window=window, seg_len=seg_len, horizon=horizon,
@@ -67,7 +67,8 @@ def run_point(n: int, devices: int, messages: int, rate: float,
     return dict(
         n=n, devices=res.n_devices, k=k, messages=messages, rate=rate,
         window=window, topology=topology, traffic=traffic,
-        seg_len=seg_len, horizon=horizon, rounds=scn.rounds,
+        seg_len=seg_len, horizon=horizon, scan=rep.extras["scan"],
+        rounds=scn.rounds,
         build_seconds=round(build_s, 3),
         run_seconds=round(run_s, 3),
         msgs_per_sec=round(messages / run_s, 1),
@@ -87,9 +88,10 @@ def rows(n: int = 1 << 20, devices: int = 4, messages: int = 512,
          rate: float = 4.0, window: int = 128, k: int = 4,
          topology: str = "kregular", traffic: str = "poisson",
          seg_len: int = 16, horizon: int | None = None,
-         max_delay: int = 1, seed: int = 0, out: str | None = None):
+         max_delay: int = 1, seed: int = 0, out: str | None = None,
+         scan: str = "auto"):
     point = run_point(n, devices, messages, rate, window, k, topology,
-                      traffic, seg_len, horizon, max_delay, seed)
+                      traffic, seg_len, horizon, max_delay, seed, scan)
     if out:
         with open(out, "w") as fh:
             json.dump(point, fh, indent=2)
@@ -132,6 +134,9 @@ def main() -> None:
                     help="force-retire columns older than this many rounds")
     ap.add_argument("--max-delay", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scan", choices=("auto", "on", "off"), default="auto",
+                    help="segment stepping: one lax.scan per segment (on, "
+                         "the auto default) vs per-round dispatch (off)")
     ap.add_argument("--out", default="BENCH_scale.json")
     args = ap.parse_args()
     # the forced-host-device flag must land before jax initializes, so
@@ -146,7 +151,7 @@ def main() -> None:
                                   args.rate, args.window, args.k,
                                   args.topology, args.traffic, args.seg_len,
                                   args.horizon, args.max_delay, args.seed,
-                                  args.out):
+                                  args.out, args.scan):
         print(f"{name},{us:.0f},{derived:.3f}")
 
 

@@ -77,6 +77,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="device-mesh size for engine 'sharded' (default: "
                          "all visible; force host devices with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=D)")
+    sh.add_argument("--scan", choices=("auto", "on", "off"),
+                    help="segment stepping for engine 'sharded': one "
+                         "lax.scan per segment (on, the auto default) "
+                         "vs per-round host dispatch (off)")
     met = ap.add_argument_group("metrics")
     met.add_argument("--oracle", action="store_true", default=None,
                      help="happens-before oracle check on the trace")
@@ -98,7 +102,7 @@ _FLAG_MAP = [
     ("n_rms", "dynamics", "n_rms"), ("n_crashes", "dynamics", "n_crashes"),
     ("window", "window", "window"), ("seg_len", "window", "seg_len"),
     ("horizon", "window", "horizon"), ("collect", "window", "collect"),
-    ("devices", "shard", "devices"),
+    ("devices", "shard", "devices"), ("scan", "shard", "scan"),
     ("oracle", "metrics", "oracle"), ("crossval", "metrics", "crossval"),
 ]
 

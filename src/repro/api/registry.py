@@ -192,7 +192,8 @@ BACKENDS.register("numpy", BackendEntry(
     _probe_numpy))
 BACKENDS.register("jax", BackendEntry(
     "jax", "jitted lax.scan round body (vec/windowed) and the shard_map "
-    "mesh program (sharded)", _probe_jax))
+    "mesh program (sharded; shard.scan='on' runs whole segments as one "
+    "device-side lax.scan, DESIGN.md §2.7)", _probe_jax))
 BACKENDS.register("pallas", BackendEntry(
     "pallas", "fused Pallas delivery-sweep kernels in the round body "
     "(vecsim.kernels, DESIGN.md §2.6); never auto-selected off-TPU",

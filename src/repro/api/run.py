@@ -278,11 +278,13 @@ def _run_sharded(spec: RunSpec, scn: VecScenario, window: Optional[int],
     res = execute_sharded(
         scn, window, n_devices=devices, horizon=spec.window.horizon,
         seg_len=spec.window.seg_len, snapshot_round=snapshot_round,
-        collect=spec.window.collect, backend=spec.backend)
+        collect=spec.window.collect, backend=spec.backend,
+        scan=spec.shard.scan)
     extras = _vec_extras(spec, res)
     extras["peak_live"] = res.peak_live
     extras["expired_columns"] = int(res.expired.sum())
     extras["devices"] = res.n_devices
+    extras["scan"] = res.scan
     return (res, res.stats, res.delivered_frac(), res.mean_latency(),
             extras)
 
@@ -298,8 +300,9 @@ ENGINES.register("windowed", EngineEntry(
     "buffer for sustained traffic on one host", _run_windowed))
 ENGINES.register("sharded", EngineEntry(
     "sharded", "device-sharded windowed engine: process axis partitioned "
-    "over a jax mesh (shard_map frontier exchange), N to 10^6+",
-    _run_sharded))
+    "over a jax mesh (shard_map frontier exchange), N to 10^6+; "
+    "shard.scan=auto|on|off picks whole-segment lax.scan vs per-round "
+    "stepping", _run_sharded))
 
 
 # --------------------------------------------------------------------- #

@@ -31,7 +31,8 @@ from ..scenario import INF
 __all__ = ["PallasUnavailableError", "pallas_available", "require_pallas",
            "default_interpret", "deliver_sweep", "fused_sweep",
            "frontier_sweep", "retire_scan", "retire_scan_jit",
-           "slot_frontier", "ring_apply"]
+           "slot_frontier", "ring_apply", "pack_columns", "unpack_columns",
+           "popcount_bytes"]
 
 _INF = np.int32(INF)
 
@@ -98,6 +99,57 @@ def _pad_cols(x, wp: int, fill):
 def _t_arr(t):
     import jax.numpy as jnp
     return jnp.asarray(t, jnp.int32).reshape(1)
+
+
+# --------------------------------------------------------------------- #
+# Frontier bit-plane helpers (scan-compatible, plain lax)
+#
+# The scanned sharded fast body (shard/spanner.py) moves the per-round
+# delivery frontier around the ring as a bit-packed uint8 plane — 8
+# columns per byte — so the all-gather ships W/8 bytes per row and the
+# stats come from byte popcounts instead of full-width boolean
+# reductions.  These are ordinary jittable jnp ops (usable inside
+# lax.scan and shard_map on any backend, no Pallas required) and use
+# numpy packbits(bitorder="little") bit order, so hosts and kernels
+# agree on the layout.
+# --------------------------------------------------------------------- #
+def _bit_shifts():
+    import jax.numpy as jnp
+    return jnp.left_shift(jnp.uint8(1), jnp.arange(8, dtype=jnp.uint8))
+
+
+def pack_columns(b):
+    """Bit-pack an ``(N, W)`` bool plane into ``(N, ceil(W/8))`` uint8
+    (little-endian bit order; ragged tail bits are zero)."""
+    import jax.numpy as jnp
+    n, w = b.shape
+    wp = -(-max(w, 1) // 8)
+    if wp * 8 != w:
+        b = jnp.concatenate(
+            [b, jnp.zeros((n, wp * 8 - w), bool)], axis=1)
+    sh = _bit_shifts()
+    return jnp.sum(jnp.where(b.reshape(n, wp, 8), sh[None, None, :],
+                             jnp.uint8(0)), axis=2, dtype=jnp.uint8)
+
+
+def unpack_columns(p, w: int):
+    """Inverse of :func:`pack_columns`: ``(N, Wp)`` uint8 back to the
+    ``(N, w)`` bool plane."""
+    import jax.numpy as jnp
+    n, wp = p.shape
+    sh = _bit_shifts()
+    b = (p[:, :, None] & sh[None, None, :]) > 0
+    b = b.reshape(n, wp * 8)
+    return b[:, :w] if w != wp * 8 else b
+
+
+def popcount_bytes(x):
+    """Per-byte SWAR popcount of a uint8 array (branch-free, three
+    shift/mask rounds — the classic Hacker's Delight reduction)."""
+    import jax.numpy as jnp
+    x = x - ((x >> 1) & jnp.uint8(0x55))
+    x = (x & jnp.uint8(0x33)) + ((x >> 2) & jnp.uint8(0x33))
+    return (x + (x >> 4)) & jnp.uint8(0x0F)
 
 
 def deliver_sweep(arr, delivered, crashed, is_app, t, *,

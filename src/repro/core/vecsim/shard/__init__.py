@@ -25,7 +25,12 @@ run both, at every device count (differentially fuzzed in
 At scale the state never round-trips to the host between segments (the
 single-host engine's known bottleneck): spans, retirement reductions
 and column recycling all execute device-side, and the host sees only
-(W,)-sized aggregates.  ``benchmarks/bench_scale.py`` drives a
+(W,)-sized aggregates.  With ``scan="on"`` (the default) even the
+per-round dispatch disappears: each segment runs as a single
+``lax.scan`` over rounds inside ``shard_map`` with stacked schedule
+inputs, donated buffers and a double-buffered frontier exchange, and
+topology-quiescent segments drop into a bit-packed int16 fast body
+(DESIGN.md §2.7) — the ≥10x throughput step at N = 1M.  ``benchmarks/bench_scale.py`` drives a
 sustained-traffic run at N ≥ 1M processes on a forced host-device mesh
 (``XLA_FLAGS=--xla_force_host_platform_device_count=D``) — the
 population regime the paper's constant-size control information is

@@ -28,8 +28,9 @@ from ..scenario import INF, VecScenario
 from ..sim import SERIES_FIELDS, SlotSchedule, init_topo_state, \
     stats_from_series
 from ..stream import ColumnWindow, WindowedRunResult
-from .mesh import pad_rows, resolve_devices, shard_mesh
-from .spanner import (STATE_KEYS, resolve_shard_backend,
+from .mesh import inverse_tables, pad_rows, resolve_devices, shard_mesh
+from .spanner import (INT16_LIMIT, STATE_KEYS, resolve_scan,
+                      resolve_shard_backend, shard_fast_span_runner,
                       shard_retire_kernels, shard_span_runner)
 
 __all__ = ["ShardedRunResult", "execute_sharded"]
@@ -38,9 +39,11 @@ __all__ = ["ShardedRunResult", "execute_sharded"]
 @dataclass
 class ShardedRunResult(WindowedRunResult):
     """A windowed-engine result produced by the sharded engine: same
-    fields and semantics, plus the device count that executed it."""
+    fields and semantics, plus the device count that executed it and
+    the resolved segment-loop mode (``scan`` = "on"/"off")."""
 
     n_devices: int = 1
+    scan: str = "off"
 
 
 def _padded_state(scn: VecScenario, w: int, n_pad: int) -> Dict[str, np.ndarray]:
@@ -72,7 +75,8 @@ def execute_sharded(scn: VecScenario, window: int,
                     horizon: Optional[int] = None, seg_len: int = 32,
                     snapshot_round: Optional[int] = None,
                     collect: str = "auto",
-                    backend: str = "jax") -> ShardedRunResult:
+                    backend: str = "jax",
+                    scan: str = "auto") -> ShardedRunResult:
     """Run ``scn`` through a ``window``-column streaming buffer sharded
     over ``n_devices`` devices (``None`` = all visible).  Parameters
     match :func:`~repro.core.vecsim.stream.execute_windowed`; the
@@ -82,12 +86,22 @@ def execute_sharded(scn: VecScenario, window: int,
     ``shard_map``, DESIGN.md §2.6); ``"auto"`` resolves like the other
     engines (pallas only where the kernels compile).
 
+    ``scan`` picks the segment loop (DESIGN.md §2.7): ``"on"`` (and
+    ``"auto"``) runs each segment as one device-resident ``lax.scan``
+    over rounds — one host dispatch per segment, donated buffers,
+    double-buffered frontier exchange, and (for topology-quiescent
+    segments) the bit-packed fast body; ``"off"`` keeps the per-round
+    host-driven stepping.  The two modes are byte-identical
+    (``tests/test_vecsim_scan.py``); ``"off"`` exists as the reference
+    and escape hatch.
+
     This is the engine implementation behind ``repro.api.run`` with
     ``engine="sharded"``; prefer the front door in new code."""
     import jax
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     backend = resolve_shard_backend(backend)
+    scan = resolve_scan(scan)
 
     d = resolve_devices(n_devices)
     mesh = shard_mesh(d)
@@ -110,6 +124,13 @@ def execute_sharded(scn: VecScenario, window: int,
     rep = NamedSharding(mesh, P())
     st0 = _padded_state(scn, w, n_pad)
     state = tuple(jax.device_put(st0[key], row) for key in STATE_KEYS)
+    if scan == "on":
+        # host mirror of the (padded) topology tables, advanced past
+        # each segment's add/rm events so the fast body's inverse
+        # tables are always built from the segment-entry topology
+        topo_adj = st0["adj"].copy()
+        topo_delay = st0["delay"].copy()
+        topo_active = st0["active"].copy()
     del st0
 
     series = np.zeros((rounds, len(SERIES_FIELDS)), np.int64)
@@ -126,21 +147,87 @@ def execute_sharded(scn: VecScenario, window: int,
     caps = cw.segment_caps(rounds, seg_len)
     runner = shard_span_runner(d, scn.k, pc, scn.always_gate,
                                scn.pong_delay, gating=gating,
-                               backend=backend)
+                               backend=backend, scan=scan == "on")
     reduce_run, apply_run = shard_retire_kernels(d)
     rounds_dev = np.int32(rounds)
+
+    if scan == "on":
+        caps_r = cw.round_caps(rounds)
+        # The fast body needs the gating machinery quiescent for the
+        # whole run (gate/flush/ping state can straddle segments) and
+        # the arrival clock to fit int16; per segment it additionally
+        # needs a topology-quiescent span (no add/rm events).
+        max_dl = int(max(topo_delay.max(initial=1),
+                         scn.add_delay.max(initial=1)))
+        fast_allowed = (not (pc and gating)
+                        and rounds + max_dl < INT16_LIMIT - 1)
+        fast_tabs: Optional[tuple] = None
+
+    def seg_topo_events(lo: int, hi: int):
+        a0, a1 = np.searchsorted(cw.add_round_s, [lo, hi])
+        r0, r1 = np.searchsorted(cw.rm_round_s, [lo, hi])
+        return int(a0), int(a1), int(r0), int(r1)
+
+    def apply_topo_events(lo: int, hi: int) -> None:
+        """Advance the host topology mirror past segment ``[lo, hi)``
+        (same event semantics as the round body's phases 1-2: additions
+        set adj/delay/active, removals deactivate in place)."""
+        nonlocal fast_tabs
+        a0, a1, r0, r1 = seg_topo_events(lo, hi)
+        if a1 > a0:
+            topo_adj[cw.add_p_s[a0:a1], cw.add_k_s[a0:a1]] = \
+                cw.add_q_s[a0:a1]
+            topo_delay[cw.add_p_s[a0:a1], cw.add_k_s[a0:a1]] = \
+                cw.add_delay_s[a0:a1]
+            topo_active[cw.add_p_s[a0:a1], cw.add_k_s[a0:a1]] = True
+        if r1 > r0:
+            topo_active[cw.rm_p_s[r0:r1], cw.rm_k_s[r0:r1]] = False
+        if a1 > a0 or r1 > r0:
+            fast_tabs = None
+
+    def fast_runner_and_tables():
+        nonlocal fast_tabs
+        if fast_tabs is None:
+            sig, tabs = inverse_tables(topo_adj, topo_delay, topo_active)
+            fast_tabs = (sig, tuple(jax.device_put(tb, row)
+                                    for tb in tabs))
+        sig, tabs = fast_tabs
+        return shard_fast_span_runner(d, sig), tabs
 
     def host_state() -> Dict[str, np.ndarray]:
         return {key: np.asarray(v)[:n] for key, v in zip(STATE_KEYS, state)}
 
     def run_segment(lo: int, hi: int) -> None:
         nonlocal state
-        padded = cw.padded_schedule(lo, hi, caps)
-        sched_dev = {f.name: jax.device_put(getattr(padded, f.name), rep)
-                     for f in SlotSchedule.__dataclass_fields__.values()}
         ts = np.full(seg_len, -3, np.int32)
         ts[: hi - lo] = np.arange(lo, hi, dtype=np.int32)
-        state, stats = runner(state, sched_dev, jax.device_put(ts, rep))
+        ts_dev = jax.device_put(ts, rep)
+        if scan == "off":
+            padded = cw.padded_schedule(lo, hi, caps)
+            sched_dev = {f.name: jax.device_put(getattr(padded, f.name),
+                                                rep)
+                         for f in SlotSchedule.__dataclass_fields__
+                         .values()}
+            state, stats = runner(state, sched_dev, ts_dev)
+        else:
+            a0, a1, r0, r1 = seg_topo_events(lo, hi)
+            sst = cw.stacked_schedule(lo, hi, caps_r, seg_len)
+            if fast_allowed and a1 == a0 and r1 == r0:
+                frun, tabs = fast_runner_and_tables()
+                ia = np.packbits(
+                    np.concatenate([cw.slot_app,
+                                    np.zeros((-w) % 8, bool)]),
+                    bitorder="little")
+                sched_dev = {key: jax.device_put(sst[key], rep)
+                             for key in ("bc_round", "bc_origin",
+                                         "bc_slot", "cr_round", "cr_pid")}
+                state, stats = frun(state, tabs, jax.device_put(ia, rep),
+                                    sched_dev, ts_dev)
+            else:
+                sched_dev = {key: jax.device_put(v, rep)
+                             for key, v in sst.items()}
+                state, stats = runner(state, sched_dev, ts_dev)
+            apply_topo_events(lo, hi)
         series[lo:hi] = np.asarray(stats, np.int64)[: hi - lo]
 
     def column_origins() -> np.ndarray:
@@ -230,4 +317,4 @@ def execute_sharded(scn: VecScenario, window: int,
         delivered=delivered_full, deliv_count=deliv_count,
         bcast_done=bcast_done, expired=expired, state=host_state(),
         snapshot=snapshot, peak_live=cw.peak_live, lat_sum=lat_sum,
-        lat_cnt=lat_cnt, n_devices=d)
+        lat_cnt=lat_cnt, n_devices=d, scan=scan)

@@ -18,7 +18,7 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["resolve_devices", "shard_mesh", "pad_rows"]
+__all__ = ["resolve_devices", "shard_mesh", "pad_rows", "inverse_tables"]
 
 
 def resolve_devices(n_devices: Optional[int] = None) -> int:
@@ -65,3 +65,53 @@ def pad_rows(n: int, n_devices: int) -> int:
     them) and are sliced off every host-side export.
     """
     return -(-n // n_devices) * n_devices
+
+
+def inverse_tables(adj: np.ndarray, delay: np.ndarray, active: np.ndarray):
+    """Per-delay-class inverse adjacency for the scanned fast body.
+
+    The fast segment body (``shard_fast_span_runner``) propagates the
+    round's delivery frontier by *gathering* at the receiver instead of
+    scattering at the sender: each global row ``q`` OR-combines the
+    bit-packed frontier rows of every eligible in-neighbor.  This
+    builds those in-neighbor lists on the host, one table per distinct
+    link delay ``dl`` (the gather's fold value is ``t + dl``, so rows
+    of different delay cannot share a table):
+
+        ``sig``  — tuple of ``(dl, B_dl)`` pairs (``B_dl`` = max
+                   in-degree within the class), the structural cache
+                   key of the compiled fast runner;
+        ``tabs`` — matching ``(N, B_dl)`` int32 arrays of global source
+                   rows, padded with ``N`` ("no source"; the gather
+                   fills out-of-range indices with an empty frontier).
+
+    Sender eligibility — ``active & (adj >= 0)`` — is folded into the
+    tables at build time, which is why the fast path is only selected
+    for segments with no link additions/removals (the driver rebuilds
+    after topology-changing segments).  Crash eligibility needs no
+    table entry: a crashed row's frontier is all-zero by construction,
+    so gathering from it is a no-op.  Duplicate parallel links (two
+    slots, same ``(p, q, dl)``) yield duplicate entries, which the OR
+    absorbs exactly like the per-round scatter-min absorbs them.
+    """
+    n = adj.shape[0]
+    mask = active & (adj >= 0)
+    src, slot = np.nonzero(mask)
+    tgt = adj[src, slot].astype(np.int64)
+    dls = delay[src, slot].astype(np.int64)
+    sig = []
+    tabs = []
+    for dl in np.unique(dls):
+        m = dls == dl
+        t_, s_ = tgt[m], src[m]
+        order = np.argsort(t_, kind="stable")
+        t_, s_ = t_[order], s_[order]
+        cnt = np.bincount(t_, minlength=n)
+        b = max(1, int(cnt.max()))
+        starts = np.concatenate([[0], np.cumsum(cnt)])
+        pos = np.arange(len(t_)) - starts[t_]
+        tab = np.full((n, b), n, np.int32)
+        tab[t_, pos] = s_
+        sig.append((int(dl), b))
+        tabs.append(tab)
+    return tuple(sig), tabs

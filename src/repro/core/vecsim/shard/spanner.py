@@ -32,6 +32,23 @@ segments.
 The body mirrors ``sim.jax_span_runner`` operation for operation —
 tests assert byte-identical delivered/series/NetStats against the
 windowed engine at every device count.
+
+**Scanned segments (DESIGN.md §2.7).**  With ``scan=True`` the whole
+segment runs as one ``lax.scan`` over rounds *inside* the ``shard_map``
+body: the host dispatches once per segment instead of once per round,
+schedules arrive as stacked per-round scan inputs, the state tuple is
+donated (``donate_argnums``), and the frontier exchange is
+double-buffered — round ``r``'s ring contributions land in a
+``pending`` carry plane and fold into ``arr`` at the top of round
+``r + 1`` (every contribution values ``>= r + 1``, and nothing reads
+``arr`` between the scatter and the fold, so the deferral is exact; a
+residual fold after the scan covers the last round).  For segments
+whose topology is static and whose gating machinery is quiescent, the
+driver swaps in :func:`shard_fast_span_runner`, which additionally
+keeps the live planes in int16, moves the frontier as a bit-packed
+uint8 plane via an all-gather ring, and turns the per-target scatter
+into gathers over host-built inverse-adjacency tables
+(:func:`~repro.core.vecsim.shard.mesh.inverse_tables`).
 """
 
 from __future__ import annotations
@@ -42,10 +59,30 @@ from ..scenario import INF
 from ..sim import SERIES_FIELDS, _STATE_KEYS
 from .mesh import shard_mesh
 
-__all__ = ["shard_span_runner", "shard_retire_kernels",
-           "resolve_shard_backend", "STATE_KEYS"]
+__all__ = ["shard_span_runner", "shard_fast_span_runner",
+           "shard_retire_kernels", "resolve_shard_backend",
+           "resolve_scan", "STATE_KEYS", "INT16_LIMIT"]
 
 STATE_KEYS = _STATE_KEYS
+
+# int16 ceiling of the fast scanned body: arrival rounds live in int16
+# planes there, with this value standing in for INF.  The driver only
+# selects the fast body when rounds + max_delay stays safely below it.
+INT16_LIMIT = 32767
+
+
+def resolve_scan(scan: str) -> str:
+    """Resolve the sharded engine's ``scan`` knob — the one place the
+    accepted names live.  ``"auto"`` resolves to ``"on"``: the scanned
+    segment body is a pure jax program, so wherever the mesh runs at
+    all it runs scanned; ``"off"`` keeps the per-round host-driven
+    stepping (the byte-level reference path)."""
+    if scan == "auto":
+        return "on"
+    if scan in ("on", "off"):
+        return scan
+    raise ValueError(f"unknown scan mode {scan!r} (the sharded segment "
+                     "loop runs scan 'auto', 'on' or 'off')")
 
 
 def resolve_shard_backend(backend: str) -> str:
@@ -76,7 +113,7 @@ def _shift(d: int):
 @functools.lru_cache(maxsize=None)
 def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
                       pong_delay: int, gating: bool = True,
-                      backend: str = "jax"):
+                      backend: str = "jax", scan: bool = False):
     """Jitted ``(state, sched, ts) -> (state, stats)`` sharded span
     runner; same contract as :func:`~repro.core.vecsim.sim.
     jax_span_runner` with state as row-block-sharded global arrays.
@@ -90,7 +127,19 @@ def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
     plane, and a ``ring_apply`` kernel at each ring hop scattering the
     visiting plane into the rows this shard owns.  The ring permutes
     and the pong query ring stay ``lax.ppermute`` — byte-identical to
-    the jax body at every device count."""
+    the jax body at every device count.
+
+    ``scan=True`` is the device-resident segment loop: the ``lax.scan``
+    over rounds moves *inside* the ``shard_map`` body, ``sched``'s
+    event fields become stacked ``(seg_len, cap)`` per-round planes
+    (``ColumnWindow.stacked_schedule``), the state argument is donated,
+    and the frontier exchange double-buffers through a ``pending``
+    carry plane: round ``r``'s ring scatter lands in ``pending`` and
+    folds into ``arr`` at the top of round ``r + 1`` (exact — every
+    contribution values ``>= r + 1`` and nothing reads ``arr`` in
+    between), with a residual fold after the scan.  Byte-identical to
+    ``scan=False`` per construction; ``tests/test_vecsim_scan.py``
+    asserts it."""
     import jax
     import jax.numpy as jnp
     from jax.experimental import enable_x64
@@ -107,9 +156,14 @@ def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
     inf = jnp.int32(INF)
     perm = _shift(d)
 
-    def real_step(sched, state, t):
+    def real_step(sched, state, t, pending=None):
+        deferred = pending is not None
         (arr, delivered, adj, delay, active, gate, flush, ping,
          crashed, ever_del) = state
+        if deferred:
+            # double-buffered frontier: the previous round's in-flight
+            # ring contributions land now, before anything reads arr
+            arr = jnp.minimum(arr, pending)
         n_loc = arr.shape[0]
         width = arr.shape[1]
         me = jax.lax.axis_index("shard")
@@ -229,6 +283,10 @@ def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
             has_new = new_del.any(axis=1) & ~crashed
         elig_cnt = jnp.zeros(n_loc, jnp.int64)
         flush_sent = jnp.int64(0)
+        # deferred mode scatters into a fresh pending plane (folded into
+        # arr at the next round's entry); immediate mode scatters into
+        # arr directly, as the windowed reference does
+        dest = jnp.full_like(arr, inf) if deferred else arr
         for kk in range(k):
             gk = gate[:, kk]
             dk = (t + delay[:, kk])[:, None].astype(jnp.int32)
@@ -260,14 +318,16 @@ def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
             tgt = adj[:, kk].astype(jnp.int32)
             for hop in range(d):
                 if pallas:
-                    arr = kx.ring_apply(arr, vals, tgt, off)
+                    dest = kx.ring_apply(dest, vals, tgt, off)
                 else:
                     tl = tgt - off
                     rows = jnp.where((tl >= 0) & (tl < n_loc), tl, n_loc)
-                    arr = arr.at[rows, :].min(vals, mode="drop")
+                    dest = dest.at[rows, :].min(vals, mode="drop")
                 if hop < d - 1:
                     vals = jax.lax.ppermute(vals, "shard", perm)
                     tgt = jax.lax.ppermute(tgt, "shard", perm)
+        if not deferred:
+            arr = dest
         if pc and gating:
             cleared = flush == t
             gate = jnp.where(cleared, -1, gate)
@@ -280,8 +340,11 @@ def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
         stats = stats.at[5].set((gate >= 0).sum().astype(jnp.int64))
         stats = jax.lax.psum(stats, "shard")
 
-        return (arr, delivered, adj, delay, active, gate, flush, ping,
-                crashed, ever_del), stats
+        out = (arr, delivered, adj, delay, active, gate, flush, ping,
+               crashed, ever_del)
+        if deferred:
+            return (out, dest), stats
+        return out, stats
 
     def step(sched, state, t):
         t = t.astype(jnp.int32)
@@ -291,8 +354,35 @@ def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
             lambda s: (s, jnp.zeros(len(SERIES_FIELDS), jnp.int64)),
             state)
 
-    def span(state, sched, ts):
-        return jax.lax.scan(lambda c, t: step(sched, c, t), state, ts)
+    if scan:
+        def scan_step(sched, carry, t):
+            t = t.astype(jnp.int32)
+            return jax.lax.cond(
+                t >= 0,
+                lambda c: real_step(sched, c[0], t, c[1]),
+                lambda c: (c, jnp.zeros(len(SERIES_FIELDS), jnp.int64)),
+                carry)
+
+        def span(state, sched, ts):
+            is_app = sched["is_app"]
+            events = {key: v for key, v in sched.items() if key != "is_app"}
+            pending0 = jnp.full_like(state[0], inf)
+
+            def body(carry, x):
+                t, ev = x
+                sch = dict(ev)
+                sch["is_app"] = is_app
+                return scan_step(sch, carry, t)
+
+            (state, pending), stats = jax.lax.scan(
+                body, (tuple(state), pending0), (ts, events))
+            # residual fold: the last round's in-flight frontier (padding
+            # rounds skip real_step, so pending survives to here intact)
+            state = (jnp.minimum(state[0], pending),) + tuple(state[1:])
+            return state, stats
+    else:
+        def span(state, sched, ts):
+            return jax.lax.scan(lambda c, t: step(sched, c, t), state, ts)
 
     # check_rep=False: lax.cond trips shard_map's replication checker
     # (jax-ml/jax known limitation); the stats output really is
@@ -301,7 +391,11 @@ def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
         span, mesh=mesh,
         in_specs=(P("shard"), P(), P()),
         out_specs=(P("shard"), P()),
-        check_rep=False))
+        check_rep=False),
+        # scanned segments own the live buffers for many rounds: donate
+        # them so the carry updates in place instead of doubling the
+        # peak (N, W) footprint
+        donate_argnums=(0,) if scan else ())
 
     def run(state, sched, ts):
         # x64 so the int64 stats accumulators (and their psum) are
@@ -310,6 +404,176 @@ def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
         with enable_x64():
             return _run(state, sched, ts)
 
+    run.jitted = _run
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def shard_fast_span_runner(n_devices: int, classes_sig: tuple):
+    """The scanned segment body specialized for quiescent segments: no
+    link additions/removals in the segment and no live gating machinery
+    anywhere in the run (the driver checks both before selecting it;
+    crashes and broadcasts are fine — they ride stacked scan inputs).
+
+    Same ``(state, ...) -> (state, stats)`` byte-contract as
+    :func:`shard_span_runner`, reached very differently (the N=1M hot
+    path, DESIGN.md §2.7):
+
+      * ``arr``/``delivered`` live in **int16** for the duration of the
+        segment (entry/exit converts; ``INT16_LIMIT`` stands in for
+        ``INF``; the driver guarantees ``rounds + max_delay`` fits);
+      * the per-round delivery frontier ``delivered == t`` is
+        **bit-packed** to ``(N/D, W/8)`` uint8 (8 columns/byte) — the
+        per-round series comes from SWAR byte popcounts, and the ring
+        moves W/8 bytes per row instead of 4W;
+      * the frontier crosses shards as an **all-gather** (D-1
+        ``ppermute`` hops, blocks concatenated in ring order), and each
+        receiver row OR-combines its eligible in-neighbors' packed rows
+        by *gathering* over the host-built per-delay-class inverse
+        tables (``classes_sig`` = ``inverse_tables``'s ``(delay, B)``
+        signature, the structural compile key) — sender eligibility is
+        folded into the tables, and a crashed sender's frontier row is
+        all-zero by construction, so no runtime edge masking remains;
+      * the exchange is **double-buffered**: the gathered OR lands in a
+        packed ``pending`` carry and folds into ``arr`` (value
+        ``t + delay`` per class) at the next round's entry, with a
+        residual fold after the scan — the same deferral contract as
+        the generic scanned body;
+      * stats stack through the scan and ``psum`` once per segment
+        (integer sums, so the reassociation is exact), and the state
+        argument is donated.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from ..kernels import pack_columns, popcount_bytes, unpack_columns
+
+    mesh = shard_mesh(n_devices)
+    d = n_devices
+    inf = jnp.int32(INF)
+    lim16 = jnp.int16(INT16_LIMIT)
+    perm = _shift(d)
+    classes = tuple(classes_sig)
+
+    def span(state, tabs, ia_pack, sched, ts):
+        (arr, delivered, adj, delay, active, gate, flush, ping,
+         crashed, ever_del) = state
+        n_loc, width = arr.shape
+        wp = -(-max(width, 1) // 8)
+        me = jax.lax.axis_index("shard")
+        off = (me * n_loc).astype(jnp.int32)
+        n_glob = n_loc * d
+
+        arr16 = jnp.where(arr >= inf, lim16, arr.astype(jnp.int16))
+        del16 = delivered.astype(jnp.int16)
+
+        # Receiver-side gather positions into the all-gathered frontier,
+        # hoisted out of the scan: ring hop j delivers the block owned
+        # by shard (me - j) % d, so global source row s = blk*n_loc + r
+        # sits at ((me - blk) % d) * n_loc + r.  "No source" entries
+        # point past the end; the gather fills them with zero bytes.
+        poss = []
+        for ci, (dl, b) in enumerate(classes):
+            ip = tabs[ci]
+            blk = ip // n_loc
+            pos = ((me - blk) % d) * n_loc + (ip - blk * n_loc)
+            poss.append(jnp.where(ip >= n_glob, n_glob,
+                                  pos).astype(jnp.int32))
+        # per-row eligible-link count: static over the segment except
+        # for crashes, which zero the whole row (matching the reference
+        # body's per-slot `ok &= ~crashed`)
+        linkcnt = (active & (adj >= 0)).sum(axis=1).astype(jnp.int64)
+        gated = (gate >= 0).sum().astype(jnp.int64)
+
+        def fold(arr16, pend, tprev):
+            # deferred packed frontier: contributions gathered during
+            # round tprev arrive with value tprev + delay
+            for ci, (dl, b) in enumerate(classes):
+                pb = unpack_columns(pend[ci], width)
+                arr16 = jnp.where(
+                    pb, jnp.minimum(arr16, tprev + jnp.int16(dl)), arr16)
+            return arr16
+
+        def body(carry, x):
+            arr16, del16, crs, pend, tprev = carry
+            t, bc_r, bc_o, bc_s, cr_r, cr_p = x
+            t16 = t.astype(jnp.int16)
+            arr16 = fold(arr16, pend, tprev)
+            # crashes / broadcasts (owner-local; sentinel rounds in the
+            # stacked rows never match a real t)
+            if cr_r.shape[0]:
+                pl = cr_p.astype(jnp.int32) - off
+                p_ = jnp.where((cr_r == t) & (pl >= 0) & (pl < n_loc),
+                               pl, n_loc)
+                crs = crs.at[p_].set(True, mode="drop")
+            if bc_r.shape[0]:
+                ol = bc_o.astype(jnp.int32) - off
+                owned = (ol >= 0) & (ol < n_loc)
+                ocl = jnp.clip(ol, 0, n_loc - 1)
+                sel = (bc_r == t) & owned & ~crs[ocl]
+                o_ = jnp.where(sel, ol, n_loc)
+                del16 = del16.at[o_, bc_s].max(t16, mode="drop")
+            # arrivals -> deliveries (padding rounds: t16 < 0 matches
+            # no arr/delivered value, so everything below is a no-op)
+            newly = (arr16 == t16) & (del16 < 0) & ~crs[:, None]
+            del16 = jnp.where(newly, t16, del16)
+            # pack this round's frontier once; the barrier pins a single
+            # materialization (XLA otherwise re-runs the producer chain
+            # per consumer: stats, ring, and gather)
+            g = jax.lax.optimization_barrier(pack_columns(del16 == t16))
+            rowsum = jnp.sum(popcount_bytes(g), axis=1, dtype=jnp.int64)
+            napp = jnp.sum(popcount_bytes(g & ia_pack[None, :]), axis=1,
+                           dtype=jnp.int64)
+            elig = jnp.where(crs, 0, linkcnt)
+            z = jnp.int64(0)
+            stats = jnp.stack([
+                napp.sum(), (napp * elig).sum(),
+                ((rowsum - napp) * elig).sum(), z, z,
+                jnp.where(t >= 0, gated, z)])
+            # all-gather the packed frontier around the ring
+            blocks = [g]
+            for _hop in range(d - 1):
+                blocks.append(jax.lax.ppermute(blocks[-1], "shard", perm))
+            gg = jnp.concatenate(blocks, axis=0) if d > 1 else g
+            pend_new = []
+            for ci, (dl, b) in enumerate(classes):
+                pos = poss[ci]
+                acc = jnp.take(gg, pos[:, 0], axis=0, mode="fill",
+                               fill_value=0)
+                for col in range(1, b):
+                    acc = acc | jnp.take(gg, pos[:, col], axis=0,
+                                         mode="fill", fill_value=0)
+                pend_new.append(acc)
+            return (arr16, del16, crs, tuple(pend_new), t16), stats
+
+        pend0 = tuple(jnp.zeros((n_loc, wp), jnp.uint8) for _ in classes)
+        xs = (ts.astype(jnp.int32), sched["bc_round"], sched["bc_origin"],
+              sched["bc_slot"], sched["cr_round"], sched["cr_pid"])
+        carry0 = (arr16, del16, crashed, pend0, jnp.int16(0))
+        (arr16, del16, crashed, pend, tprev), stats = jax.lax.scan(
+            body, carry0, xs)
+        arr16 = fold(arr16, pend, tprev)
+        stats = jax.lax.psum(stats, "shard")
+        arr = jnp.where(arr16 >= lim16, inf, arr16.astype(jnp.int32))
+        delivered = del16.astype(jnp.int32)
+        return (arr, delivered, adj, delay, active, gate, flush, ping,
+                crashed, ever_del), stats
+
+    _run = jax.jit(shard_map(
+        span, mesh=mesh,
+        in_specs=(P("shard"), P("shard"), P(), P(), P()),
+        out_specs=(P("shard"), P()),
+        check_rep=False),
+        donate_argnums=(0,))
+
+    def run(state, tabs, ia_pack, sched, ts):
+        with enable_x64():
+            return _run(state, tabs, ia_pack, sched, ts)
+
+    run.jitted = _run
     return run
 
 

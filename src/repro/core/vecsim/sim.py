@@ -54,7 +54,8 @@ from ..types import LegacyEntryPointWarning, NetStats
 from .scenario import INF, VecScenario
 
 __all__ = ["VecRunResult", "run_vec", "execute_vec", "SERIES_FIELDS",
-           "SlotSchedule", "full_schedule", "span_runner_for"]
+           "SlotSchedule", "full_schedule", "span_runner_for",
+           "STACKED_SCHED_FIELDS", "stack_schedules"]
 
 # Wire-size model shared with repro.core.base.control_bytes.
 _CTRL_APP = 16    # AppMsg: (origin, counter)
@@ -90,6 +91,34 @@ class SlotSchedule:
     rm_k: np.ndarray
     cr_round: np.ndarray     # (C,)
     cr_pid: np.ndarray
+
+
+# Event fields of a SlotSchedule: everything except the per-column
+# ``is_app`` mask, which is segment-wide rather than per-round.  These
+# are the fields the scanned sharded runner consumes as stacked
+# ``lax.scan`` inputs (one leading round axis), so the list is the
+# contract between ``ColumnWindow.stacked_schedule`` and the runner.
+STACKED_SCHED_FIELDS = tuple(
+    name for name in SlotSchedule.__dataclass_fields__ if name != "is_app")
+
+
+def stack_schedules(schedules) -> Dict[str, np.ndarray]:
+    """Stack per-round padded :class:`SlotSchedule`\\ s along a leading
+    round axis for device-side ``lax.scan`` consumption.
+
+    Every schedule must be padded to identical caps (use
+    ``ColumnWindow.padded_schedule`` with per-round caps) so each field
+    stacks to a rectangular ``(rounds, cap)`` array.  ``is_app`` is
+    shared across the span (column identity cannot change mid-segment —
+    activation and retirement only happen at segment boundaries), so it
+    is returned unstacked under its own key."""
+    schedules = list(schedules)
+    if not schedules:
+        raise ValueError("stack_schedules needs at least one schedule")
+    out = {name: np.stack([getattr(s, name) for s in schedules])
+           for name in STACKED_SCHED_FIELDS}
+    out["is_app"] = schedules[0].is_app
+    return out
 
 
 def full_schedule(scn: VecScenario) -> SlotSchedule:

@@ -51,7 +51,7 @@ import numpy as np
 from ..types import LegacyEntryPointWarning, NetStats
 from .scenario import INF, VecScenario
 from .sim import (SERIES_FIELDS, SlotSchedule, init_topo_state, np_span,
-                  resolve_backend, stats_from_series)
+                  resolve_backend, stack_schedules, stats_from_series)
 
 __all__ = ["WindowedRunResult", "WindowOverflowError", "ColumnWindow",
            "run_vec_windowed", "execute_windowed"]
@@ -248,6 +248,30 @@ class ColumnWindow:
             rm_k=_pad(sched.rm_k, cap_rm, 0),
             cr_round=_pad(sched.cr_round, cap_cr, -2),
             cr_pid=_pad(sched.cr_pid, cap_cr, 0))
+
+    def round_caps(self, total_rounds: int) -> Tuple[int, int, int, int]:
+        """Per-*round* event-count caps (seg_len=1 segment caps): the
+        row widths of the stacked scan inputs the scanned sharded
+        runner consumes, constant over the whole run so every segment
+        reuses one jitted trace."""
+        return self.segment_caps(total_rounds, 1)
+
+    def stacked_schedule(self, lo: int, hi: int,
+                         caps: Tuple[int, int, int, int],
+                         pad_rounds: int) -> Dict[str, np.ndarray]:
+        """The ``[lo, hi)`` segment schedule as stacked per-round scan
+        inputs: each event field becomes a ``(pad_rounds, cap)`` array
+        whose row ``i`` is the round ``lo + i`` schedule padded to the
+        per-round ``caps`` (:meth:`round_caps`).  Rows past ``hi - lo``
+        are all-sentinel (round -2 never matches), mirroring the ``ts``
+        padding convention, so a ragged final segment scans the same
+        trace as a full one.  ``is_app`` rides along unstacked."""
+        rows = [self.padded_schedule(lo + i, lo + i + 1, caps)
+                for i in range(hi - lo)]
+        if pad_rounds > hi - lo:
+            rows.extend([self.padded_schedule(hi, hi, caps)]
+                        * (pad_rounds - (hi - lo)))
+        return stack_schedules(rows)
 
     def activate(self, t: int, t_end: int) -> int:
         """Assign free columns to events due before ``t_end``; returns

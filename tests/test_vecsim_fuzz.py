@@ -151,18 +151,23 @@ def test_fuzz_windowed_multiset_stable_under_window_choice(seed):
        shards=st.sampled_from([1, 2, 4]),
        frac=st.sampled_from([1.0, 0.5]),
        seg_len=st.sampled_from([8, 32]),
-       backend=st.sampled_from(["jax", "pallas"]))
-def test_fuzz_sharded_equals_windowed(spec, shards, frac, seg_len, backend):
+       backend=st.sampled_from(["jax", "pallas"]),
+       scan=st.sampled_from(["on", "off"]))
+def test_fuzz_sharded_equals_windowed(spec, shards, frac, seg_len, backend,
+                                      scan):
     """The sharded acceptance property, differentially: at every drawn
-    shard count and round-body backend (plain lax or per-shard Pallas
-    kernel launches) the device-sharded engine is byte-identical to the
-    windowed engine (or both refuse with WindowOverflowError).  One
-    shard runs in-process; multi-shard draws spawn a child interpreter
-    because the forced host-device flag must precede jax init."""
+    shard count, round-body backend (plain lax or per-shard Pallas
+    kernel launches) and segment stepping (whole-segment ``lax.scan``
+    vs per-round dispatch) the device-sharded engine is byte-identical
+    to the windowed engine (or both refuse with WindowOverflowError).
+    One shard runs in-process; multi-shard draws spawn a child
+    interpreter because the forced host-device flag must precede jax
+    init."""
     name, seed, n = spec
     if shards > 1:
         run_shard_matrix_subprocess([(name, seed, n, frac, seg_len)],
-                                    shards=shards, backend=backend)
+                                    shards=shards, backend=backend,
+                                    scan=scan)
         return
     from repro.core.vecsim.shard import execute_sharded
     scn = _build(spec)
@@ -173,14 +178,59 @@ def test_fuzz_sharded_equals_windowed(spec, shards, frac, seg_len, backend):
     except WindowOverflowError:
         with pytest.raises(WindowOverflowError):
             execute_sharded(scn, w, n_devices=1, collect="full",
-                            seg_len=seg_len, backend=backend)
+                            seg_len=seg_len, backend=backend, scan=scan)
         return
     sh = execute_sharded(scn, w, n_devices=1, collect="full",
-                         seg_len=seg_len, backend=backend)
+                         seg_len=seg_len, backend=backend, scan=scan)
+    assert sh.scan == scan
     np.testing.assert_array_equal(mono.delivered, sh.delivered)
     np.testing.assert_array_equal(mono.series, sh.series)
     assert mono.stats == sh.stats
     assert mono.peak_live == sh.peak_live
+
+
+@settings(max_examples=6, **BASE)
+@given(spec=st.tuples(
+           st.sampled_from(["static", "link_add", "churn", "crash",
+                            "sustained_kreg"]),
+           st.integers(min_value=0, max_value=10 ** 6),
+           st.integers(min_value=12, max_value=32)),
+       frac=st.sampled_from([1.0, 0.5]),
+       seg_a=st.sampled_from([1, 5, 16]),
+       seg_b=st.sampled_from([3, 8, 64]))
+def test_fuzz_scan_results_independent_of_segment_length(spec, frac,
+                                                         seg_a, seg_b):
+    """Segment length is an execution detail of the scanned path, never
+    a semantic one: any two overflow-free seg_len choices give
+    byte-identical deliveries, series, stats and final state.  This is
+    the property that licenses the driver's per-segment fast-body
+    selection — a segment boundary can move without moving any
+    delivery.  (Overflow itself *may* depend on seg_len — retirement
+    only recycles columns at segment boundaries, so a longer segment
+    can overflow a window a shorter one squeezes through — which is why
+    overflowing draws are skipped, same as the windowed twin of this
+    test, rather than asserted equal.)"""
+    from repro.core.vecsim.shard import execute_sharded
+    scn = _build(spec)
+    w = max(4, int(scn.m_total * frac))
+    results = []
+    for seg in (seg_a, seg_b):
+        try:
+            results.append(execute_sharded(scn, w, n_devices=1,
+                                           collect="full", seg_len=seg,
+                                           backend="jax", scan="on"))
+        except WindowOverflowError:
+            results.append(None)
+    a, b = results
+    if a is None or b is None:
+        assert frac < 1.0, "a full-width window can never overflow"
+        return
+    np.testing.assert_array_equal(a.delivered, b.delivered)
+    np.testing.assert_array_equal(a.series, b.series)
+    assert a.stats == b.stats
+    for key in a.state:
+        np.testing.assert_array_equal(a.state[key], b.state[key],
+                                      err_msg=key)
 
 
 @settings(max_examples=25, **BASE)

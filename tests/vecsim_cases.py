@@ -60,7 +60,8 @@ for name, seed, n, frac, seg in {cases!r}:
         win = None
     try:
         sh = execute_sharded(scn, w, n_devices={shards}, collect="full",
-                             seg_len=seg, backend={backend!r})
+                             seg_len=seg, backend={backend!r},
+                             scan={scan!r})
     except WindowOverflowError:
         sh = None
     assert (win is None) == (sh is None), (name, "overflow parity")
@@ -75,6 +76,20 @@ for name, seed, n, frac, seg in {cases!r}:
         for key in win.state:
             np.testing.assert_array_equal(win.state[key], sh.state[key],
                                           err_msg=name + "/" + key)
+    if sh is not None and {scan!r} == "on":
+        # the scanned segment body must be byte-identical to the
+        # per-round sharded path it replaced, not just to the windowed
+        # reference — compare against scan="off" in the same mesh
+        off = execute_sharded(scn, w, n_devices={shards}, collect="full",
+                              seg_len=seg, backend={backend!r},
+                              scan="off")
+        assert sh.scan == "on" and off.scan == "off"
+        np.testing.assert_array_equal(off.delivered, sh.delivered)
+        np.testing.assert_array_equal(off.series, sh.series)
+        assert off.stats == sh.stats, (name, "scan on vs off")
+        for key in off.state:
+            np.testing.assert_array_equal(off.state[key], sh.state[key],
+                                          err_msg=name + "/scan/" + key)
     print("CASE_OK", name, n)
 {extra}
 print("ALL_OK")
@@ -82,7 +97,7 @@ print("ALL_OK")
 
 
 def run_shard_matrix_subprocess(cases, shards, extra: str = "",
-                                backend: str = "jax"):
+                                backend: str = "jax", scan: str = "auto"):
     """Run ``cases`` — ``(builder, seed, n, window_frac, seg_len)``
     tuples — in a child interpreter with ``shards`` forced host devices,
     asserting the sharded engine is byte-identical to the windowed
@@ -90,7 +105,11 @@ def run_shard_matrix_subprocess(cases, shards, extra: str = "",
     arbitrary assertion code to the child (used for the auto-selection
     check, which also needs the multi-device mesh).  ``backend`` picks
     the sharded round body — ``"jax"`` or ``"pallas"`` (interpret-mode
-    kernel launches inside the child's shard_map)."""
+    kernel launches inside the child's shard_map).  ``scan`` picks the
+    segment stepping; with the scanned path in play the child *also*
+    re-runs each case with ``scan="off"`` and asserts the two sharded
+    results match byte for byte (the tightest differential: same mesh,
+    same backend, only the stepping strategy differs)."""
     import os
     import subprocess
     import sys
@@ -99,7 +118,7 @@ def run_shard_matrix_subprocess(cases, shards, extra: str = "",
     repo_root = os.path.dirname(tests_dir)
     snippet = _SNIPPET.format(shards=shards, tests_dir=tests_dir,
                               cases=list(cases), extra=extra,
-                              backend=backend)
+                              backend=backend, scan=scan)
     env = dict(os.environ, PYTHONPATH="src")
     out = subprocess.run([sys.executable, "-c", snippet],
                          capture_output=True, text=True, env=env,
