@@ -279,12 +279,21 @@ def _run_sharded(spec: RunSpec, scn: VecScenario, window: Optional[int],
         scn, window, n_devices=devices, horizon=spec.window.horizon,
         seg_len=spec.window.seg_len, snapshot_round=snapshot_round,
         collect=spec.window.collect, backend=spec.backend,
-        scan=spec.shard.scan)
+        scan=spec.shard.scan, profile=spec.shard.profile)
     extras = _vec_extras(spec, res)
     extras["peak_live"] = res.peak_live
     extras["expired_columns"] = int(res.expired.sum())
     extras["devices"] = res.n_devices
     extras["scan"] = res.scan
+    if res.seg_profile is not None:
+        # scalar totals only; the per-segment list stays on the raw
+        # result (report.result.seg_profile) — extras are float-coerced
+        for key in ("stage_s", "dispatch_s", "block_s", "retire_s"):
+            extras["profile_" + key] = float(
+                sum(p[key] for p in res.seg_profile))
+        extras["profile_segments"] = len(res.seg_profile)
+        extras["profile_fast_segments"] = sum(
+            1 for p in res.seg_profile if p["fast"])
     return (res, res.stats, res.delivered_frac(), res.mean_latency(),
             extras)
 
@@ -302,7 +311,8 @@ ENGINES.register("sharded", EngineEntry(
     "sharded", "device-sharded windowed engine: process axis partitioned "
     "over a jax mesh (shard_map frontier exchange), N to 10^6+; "
     "shard.scan=auto|on|off picks whole-segment lax.scan vs per-round "
-    "stepping", _run_sharded))
+    "stepping, shard.profile=True records per-segment timings",
+    _run_sharded))
 
 
 # --------------------------------------------------------------------- #

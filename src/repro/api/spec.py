@@ -96,10 +96,17 @@ class ShardSpec:
     results, about an order of magnitude faster at N ≥ 1M.  ``"auto"``
     (the default) resolves to ``"on"``; the numpy backend has no
     scanned path, so ``scan="on"`` with ``backend="numpy"`` is a
-    :class:`SpecError`."""
+    :class:`SpecError`.
+
+    ``profile=True`` records a per-segment host/device wall-time
+    breakdown (schedule staging, dispatch, host blocking, retirement)
+    on the engine result (``result.seg_profile``) and scalar totals in
+    the report extras — results are unaffected; the cost is a few
+    clock reads per segment."""
 
     devices: Optional[int] = None   # mesh size; None = all visible
     scan: str = "auto"              # segment scan: auto | on | off
+    profile: bool = False           # per-segment timing breakdown
 
 
 @dataclass(frozen=True)
@@ -232,6 +239,12 @@ class RunSpec:
                     "shard.scan='on' is a device-side lax.scan; the "
                     "numpy reference engine steps per round — use "
                     "backend='jax', 'pallas' or 'auto' (or scan='off')")
+        if self.shard.profile and self.engine in ("vec", "exact",
+                                                  "windowed"):
+            raise SpecError(
+                f"shard.profile=True only applies to engine 'sharded' "
+                f"or 'auto' (got engine={self.engine!r}); single-host "
+                "engines have no per-segment staging to profile")
         if self.engine == "sharded" and self.backend == "numpy":
             raise SpecError("engine 'sharded' is a jax device-mesh "
                             "program; use backend='jax', 'pallas' or "

@@ -55,7 +55,8 @@ from ..scenario import INF
 
 __all__ = ["fused_sweep_kernel", "deliver_sweep_kernel",
            "frontier_sweep_kernel", "retire_scan_kernel",
-           "slot_frontier_kernel", "ring_apply_kernel"]
+           "retire_reduce_kernel", "slot_frontier_kernel",
+           "ring_apply_kernel"]
 
 _INF = np.int32(INF)
 
@@ -172,6 +173,31 @@ def retire_scan_kernel(crashed_ref, min_gate_ref, delivered_ref, cnt_ref,
     blocked_ref[0, :] = (
         got & (delivered >= min_gate_ref[...][:, None])).sum(
         axis=0).astype(jnp.int32)
+
+
+def retire_reduce_kernel(crashed_ref, min_gate_ref, rounds_ref, arr_ref,
+                         delivered_ref, cnt_ref, alivedel_ref, blocked_ref,
+                         arrcnt_ref, sumdel_ref):
+    """:func:`retire_scan_kernel` plus the record-side reductions —
+    first-receipt counts (``arr < rounds``) and the per-column
+    delivered-round sum the latency aggregate is derived from
+    (``lat = sumdel - cnt·birth``) — so retiring a column needs no
+    ``(N, cols)`` host fetch beyond the decision itself.  ``sumdel`` is
+    an int32 partial: exact while ``N·rounds < 2^31``, which holds
+    through the engine's host-plane memory ceiling."""
+    delivered = delivered_ref[...]
+    crashed = crashed_ref[...]
+    got = delivered >= 0
+    cnt_ref[0, :] = got.sum(axis=0).astype(jnp.int32)
+    alivedel_ref[0, :] = (got & ~crashed[:, None]).sum(axis=0).astype(
+        jnp.int32)
+    blocked_ref[0, :] = (
+        got & (delivered >= min_gate_ref[...][:, None])).sum(
+        axis=0).astype(jnp.int32)
+    arrcnt_ref[0, :] = (arr_ref[...] < rounds_ref[0]).sum(axis=0).astype(
+        jnp.int32)
+    sumdel_ref[0, :] = jnp.where(got, delivered, 0).sum(axis=0).astype(
+        jnp.int32)
 
 
 def slot_frontier_kernel(t_ref, gate_ref, delay_ref, do_ref, fwd_ref,

@@ -31,7 +31,8 @@ from ..scenario import INF
 __all__ = ["PallasUnavailableError", "pallas_available", "require_pallas",
            "default_interpret", "deliver_sweep", "fused_sweep",
            "frontier_sweep", "retire_scan", "retire_scan_jit",
-           "slot_frontier", "ring_apply", "pack_columns", "unpack_columns",
+           "retire_reduce", "retire_reduce_jit", "slot_frontier",
+           "ring_apply", "pack_columns", "unpack_columns",
            "popcount_bytes"]
 
 _INF = np.int32(INF)
@@ -309,6 +310,51 @@ def retire_scan(delivered, crashed, min_gate, *,
     )(crashed, jnp.asarray(min_gate, jnp.int32),
       _pad_cols(jnp.asarray(delivered, jnp.int32), wp, -1))
     return cnt[0, :w], alivedel[0, :w], blocked[0, :w]
+
+
+def retire_reduce(arr, delivered, crashed, min_gate, rounds, *,
+                  block_w: Optional[int] = None,
+                  interpret: Optional[bool] = None):
+    """Per-column retirement *and* record reductions:
+    ``(cnt, alivedel, blocked, arrcnt, sumdel)`` — the
+    :func:`retire_scan` triple plus the first-receipt count and the
+    delivered-round sum, so the windowed driver's pallas retirement
+    path records a retired column from five scalars instead of
+    re-reading its ``(N,)`` plane slices."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    from .kernel import retire_reduce_kernel
+    n, w = delivered.shape
+    wp, bw, nt = _tiles(w, block_w)
+    out = pl.pallas_call(
+        retire_reduce_kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+        ],
+        out_specs=[pl.BlockSpec((1, bw), lambda i: (0, i))] * 5,
+        out_shape=[jax.ShapeDtypeStruct((1, wp), jnp.int32)] * 5,
+        interpret=_resolve(interpret),
+    )(crashed, jnp.asarray(min_gate, jnp.int32), _t_arr(rounds),
+      _pad_cols(jnp.asarray(arr, jnp.int32), wp, INF),
+      _pad_cols(jnp.asarray(delivered, jnp.int32), wp, -1))
+    return tuple(x[0, :w] for x in out)
+
+
+@functools.lru_cache(maxsize=None)
+def retire_reduce_jit(block_w: Optional[int] = None,
+                      interpret: Optional[bool] = None):
+    """Cached jitted :func:`retire_reduce` (same treatment as
+    :func:`retire_scan_jit`)."""
+    import jax
+    return jax.jit(functools.partial(retire_reduce, block_w=block_w,
+                                     interpret=interpret))
 
 
 @functools.lru_cache(maxsize=None)

@@ -21,7 +21,8 @@ import numpy as np
 from ..scenario import INF
 
 __all__ = ["deliver_sweep_ref", "fused_sweep_ref", "frontier_sweep_ref",
-           "retire_scan_ref", "slot_frontier_ref", "ring_apply_ref"]
+           "retire_scan_ref", "retire_reduce_ref", "slot_frontier_ref",
+           "ring_apply_ref"]
 
 _INF = np.int32(INF)
 
@@ -85,6 +86,16 @@ def retire_scan_ref(delivered, crashed, min_gate):
     blocked = (got & (delivered >= min_gate[:, None])).sum(
         axis=0).astype(jnp.int32)
     return cnt, alivedel, blocked
+
+
+def retire_reduce_ref(arr, delivered, crashed, min_gate, rounds):
+    """(cnt, alivedel, blocked, arrcnt, sumdel) — retirement + record
+    reductions."""
+    cnt, alivedel, blocked = retire_scan_ref(delivered, crashed, min_gate)
+    arrcnt = (arr < rounds).sum(axis=0).astype(jnp.int32)
+    sumdel = jnp.where(delivered >= 0, delivered, 0).sum(
+        axis=0).astype(jnp.int32)
+    return cnt, alivedel, blocked, arrcnt, sumdel
 
 
 def slot_frontier_ref(delivered, gate_k, delay_k, do_k, fwd_k, is_app, t,

@@ -10,6 +10,15 @@ aggregates, and column recycling is a masked device-side update; the
 host never materializes an ``(N, W)`` plane unless the run is small
 enough to collect the full delivered matrix (``collect="full"``).
 
+With ``scan="on"`` a segment costs one dispatch and O(W) host bytes
+(DESIGN.md §2.8): the scanned span runners return the retirement
+aggregates fused into the segment program itself (no standalone reduce
+dispatch), schedules stage through segment-persistent device buffers
+that skip re-upload when a field's content is unchanged — with the next
+segment's activation-independent fields prefetched while the current
+segment executes — and the fast body's inverse-adjacency tables are
+cached by topology content across quiescent segments.
+
 Byte-identity contract: for any scenario both engines can run, the
 returned delivered matrix, per-round series, ``NetStats``, per-message
 aggregates, ``peak_live`` and overflow behavior equal the windowed
@@ -19,16 +28,18 @@ engine's exactly, at every device count — asserted by
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Optional
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from ..scenario import INF, VecScenario
-from ..sim import SERIES_FIELDS, SlotSchedule, init_topo_state, \
-    stats_from_series
+from ..sim import SERIES_FIELDS, STACKED_SCHED_FIELDS, SlotSchedule, \
+    init_topo_state, stats_from_series
 from ..stream import ColumnWindow, WindowedRunResult
-from .mesh import inverse_tables, pad_rows, resolve_devices, shard_mesh
+from .mesh import inverse_tables, pad_rows, resolve_devices, shard_mesh, \
+    topology_digest
 from .spanner import (INT16_LIMIT, STATE_KEYS, resolve_scan,
                       resolve_shard_backend, shard_fast_span_runner,
                       shard_retire_kernels, shard_span_runner)
@@ -39,11 +50,16 @@ __all__ = ["ShardedRunResult", "execute_sharded"]
 @dataclass
 class ShardedRunResult(WindowedRunResult):
     """A windowed-engine result produced by the sharded engine: same
-    fields and semantics, plus the device count that executed it and
-    the resolved segment-loop mode (``scan`` = "on"/"off")."""
+    fields and semantics, plus the device count that executed it, the
+    resolved segment-loop mode (``scan`` = "on"/"off") and — when the
+    run was profiled — the per-segment host/device timing breakdown
+    (``seg_profile``: one dict per segment with ``lo``/``hi`` round
+    bounds, whether the fast body ran, and ``stage_s``/``dispatch_s``/
+    ``block_s``/``retire_s`` wall components)."""
 
     n_devices: int = 1
     scan: str = "off"
+    seg_profile: Optional[List[dict]] = field(default=None, repr=False)
 
 
 def _padded_state(scn: VecScenario, w: int, n_pad: int) -> Dict[str, np.ndarray]:
@@ -70,13 +86,92 @@ def _padded_state(scn: VecScenario, w: int, n_pad: int) -> Dict[str, np.ndarray]
     return {key: np.concatenate([st[key], pad[key]]) for key in st}
 
 
+class _SegmentStager:
+    """Segment-persistent schedule staging for the scanned path.
+
+    Owns one device-resident buffer per stacked schedule field, reused
+    across segments: a field is re-uploaded only when its host content
+    actually changed (quiescent traffic/churn segments re-use the
+    all-sentinel planes already on device), and the
+    activation-independent fields of segment k+1 — everything except
+    ``bc_slot``/``add_slot``/``is_app``, which depend on column
+    assignment — are staged while segment k executes on the mesh
+    (``prefetch``), overlapping the host fill + upload with device
+    compute.  The schedule buffers are never donated, which is what
+    makes the reuse sound."""
+
+    #: fields whose segment content is known before ``activate`` runs
+    PREFETCHABLE = (frozenset(STACKED_SCHED_FIELDS)
+                    - {"bc_slot", "add_slot"}) | {"ts"}
+
+    def __init__(self, cw: ColumnWindow, caps, seg_len: int, rounds: int,
+                 put):
+        self.cw = cw
+        self.caps = caps
+        self.seg_len = seg_len
+        self.rounds = rounds
+        self.put = put
+        self.host: Dict[str, np.ndarray] = {}
+        self.dev: Dict[str, object] = {}
+        self.pending: Optional[tuple] = None
+
+    def _ts(self, lo: int, hi: int) -> np.ndarray:
+        ts = np.full(self.seg_len, -3, np.int32)
+        ts[: hi - lo] = np.arange(lo, hi, dtype=np.int32)
+        return ts
+
+    def _stage(self, key: str, host: np.ndarray):
+        old = self.host.get(key)
+        if old is None or not np.array_equal(old, host):
+            # copy: some sources (e.g. ``is_app``) alias ColumnWindow
+            # arrays that mutate in place between segments
+            self.host[key] = np.array(host, copy=True)
+            self.dev[key] = self.put(host)
+        return self.dev[key]
+
+    def _build(self, lo: int, hi: int, fields) -> Dict[str, object]:
+        sst = self.cw.stacked_schedule(lo, hi, self.caps, self.seg_len,
+                                       fields=fields)
+        out = {key: self._stage(key, v) for key, v in sst.items()}
+        if "ts" in fields:
+            out["ts"] = self._stage("ts", self._ts(lo, hi))
+        return out
+
+    def prefetch(self, lo: int) -> None:
+        """Stage segment ``[lo, lo + seg_len)``'s activation-independent
+        fields now, while the previous segment still executes.  The
+        prediction can miss (activation or a horizon sweep may shorten
+        the next segment); ``stage`` then rebuilds — per-field content
+        comparison keeps a mispredicted upload from ever being *used*.
+        """
+        hi = min(lo + self.seg_len, self.rounds)
+        if lo >= hi:
+            self.pending = None
+            return
+        self.pending = (lo, hi, self._build(lo, hi, self.PREFETCHABLE))
+
+    def stage(self, lo: int, hi: int) -> Dict[str, object]:
+        """Device arrays for segment ``[lo, hi)``: the prefetched fields
+        when the prediction held, everything else built and compared
+        now.  Always includes ``ts`` and ``is_app``."""
+        rest = frozenset(("bc_slot", "add_slot", "is_app"))
+        if self.pending is not None and self.pending[:2] == (lo, hi):
+            out = dict(self.pending[2])
+        else:
+            out = self._build(lo, hi, self.PREFETCHABLE)
+        out.update(self._build(lo, hi, rest))
+        self.pending = None
+        return out
+
+
 def execute_sharded(scn: VecScenario, window: int,
                     n_devices: Optional[int] = None,
                     horizon: Optional[int] = None, seg_len: int = 32,
                     snapshot_round: Optional[int] = None,
                     collect: str = "auto",
                     backend: str = "jax",
-                    scan: str = "auto") -> ShardedRunResult:
+                    scan: str = "auto",
+                    profile: bool = False) -> ShardedRunResult:
     """Run ``scn`` through a ``window``-column streaming buffer sharded
     over ``n_devices`` devices (``None`` = all visible).  Parameters
     match :func:`~repro.core.vecsim.stream.execute_windowed`; the
@@ -86,14 +181,19 @@ def execute_sharded(scn: VecScenario, window: int,
     ``shard_map``, DESIGN.md §2.6); ``"auto"`` resolves like the other
     engines (pallas only where the kernels compile).
 
-    ``scan`` picks the segment loop (DESIGN.md §2.7): ``"on"`` (and
-    ``"auto"``) runs each segment as one device-resident ``lax.scan``
-    over rounds — one host dispatch per segment, donated buffers,
-    double-buffered frontier exchange, and (for topology-quiescent
-    segments) the bit-packed fast body; ``"off"`` keeps the per-round
-    host-driven stepping.  The two modes are byte-identical
+    ``scan`` picks the segment loop (DESIGN.md §2.7/§2.8): ``"on"``
+    (and ``"auto"``) runs each segment as one device-resident
+    ``lax.scan`` over rounds — one host dispatch per segment with the
+    retirement reduce fused into it, donated state, segment-persistent
+    prefetched schedule buffers, and (for topology-quiescent segments)
+    the bit-packed fast body; ``"off"`` keeps the per-round host-driven
+    stepping.  The two modes are byte-identical
     (``tests/test_vecsim_scan.py``); ``"off"`` exists as the reference
     and escape hatch.
+
+    ``profile=True`` records a per-segment host/device timing breakdown
+    on the result (``seg_profile``), at the cost of a few clock reads
+    per segment — results are unaffected.
 
     This is the engine implementation behind ``repro.api.run`` with
     ``engine="sharded"``; prefer the front door in new code."""
@@ -119,7 +219,7 @@ def execute_sharded(scn: VecScenario, window: int,
     if collect not in ("full", "aggregate"):
         raise ValueError(f"unknown collect mode {collect!r}")
 
-    cw = ColumnWindow(scn, w)
+    cw = ColumnWindow(scn, w, horizon=horizon)
     row = NamedSharding(mesh, P("shard"))
     rep = NamedSharding(mesh, P())
     st0 = _padded_state(scn, w, n_pad)
@@ -143,16 +243,20 @@ def execute_sharded(scn: VecScenario, window: int,
     lat_sum = 0
     lat_cnt = 0
     snapshot: Optional[Dict[str, np.ndarray]] = None
+    seg_profile: Optional[List[dict]] = [] if profile else None
+    clock = time.perf_counter
 
     caps = cw.segment_caps(rounds, seg_len)
     runner = shard_span_runner(d, scn.k, pc, scn.always_gate,
                                scn.pong_delay, gating=gating,
                                backend=backend, scan=scan == "on")
     reduce_run, apply_run = shard_retire_kernels(d)
-    rounds_dev = np.int32(rounds)
+    rounds_dev = jax.device_put(np.int32(rounds), rep)
 
     if scan == "on":
         caps_r = cw.round_caps(rounds)
+        stager = _SegmentStager(cw, caps_r, seg_len, rounds,
+                                lambda a: jax.device_put(a, rep))
         # The fast body needs the gating machinery quiescent for the
         # whole run (gate/flush/ping state can straddle segments) and
         # the arrival clock to fit int16; per segment it additionally
@@ -162,6 +266,9 @@ def execute_sharded(scn: VecScenario, window: int,
         fast_allowed = (not (pc and gating)
                         and rounds + max_dl < INT16_LIMIT - 1)
         fast_tabs: Optional[tuple] = None
+        # inverse tables keyed by topology content: quiescent stretches
+        # between (or cycling through) churn events rebuild nothing
+        tab_cache: Dict[bytes, tuple] = {}
 
     def seg_topo_events(lo: int, hi: int):
         a0, a1 = np.searchsorted(cw.add_round_s, [lo, hi])
@@ -188,47 +295,21 @@ def execute_sharded(scn: VecScenario, window: int,
     def fast_runner_and_tables():
         nonlocal fast_tabs
         if fast_tabs is None:
-            sig, tabs = inverse_tables(topo_adj, topo_delay, topo_active)
-            fast_tabs = (sig, tuple(jax.device_put(tb, row)
-                                    for tb in tabs))
+            key = topology_digest(topo_adj, topo_delay, topo_active)
+            ent = tab_cache.get(key)
+            if ent is None:
+                sig, tabs = inverse_tables(topo_adj, topo_delay,
+                                           topo_active)
+                ent = (sig, tuple(jax.device_put(tb, row) for tb in tabs))
+                if len(tab_cache) >= 16:
+                    tab_cache.pop(next(iter(tab_cache)))
+                tab_cache[key] = ent
+            fast_tabs = ent
         sig, tabs = fast_tabs
         return shard_fast_span_runner(d, sig), tabs
 
     def host_state() -> Dict[str, np.ndarray]:
         return {key: np.asarray(v)[:n] for key, v in zip(STATE_KEYS, state)}
-
-    def run_segment(lo: int, hi: int) -> None:
-        nonlocal state
-        ts = np.full(seg_len, -3, np.int32)
-        ts[: hi - lo] = np.arange(lo, hi, dtype=np.int32)
-        ts_dev = jax.device_put(ts, rep)
-        if scan == "off":
-            padded = cw.padded_schedule(lo, hi, caps)
-            sched_dev = {f.name: jax.device_put(getattr(padded, f.name),
-                                                rep)
-                         for f in SlotSchedule.__dataclass_fields__
-                         .values()}
-            state, stats = runner(state, sched_dev, ts_dev)
-        else:
-            a0, a1, r0, r1 = seg_topo_events(lo, hi)
-            sst = cw.stacked_schedule(lo, hi, caps_r, seg_len)
-            if fast_allowed and a1 == a0 and r1 == r0:
-                frun, tabs = fast_runner_and_tables()
-                ia = np.packbits(
-                    np.concatenate([cw.slot_app,
-                                    np.zeros((-w) % 8, bool)]),
-                    bitorder="little")
-                sched_dev = {key: jax.device_put(sst[key], rep)
-                             for key in ("bc_round", "bc_origin",
-                                         "bc_slot", "cr_round", "cr_pid")}
-                state, stats = frun(state, tabs, jax.device_put(ia, rep),
-                                    sched_dev, ts_dev)
-            else:
-                sched_dev = {key: jax.device_put(v, rep)
-                             for key, v in sst.items()}
-                state, stats = runner(state, sched_dev, ts_dev)
-            apply_topo_events(lo, hi)
-        series[lo:hi] = np.asarray(stats, np.int64)[: hi - lo]
 
     def column_origins() -> np.ndarray:
         """Per-column broadcast origin (app columns only; -1 elsewhere),
@@ -238,6 +319,57 @@ def execute_sharded(scn: VecScenario, window: int,
         if app.any():
             origins[app] = scn.bcast_origin[cw.slot_msg[app]]
         return origins
+
+    def run_segment(lo: int, hi: int):
+        """Dispatch segment ``[lo, hi)``; returns the (device) stats
+        rows and, on the scanned path, the fused retirement aggregates.
+        """
+        nonlocal state
+        t0 = clock()
+        if scan == "off":
+            ts = np.full(seg_len, -3, np.int32)
+            ts[: hi - lo] = np.arange(lo, hi, dtype=np.int32)
+            ts_dev = jax.device_put(ts, rep)
+            padded = cw.padded_schedule(lo, hi, caps)
+            sched_dev = {f.name: jax.device_put(getattr(padded, f.name),
+                                                rep)
+                         for f in SlotSchedule.__dataclass_fields__
+                         .values()}
+            t1 = clock()
+            state, stats = runner(state, sched_dev, ts_dev)
+            red = None
+            fast = False
+        else:
+            a0, a1, r0, r1 = seg_topo_events(lo, hi)
+            origins_dev = jax.device_put(column_origins(), rep)
+            fast = fast_allowed and a1 == a0 and r1 == r0
+            if fast:
+                frun, tabs = fast_runner_and_tables()
+                sched_dev = stager.stage(lo, hi)
+                ia = np.packbits(
+                    np.concatenate([cw.slot_app,
+                                    np.zeros((-w) % 8, bool)]),
+                    bitorder="little")
+                ia_dev = stager._stage("__ia_pack", ia)
+                t1 = clock()
+                state, stats, red = frun(
+                    state, tabs, ia_dev,
+                    {key: sched_dev[key]
+                     for key in ("bc_round", "bc_origin", "bc_slot",
+                                 "cr_round", "cr_pid")},
+                    sched_dev["ts"], origins_dev, rounds_dev)
+            else:
+                sched_dev = stager.stage(lo, hi)
+                ts_dev = sched_dev.pop("ts")
+                t1 = clock()
+                state, stats, red = runner(state, sched_dev, ts_dev,
+                                           origins_dev, rounds_dev)
+            apply_topo_events(lo, hi)
+        if seg_profile is not None:
+            seg_profile.append(dict(lo=lo, hi=hi, fast=fast,
+                                    stage_s=t1 - t0,
+                                    dispatch_s=clock() - t1))
+        return stats, red
 
     def record_and_free(cols: np.ndarray, by_expiry: np.ndarray,
                         red, hung: np.ndarray) -> None:
@@ -266,12 +398,16 @@ def execute_sharded(scn: VecScenario, window: int,
         state = apply_run(state, retire, retire & cw.slot_app, hung)
         cw.free_cols(cols)
 
-    def retire(t_now: int) -> int:
+    def retire(t_now: int, red_dev=None) -> int:
+        """Retire columns from the fused segment aggregates (scanned
+        path) or a standalone ``reduce_run`` dispatch (per-round path
+        and the drain)."""
         live = cw.slot_msg >= 0
         if not live.any():
             return 0
-        red = tuple(np.asarray(x)
-                    for x in reduce_run(state, column_origins(), rounds_dev))
+        if red_dev is None:
+            red_dev = reduce_run(state, column_origins(), rounds_dev)
+        red = tuple(np.asarray(x) for x in red_dev)
         cnt, arrcnt, sumdel, alive, alivedel, blockcnt, refcnt, bdone = red
         full_del = alivedel == int(alive)
         blocked = (blockcnt > 0) & cw.slot_app
@@ -294,16 +430,29 @@ def execute_sharded(scn: VecScenario, window: int,
         if snapshot_round is not None and t <= snapshot_round:
             t_end = min(t_end, snapshot_round + 1)
         t_end = cw.activate(t, t_end)
-        run_segment(t, t_end)
+        stats_dev, red_dev = run_segment(t, t_end)
+        if scan == "on":
+            # stage segment k+1's activation-independent schedule fields
+            # while segment k executes on the mesh
+            stager.prefetch(t_end)
+        t0 = clock()
+        series[t:t_end] = np.asarray(stats_dev, np.int64)[: t_end - t]
         if snapshot_round is not None and t_end - 1 == snapshot_round:
             snapshot = host_state()
             snapshot["is_app"] = cw.slot_app.copy()
             snapshot["slot_msg"] = cw.slot_msg.copy()
-        retire(t_end)
+        t1 = clock()
+        retire(t_end, red_dev)
+        if seg_profile is not None:
+            seg_profile[-1]["block_s"] = t1 - t0
+            seg_profile[-1]["retire_s"] = clock() - t1
         t = t_end
 
     # Drain: whatever is still live keeps its end-of-run values, exactly
-    # like the windowed engine at t == rounds.
+    # like the windowed engine at t == rounds.  The final boundary sweep
+    # often freed every column (apply_run mutated the state after the
+    # fused reduce, so its aggregates cannot be reused); skip the
+    # standalone reduce dispatch entirely when nothing is live.
     live_cols = cw.live_cols()
     if len(live_cols):
         red = tuple(np.asarray(x)
@@ -317,4 +466,4 @@ def execute_sharded(scn: VecScenario, window: int,
         delivered=delivered_full, deliv_count=deliv_count,
         bcast_done=bcast_done, expired=expired, state=host_state(),
         snapshot=snapshot, peak_live=cw.peak_live, lat_sum=lat_sum,
-        lat_cnt=lat_cnt, n_devices=d, scan=scan)
+        lat_cnt=lat_cnt, n_devices=d, scan=scan, seg_profile=seg_profile)

@@ -14,11 +14,26 @@ as ``tests/test_engine.py``).
 from __future__ import annotations
 
 import functools
+import hashlib
 from typing import Optional
 
 import numpy as np
 
-__all__ = ["resolve_devices", "shard_mesh", "pad_rows", "inverse_tables"]
+__all__ = ["resolve_devices", "shard_mesh", "pad_rows", "inverse_tables",
+           "topology_digest"]
+
+
+def topology_digest(adj: np.ndarray, delay: np.ndarray,
+                    active: np.ndarray) -> bytes:
+    """Content key of a topology snapshot, for caching the (expensive)
+    :func:`inverse_tables` build across quiescent segments: churn that
+    cycles back to a previously seen link table — or runs whose only
+    events touch other state — hit the cache instead of re-sorting the
+    whole edge set."""
+    h = hashlib.blake2b(digest_size=16)
+    for a in (adj, delay, active):
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.digest()
 
 
 def resolve_devices(n_devices: Optional[int] = None) -> int:

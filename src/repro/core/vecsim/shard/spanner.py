@@ -110,13 +110,54 @@ def _shift(d: int):
     return [(i, (i + 1) % d) for i in range(d)]
 
 
+def _column_partials(state, origins, rounds, off):
+    """This shard's contribution to the per-column retirement
+    aggregates — the single definition both consumers trace through:
+    :func:`shard_retire_kernels`'s standalone ``reduce`` (the scan="off"
+    and drain paths) and the fused reduce at the tail of the scanned
+    span runners, so the device-resident retirement decisions cannot
+    drift from the reference reduction.  Returns the 8-tuple
+    ``(cnt, arrcnt, sumdel, alive, alivedel, blocked, ref, bdone)``
+    *before* the mesh ``psum``; callers psum it across shards.
+    """
+    import jax.numpy as jnp
+
+    (arr, delivered, adj, delay, active, gate, flush, ping,
+     crashed, ever_del) = state
+    n_loc, w = arr.shape
+    inf = jnp.int32(INF)
+    got = delivered >= 0
+    cnt = got.sum(axis=0).astype(jnp.int64)
+    arrcnt = (arr < rounds).sum(axis=0).astype(jnp.int64)
+    sumdel = jnp.where(got, delivered, 0).sum(axis=0).astype(jnp.int64)
+    alive = (~crashed).sum().astype(jnp.int64)
+    alivedel = (got & ~crashed[:, None]).sum(axis=0).astype(jnp.int64)
+    gated = (gate >= 0) & active & ~crashed[:, None]
+    min_gate = jnp.where(gated, gate, inf).min(axis=1)
+    blocked = ((got & (delivered >= min_gate[:, None]))
+               .sum(axis=0).astype(jnp.int64))
+    pidx = jnp.where((ping >= 0) & ~crashed[:, None], ping,
+                     w).reshape(-1)
+    ref = jnp.zeros(w, jnp.int64).at[pidx].add(1, mode="drop")
+    ol = origins - off
+    owned = (ol >= 0) & (ol < n_loc) & (origins >= 0)
+    ocl = jnp.clip(ol, 0, n_loc - 1)
+    bdone = jnp.where(owned, got[ocl, jnp.arange(w)],
+                      False).astype(jnp.int64)
+    return (cnt, arrcnt, sumdel, alive, alivedel, blocked, ref, bdone)
+
+
 @functools.lru_cache(maxsize=None)
 def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
                       pong_delay: int, gating: bool = True,
                       backend: str = "jax", scan: bool = False):
-    """Jitted ``(state, sched, ts) -> (state, stats)`` sharded span
-    runner; same contract as :func:`~repro.core.vecsim.sim.
-    jax_span_runner` with state as row-block-sharded global arrays.
+    """Jitted sharded span runner; per-round (``scan=False``) it is
+    ``(state, sched, ts) -> (state, stats)`` — the contract of
+    :func:`~repro.core.vecsim.sim.jax_span_runner` with state as
+    row-block-sharded global arrays.  Scanned (``scan=True``) it takes
+    ``(state, sched, ts, origins, rounds)`` and additionally returns the
+    fused per-column retirement aggregates (``_column_partials``,
+    psum'd), so a segment is one dispatch with no standalone reduce.
     Negative rounds in ``ts`` are padding and leave the state untouched.
     One compilation per (mesh, shape) signature, cached.
 
@@ -363,7 +404,7 @@ def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
                 lambda c: (c, jnp.zeros(len(SERIES_FIELDS), jnp.int64)),
                 carry)
 
-        def span(state, sched, ts):
+        def span(state, sched, ts, origins, rounds):
             is_app = sched["is_app"]
             events = {key: v for key, v in sched.items() if key != "is_app"}
             pending0 = jnp.full_like(state[0], inf)
@@ -379,7 +420,16 @@ def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
             # residual fold: the last round's in-flight frontier (padding
             # rounds skip real_step, so pending survives to here intact)
             state = (jnp.minimum(state[0], pending),) + tuple(state[1:])
-            return state, stats
+            # fused retirement reduce (DESIGN.md §2.8): the per-column
+            # aggregates the driver's retire() consumes come out of the
+            # same dispatch as the segment itself, while the planes are
+            # still hot — shared definition with shard_retire_kernels
+            me = jax.lax.axis_index("shard")
+            off = (me * state[0].shape[0]).astype(jnp.int32)
+            red = tuple(jax.lax.psum(x, "shard")
+                        for x in _column_partials(state, origins,
+                                                  rounds, off))
+            return state, stats, red
     else:
         def span(state, sched, ts):
             return jax.lax.scan(lambda c, t: step(sched, c, t), state, ts)
@@ -389,19 +439,23 @@ def shard_span_runner(n_devices: int, k: int, pc: bool, always_gate: bool,
     # replicated — it comes out of an explicit psum on every branch.
     _run = jax.jit(shard_map(
         span, mesh=mesh,
-        in_specs=(P("shard"), P(), P()),
-        out_specs=(P("shard"), P()),
+        in_specs=((P("shard"), P(), P(), P(), P()) if scan
+                  else (P("shard"), P(), P())),
+        out_specs=((P("shard"), P(), P()) if scan
+                   else (P("shard"), P())),
         check_rep=False),
         # scanned segments own the live buffers for many rounds: donate
         # them so the carry updates in place instead of doubling the
         # peak (N, W) footprint
         donate_argnums=(0,) if scan else ())
 
-    def run(state, sched, ts):
+    def run(state, sched, ts, origins=None, rounds=None):
         # x64 so the int64 stats accumulators (and their psum) are
         # honored; every state/schedule array carries an explicit dtype,
         # so nothing else widens — byte-parity with the windowed series.
         with enable_x64():
+            if scan:
+                return _run(state, sched, ts, origins, rounds)
             return _run(state, sched, ts)
 
     run.jitted = _run
@@ -415,9 +469,10 @@ def shard_fast_span_runner(n_devices: int, classes_sig: tuple):
     anywhere in the run (the driver checks both before selecting it;
     crashes and broadcasts are fine — they ride stacked scan inputs).
 
-    Same ``(state, ...) -> (state, stats)`` byte-contract as
-    :func:`shard_span_runner`, reached very differently (the N=1M hot
-    path, DESIGN.md §2.7):
+    Same ``(state, ...) -> (state, stats, red)`` byte-contract as the
+    scanned :func:`shard_span_runner` — including the fused retirement
+    aggregates, computed on the widened int32 exit state — reached very
+    differently (the N=1M hot path, DESIGN.md §2.7–2.8):
 
       * ``arr``/``delivered`` live in **int16** for the duration of the
         segment (entry/exit converts; ``INT16_LIMIT`` stands in for
@@ -458,7 +513,7 @@ def shard_fast_span_runner(n_devices: int, classes_sig: tuple):
     perm = _shift(d)
     classes = tuple(classes_sig)
 
-    def span(state, tabs, ia_pack, sched, ts):
+    def span(state, tabs, ia_pack, sched, ts, origins, rounds):
         (arr, delivered, adj, delay, active, gate, flush, ping,
          crashed, ever_del) = state
         n_loc, width = arr.shape
@@ -559,19 +614,24 @@ def shard_fast_span_runner(n_devices: int, classes_sig: tuple):
         stats = jax.lax.psum(stats, "shard")
         arr = jnp.where(arr16 >= lim16, inf, arr16.astype(jnp.int32))
         delivered = del16.astype(jnp.int32)
-        return (arr, delivered, adj, delay, active, gate, flush, ping,
-                crashed, ever_del), stats
+        state = (arr, delivered, adj, delay, active, gate, flush, ping,
+                 crashed, ever_del)
+        # fused retirement reduce on the widened exit state — same
+        # shared reduction as the generic scanned body (DESIGN.md §2.8)
+        red = tuple(jax.lax.psum(x, "shard")
+                    for x in _column_partials(state, origins, rounds, off))
+        return state, stats, red
 
     _run = jax.jit(shard_map(
         span, mesh=mesh,
-        in_specs=(P("shard"), P("shard"), P(), P(), P()),
-        out_specs=(P("shard"), P()),
+        in_specs=(P("shard"), P("shard"), P(), P(), P(), P(), P()),
+        out_specs=(P("shard"), P(), P()),
         check_rep=False),
         donate_argnums=(0,))
 
-    def run(state, tabs, ia_pack, sched, ts):
+    def run(state, tabs, ia_pack, sched, ts, origins, rounds):
         with enable_x64():
-            return _run(state, tabs, ia_pack, sched, ts)
+            return _run(state, tabs, ia_pack, sched, ts, origins, rounds)
 
     run.jitted = _run
     return run
@@ -597,30 +657,10 @@ def shard_retire_kernels(n_devices: int):
     inf = jnp.int32(INF)
 
     def reduce_fn(state, origins, rounds):
-        (arr, delivered, adj, delay, active, gate, flush, ping,
-         crashed, ever_del) = state
-        n_loc, w = arr.shape
+        n_loc = state[0].shape[0]
         me = jax.lax.axis_index("shard")
         off = (me * n_loc).astype(jnp.int32)
-        got = delivered >= 0
-        cnt = got.sum(axis=0).astype(jnp.int64)
-        arrcnt = (arr < rounds).sum(axis=0).astype(jnp.int64)
-        sumdel = jnp.where(got, delivered, 0).sum(axis=0).astype(jnp.int64)
-        alive = (~crashed).sum().astype(jnp.int64)
-        alivedel = (got & ~crashed[:, None]).sum(axis=0).astype(jnp.int64)
-        gated = (gate >= 0) & active & ~crashed[:, None]
-        min_gate = jnp.where(gated, gate, inf).min(axis=1)
-        blocked = ((got & (delivered >= min_gate[:, None]))
-                   .sum(axis=0).astype(jnp.int64))
-        pidx = jnp.where((ping >= 0) & ~crashed[:, None], ping,
-                         w).reshape(-1)
-        ref = jnp.zeros(w, jnp.int64).at[pidx].add(1, mode="drop")
-        ol = origins - off
-        owned = (ol >= 0) & (ol < n_loc) & (origins >= 0)
-        ocl = jnp.clip(ol, 0, n_loc - 1)
-        bdone = jnp.where(owned, got[ocl, jnp.arange(w)],
-                          False).astype(jnp.int64)
-        out = (cnt, arrcnt, sumdel, alive, alivedel, blocked, ref, bdone)
+        out = _column_partials(state, origins, rounds, off)
         return tuple(jax.lax.psum(x, "shard") for x in out)
 
     _reduce = jax.jit(shard_map(

@@ -102,6 +102,20 @@ STACKED_SCHED_FIELDS = tuple(
     name for name in SlotSchedule.__dataclass_fields__ if name != "is_app")
 
 
+def sched_sentinel(name: str):
+    """Padding sentinel of a :class:`SlotSchedule` event field — the one
+    place the convention lives, shared by the per-round padding
+    (``ColumnWindow.padded_schedule``) and the vectorized stacker
+    (``ColumnWindow.stacked_schedule``) so the two schedule paths cannot
+    drift.  Round fields pad with ``-2`` (never matches a real round, so
+    a padded entry is dead in every body); ``add_delay`` pads with ``1``
+    (a valid delay that is never read behind a sentinel round); every
+    other field pads with ``0``."""
+    if name.endswith("_round"):
+        return -2
+    return 1 if name == "add_delay" else 0
+
+
 def stack_schedules(schedules) -> Dict[str, np.ndarray]:
     """Stack per-round padded :class:`SlotSchedule`\\ s along a leading
     round axis for device-side ``lax.scan`` consumption.

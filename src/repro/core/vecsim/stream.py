@@ -50,15 +50,26 @@ import numpy as np
 
 from ..types import LegacyEntryPointWarning, NetStats
 from .scenario import INF, VecScenario
-from .sim import (SERIES_FIELDS, SlotSchedule, init_topo_state, np_span,
-                  resolve_backend, stack_schedules, stats_from_series)
+from .sim import (SERIES_FIELDS, STACKED_SCHED_FIELDS, SlotSchedule,
+                  init_topo_state, np_span, resolve_backend, sched_sentinel,
+                  stats_from_series)
 
 __all__ = ["WindowedRunResult", "WindowOverflowError", "ColumnWindow",
            "run_vec_windowed", "execute_windowed"]
 
 
 class WindowOverflowError(RuntimeError):
-    """The live-column buffer filled up and nothing could retire."""
+    """The live-column buffer filled up and nothing could retire.
+
+    ``round`` carries the first round whose due event found no free
+    column — with the round-granular horizon sweeps in
+    :meth:`ColumnWindow.activate` it is the same round for every
+    ``seg_len`` choice (the differential fuzz suite asserts exactly
+    that)."""
+
+    def __init__(self, message: str, round: Optional[int] = None):
+        super().__init__(message)
+        self.round = round
 
 
 @dataclass
@@ -147,11 +158,23 @@ class ColumnWindow:
     (``vecsim.shard.driver``) — go through this one class, so they
     activate, overflow and peak in byte-identical ways; only the span
     execution and the retirement *mechanics* differ between them.
+
+    ``horizon`` mirrors the drivers' force-expiry knob: when set,
+    :meth:`activate` additionally caps every segment at the earliest
+    round a live column comes due for expiry (``birth + horizon + 1``),
+    so the boundary retirement sweep lands *exactly* on the expiry
+    round.  That makes expiry — and therefore overflow timing — a
+    round-granular property of the scenario rather than an artifact of
+    where the ``seg_len`` grid happens to fall; without it a longer
+    segment kept overdue columns alive to the next boundary and could
+    overflow a window a shorter segment squeezed through.
     """
 
-    def __init__(self, scn: VecScenario, window: int):
+    def __init__(self, scn: VecScenario, window: int,
+                 horizon: Optional[int] = None):
         self.scn = scn
         self.w = int(window)
+        self.horizon = None if horizon is None else int(horizon)
         m_app = scn.m_app
         # Merged activation stream: broadcasts then additions, round-
         # sorted (stable in kind then index for same-round ties).
@@ -231,23 +254,11 @@ class ColumnWindow:
         (-2 never matches a real round), shared by both jitted drivers
         so the padding conventions cannot drift apart."""
         sched = self.seg_schedule(lo, hi)
-        cap_bc, cap_add, cap_rm, cap_cr = caps
-        return SlotSchedule(
-            is_app=sched.is_app,
-            bc_round=_pad(sched.bc_round, cap_bc, -2),
-            bc_origin=_pad(sched.bc_origin, cap_bc, 0),
-            bc_slot=_pad(sched.bc_slot, cap_bc, 0),
-            add_round=_pad(sched.add_round, cap_add, -2),
-            add_p=_pad(sched.add_p, cap_add, 0),
-            add_k=_pad(sched.add_k, cap_add, 0),
-            add_q=_pad(sched.add_q, cap_add, 0),
-            add_delay=_pad(sched.add_delay, cap_add, 1),
-            add_slot=_pad(sched.add_slot, cap_add, 0),
-            rm_round=_pad(sched.rm_round, cap_rm, -2),
-            rm_p=_pad(sched.rm_p, cap_rm, 0),
-            rm_k=_pad(sched.rm_k, cap_rm, 0),
-            cr_round=_pad(sched.cr_round, cap_cr, -2),
-            cr_pid=_pad(sched.cr_pid, cap_cr, 0))
+        cap = dict(zip(("bc", "add", "rm", "cr"), caps))
+        return SlotSchedule(is_app=sched.is_app, **{
+            name: _pad(getattr(sched, name), cap[name.split("_", 1)[0]],
+                       sched_sentinel(name))
+            for name in STACKED_SCHED_FIELDS})
 
     def round_caps(self, total_rounds: int) -> Tuple[int, int, int, int]:
         """Per-*round* event-count caps (seg_len=1 segment caps): the
@@ -258,26 +269,78 @@ class ColumnWindow:
 
     def stacked_schedule(self, lo: int, hi: int,
                          caps: Tuple[int, int, int, int],
-                         pad_rounds: int) -> Dict[str, np.ndarray]:
+                         pad_rounds: int,
+                         fields: Optional[frozenset] = None,
+                         ) -> Dict[str, np.ndarray]:
         """The ``[lo, hi)`` segment schedule as stacked per-round scan
         inputs: each event field becomes a ``(pad_rounds, cap)`` array
         whose row ``i`` is the round ``lo + i`` schedule padded to the
         per-round ``caps`` (:meth:`round_caps`).  Rows past ``hi - lo``
         are all-sentinel (round -2 never matches), mirroring the ``ts``
         padding convention, so a ragged final segment scans the same
-        trace as a full one.  ``is_app`` rides along unstacked."""
-        rows = [self.padded_schedule(lo + i, lo + i + 1, caps)
-                for i in range(hi - lo)]
-        if pad_rounds > hi - lo:
-            rows.extend([self.padded_schedule(hi, hi, caps)]
-                        * (pad_rounds - (hi - lo)))
-        return stack_schedules(rows)
+        trace as a full one.  ``is_app`` rides along unstacked.
+
+        Built directly — one searchsorted per event family and one
+        scatter per field into sentinel-filled ``(pad_rounds, cap)``
+        buffers — instead of padding and stacking ``hi - lo`` per-round
+        schedules, so staging a segment costs O(events), not
+        O(seg_len · fields).  ``fields`` optionally restricts the output
+        (the sharded driver prefetches the activation-independent
+        fields of segment k+1 while segment k executes; ``bc_slot``,
+        ``add_slot`` and ``is_app`` depend on column assignment and can
+        only be staged after ``activate``)."""
+        scn = self.scn
+        out: Dict[str, np.ndarray] = {}
+
+        def fill(rs, cap, cols):
+            names = [n for n in cols
+                     if fields is None or n in fields]
+            if not names:
+                return
+            i0, i1 = np.searchsorted(rs, [lo, hi])
+            rnd = rs[i0:i1]
+            row = rnd - lo
+            # position within the round group = index minus the index
+            # of the first event sharing the round (rs is sorted)
+            pos = (np.arange(i0, i1)
+                   - np.searchsorted(rs, rnd, side="left"))
+            for name in names:
+                src = cols[name]() if callable(cols[name]) else cols[name]
+                buf = np.full((pad_rounds, cap), sched_sentinel(name),
+                              src.dtype)
+                buf[row, pos] = src[i0:i1]
+                out[name] = buf
+
+        fill(scn.bcast_round, caps[0], {
+            "bc_round": scn.bcast_round, "bc_origin": scn.bcast_origin,
+            "bc_slot": lambda: self.bc_live_slot})
+        fill(self.add_round_s, caps[1], {
+            "add_round": self.add_round_s, "add_p": self.add_p_s,
+            "add_k": self.add_k_s, "add_q": self.add_q_s,
+            "add_delay": self.add_delay_s,
+            "add_slot": lambda: self.add_live_slot[self.add_ord]})
+        fill(self.rm_round_s, caps[2], {
+            "rm_round": self.rm_round_s, "rm_p": self.rm_p_s,
+            "rm_k": self.rm_k_s})
+        fill(self.cr_round_s, caps[3], {
+            "cr_round": self.cr_round_s, "cr_pid": self.cr_pid_s})
+        if fields is None or "is_app" in fields:
+            out["is_app"] = self.slot_app
+        return out
 
     def activate(self, t: int, t_end: int) -> int:
         """Assign free columns to events due before ``t_end``; returns
         the (possibly shortened) segment end.  Raises
         :class:`WindowOverflowError` when the buffer is already full at
         ``t`` with an event due.  Also tracks the live high-water mark.
+
+        When a horizon is set the returned segment end is additionally
+        capped at the earliest expiry-due round of any live column
+        (``min birth + horizon + 1``), so the boundary retirement sweep
+        fires force-expiries at exactly their due round — expiry (and
+        with it overflow) timing is then identical for every ``seg_len``
+        choice, which is what lets the fuzz suite assert full
+        seg_len-invariance instead of skipping overflowing draws.
         """
         m_app = self.scn.m_app
         if self.next_ev < self.n_ev and self.ev_round[self.next_ev] < t_end:
@@ -307,10 +370,17 @@ class ColumnWindow:
                         f"at round {t} "
                         f"({int((self.slot_msg >= 0).sum())} live, "
                         f"next event needs a free column); raise the "
-                        f"window or set a horizon")
+                        f"window or set a horizon", round=t)
                 t_end = blocked_at
-        self.peak_live = max(self.peak_live,
-                             int((self.slot_msg >= 0).sum()))
+        live = self.slot_msg >= 0
+        if self.horizon is not None and live.any():
+            # land the next boundary exactly on the earliest expiry-due
+            # round (always > t: anything due at t expired in the sweep
+            # that closed the previous segment)
+            expiry_due = int(self.slot_birth[live].min()) + self.horizon + 1
+            if expiry_due < t_end:
+                t_end = expiry_due
+        self.peak_live = max(self.peak_live, int(live.sum()))
         return t_end
 
     def live_cols(self) -> np.ndarray:
@@ -351,7 +421,7 @@ def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
     if collect not in ("full", "aggregate"):
         raise ValueError(f"unknown collect mode {collect!r}")
 
-    cw = ColumnWindow(scn, w)
+    cw = ColumnWindow(scn, w, horizon=horizon)
     st = init_topo_state(scn, w)
     slot_msg, slot_birth, slot_app = cw.slot_msg, cw.slot_birth, cw.slot_app
 
@@ -395,23 +465,40 @@ def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
         st.update(state_to_host(state))
         series[lo:hi] = np.asarray(stats, np.int64)[: hi - lo]
 
-    def record_and_free(cols: np.ndarray, by_expiry: np.ndarray) -> None:
-        """Fold retired columns into the aggregates and recycle them."""
+    def record_and_free(cols: np.ndarray, by_expiry: np.ndarray,
+                        red=None) -> None:
+        """Fold retired columns into the aggregates and recycle them.
+        When the pallas retirement sweep already reduced the planes
+        (``red`` = the :func:`kernels.retire_reduce` columns), the
+        delivery counts, first receipts and latency sums come from
+        those five scalars per column instead of fresh plane reads."""
         nonlocal first_receipts, lat_sum, lat_cnt
         if not len(cols):
             return
         ids = slot_msg[cols]
         d = st["delivered"][:, cols]
-        deliv_count[ids] = (d >= 0).sum(axis=0)
-        expired[ids] |= by_expiry
-        first_receipts += int((st["arr"][:, cols] < rounds).sum())
         app = slot_app[cols]
+        if red is None:
+            deliv_count[ids] = (d >= 0).sum(axis=0)
+            first_receipts += int((st["arr"][:, cols] < rounds).sum())
+            if app.any():
+                da = d[:, app]
+                got = da >= 0
+                lat_sum += int(
+                    (da - slot_birth[cols][app][None, :])[got].sum())
+                lat_cnt += int(got.sum())
+        else:
+            cnt, arrcnt, sumdel = (x.astype(np.int64) for x in red)
+            deliv_count[ids] = cnt[cols]
+            first_receipts += int(arrcnt[cols].sum())
+            if app.any():
+                acols = cols[app]
+                births = slot_birth[acols].astype(np.int64)
+                lat_sum += int((sumdel[acols] - cnt[acols] * births).sum())
+                lat_cnt += int(cnt[acols].sum())
+        expired[ids] |= by_expiry
         if app.any():
-            da = d[:, app]
-            got = da >= 0
-            st["ever_del"] |= got.any(axis=1)
-            lat_sum += int((da - slot_birth[cols][app][None, :])[got].sum())
-            lat_cnt += int(got.sum())
+            st["ever_del"] |= (d[:, app] >= 0).any(axis=1)
             aidx = ids[app]
             bcast_done[aidx] = (
                 st["delivered"][scn.bcast_origin[aidx], cols[app]] >= 0)
@@ -431,16 +518,22 @@ def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
         flush, crashed, active = st["flush"], st["crashed"], st["active"]
         alive = ~crashed
         gated = (gate >= 0) & active & ~crashed[:, None]
+        red = None
         if backend == "pallas":
-            # The retirement-scan kernel folds the per-column reductions
-            # (total / alive-row delivery counts, gate-window blockers)
-            # into one pass over the live planes; the retirement
-            # *decisions* stay host-side, identically to the numpy path.
+            # The retirement-reduce kernel folds the per-column
+            # reductions — total / alive-row delivery counts,
+            # gate-window blockers, plus the record-side first-receipt
+            # counts and delivered-round sums — into one pass over the
+            # live planes; the retirement *decisions* stay host-side,
+            # identically to the numpy path, and ``record_and_free``
+            # consumes the same reduction instead of re-reading planes.
             from . import kernels as kx
             min_gate = np.where(gated, gate, INF).min(axis=1)
-            cnt, alivedel, blockcnt = (
+            cnt, alivedel, blockcnt, arrcnt, sumdel = (
                 np.asarray(x)
-                for x in kx.retire_scan_jit()(delivered, crashed, min_gate))
+                for x in kx.retire_reduce_jit()(st["arr"], delivered,
+                                                crashed, min_gate, rounds))
+            red = (cnt, arrcnt, sumdel)
             full_del = alivedel == int(alive.sum())
             blocked = (blockcnt > 0) & slot_app
         else:
@@ -473,7 +566,7 @@ def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
                 gate[sel], flush[sel], ping[sel] = -1, INF, -1
             done |= by_exp
         cols = np.nonzero(done)[0]
-        record_and_free(cols, by_exp[cols])
+        record_and_free(cols, by_exp[cols], red)
         return len(cols)
 
     t = 0

@@ -196,20 +196,21 @@ def test_fuzz_sharded_equals_windowed(spec, shards, frac, seg_len, backend,
            st.integers(min_value=0, max_value=10 ** 6),
            st.integers(min_value=12, max_value=32)),
        frac=st.sampled_from([1.0, 0.5]),
+       horizon=st.sampled_from([None, 6, 12]),
        seg_a=st.sampled_from([1, 5, 16]),
        seg_b=st.sampled_from([3, 8, 64]))
 def test_fuzz_scan_results_independent_of_segment_length(spec, frac,
+                                                         horizon,
                                                          seg_a, seg_b):
     """Segment length is an execution detail of the scanned path, never
-    a semantic one: any two overflow-free seg_len choices give
-    byte-identical deliveries, series, stats and final state.  This is
-    the property that licenses the driver's per-segment fast-body
-    selection — a segment boundary can move without moving any
-    delivery.  (Overflow itself *may* depend on seg_len — retirement
-    only recycles columns at segment boundaries, so a longer segment
-    can overflow a window a shorter one squeezes through — which is why
-    overflowing draws are skipped, same as the windowed twin of this
-    test, rather than asserted equal.)"""
+    a semantic one — *including* failure: any two seg_len choices give
+    byte-identical deliveries, series, stats and final state, and when
+    a draw overflows its window, every seg_len overflows at the same
+    round (``activate`` stops segments just before a blocked event and
+    caps them at horizon-expiry rounds, so retirement opportunities do
+    not depend on where the boundaries fall).  This is the property
+    that licenses the driver's per-segment fast-body selection — a
+    segment boundary can move without moving any delivery."""
     from repro.core.vecsim.shard import execute_sharded
     scn = _build(spec)
     w = max(4, int(scn.m_total * frac))
@@ -218,16 +219,20 @@ def test_fuzz_scan_results_independent_of_segment_length(spec, frac,
         try:
             results.append(execute_sharded(scn, w, n_devices=1,
                                            collect="full", seg_len=seg,
-                                           backend="jax", scan="on"))
-        except WindowOverflowError:
-            results.append(None)
+                                           backend="jax", scan="on",
+                                           horizon=horizon))
+        except WindowOverflowError as e:
+            results.append(e.round)
     a, b = results
-    if a is None or b is None:
+    if isinstance(a, int) or isinstance(b, int):
         assert frac < 1.0, "a full-width window can never overflow"
+        assert a == b, f"overflow round depends on seg_len: {a} != {b}"
         return
     np.testing.assert_array_equal(a.delivered, b.delivered)
     np.testing.assert_array_equal(a.series, b.series)
     assert a.stats == b.stats
+    assert a.expired.tolist() == b.expired.tolist()
+    assert (a.lat_sum, a.lat_cnt) == (b.lat_sum, b.lat_cnt)
     for key in a.state:
         np.testing.assert_array_equal(a.state[key], b.state[key],
                                       err_msg=key)

@@ -98,6 +98,19 @@ def test_kernels_match_refs(n, w, k, bw):
                        block_w=bw),
         kref.retire_scan_ref(iv["delivered"], iv["crashed"],
                              iv["min_gate"]))
+    rounds = np.int32(22)
+    _eq(kx.retire_reduce(iv["arr"], iv["delivered"], iv["crashed"],
+                         iv["min_gate"], rounds, block_w=bw),
+        kref.retire_reduce_ref(iv["arr"], iv["delivered"], iv["crashed"],
+                               iv["min_gate"], rounds))
+    # the record-side outputs against plain numpy, not just the lax ref
+    _, _, _, arrcnt, sumdel = (np.asarray(x) for x in kx.retire_reduce(
+        iv["arr"], iv["delivered"], iv["crashed"], iv["min_gate"], rounds,
+        block_w=bw))
+    np.testing.assert_array_equal(arrcnt, (iv["arr"] < rounds).sum(axis=0))
+    np.testing.assert_array_equal(
+        sumdel, np.where(iv["delivered"] >= 0, iv["delivered"], 0)
+        .sum(axis=0))
     for gating in (True, False):
         _eq(kx.slot_frontier(iv["delivered"], iv["gate"][:, 0],
                              iv["delay"][:, 0], iv["do"][:, 0],
@@ -136,6 +149,9 @@ def test_kernels_on_all_retired_segment():
     cnt, alivedel, blocked = (np.asarray(x) for x in kx.retire_scan(
         delivered, crashed, np.full(n, INF, np.int32)))
     assert cnt.sum() == 0 and alivedel.sum() == 0 and blocked.sum() == 0
+    red = tuple(np.asarray(x) for x in kx.retire_reduce(
+        arr, delivered, crashed, np.full(n, INF, np.int32), np.int32(9)))
+    assert all(x.sum() == 0 for x in red)
 
 
 # --------------------------------------------------------------------- #

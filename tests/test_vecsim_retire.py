@@ -1,0 +1,290 @@
+"""Device-side retirement decision units (DESIGN.md §2.8).
+
+The sharded engine decides column retirement from an 8-tuple of
+per-column aggregates reduced on device (``spanner._column_partials``,
+psum'd across the mesh) — consumed either from the standalone
+``shard_retire_kernels`` reduce (scan="off", drain) or fused into the
+tail of the scanned span runners (scan="on").  These tests pin that
+reduction and the decisions derived from it:
+
+  * the device reduce against an independent host numpy reference, on
+    random states and on handcrafted single-rule states;
+  * each retirement rule — full-delivery (alive rows only), dead
+    column, blocked-app gating, ping refcounts, horizon expiry and the
+    hung-gate escape hatch — producing exactly the expected decision
+    mask;
+  * fused-vs-standalone: the aggregates at the tail of a scanned
+    segment equal a standalone reduce of the post-segment state, at
+    segment boundaries and mid-segment (ragged segments), on real
+    scenario runs;
+  * all of the above across 1/2/4 devices (multi-device in child
+    interpreters — the forced host-device flag must precede jax init).
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip(
+    "jax", reason="the sharded engine needs jax (pip install -r "
+    "requirements.txt)")
+
+from repro.core.vecsim.scenario import INF  # noqa: E402
+from repro.core.vecsim.shard.mesh import pad_rows, shard_mesh  # noqa: E402
+from repro.core.vecsim.shard.spanner import (STATE_KEYS,  # noqa: E402
+                                             shard_retire_kernels,
+                                             shard_span_runner)
+from vecsim_cases import build  # noqa: E402
+
+
+# --------------------------------------------------------------------- #
+# host numpy reference of the 8 per-column aggregates
+# --------------------------------------------------------------------- #
+def reduce_reference(st, origins, rounds):
+    """(cnt, arrcnt, sumdel, alive, alivedel, blocked, ref, bdone) from
+    plain numpy over the full (padded) host state — independently
+    written against the retirement rules, not the device code."""
+    arr, delivered = st["arr"], st["delivered"]
+    crashed, gate, active, ping = (st["crashed"], st["gate"],
+                                   st["active"], st["ping"])
+    w = arr.shape[1]
+    got = delivered >= 0
+    cnt = got.sum(axis=0).astype(np.int64)
+    arrcnt = (arr < rounds).sum(axis=0).astype(np.int64)
+    sumdel = np.where(got, delivered, 0).sum(axis=0).astype(np.int64)
+    alive = np.int64((~crashed).sum())
+    alivedel = (got & ~crashed[:, None]).sum(axis=0).astype(np.int64)
+    gated = (gate >= 0) & active & ~crashed[:, None]
+    min_gate = np.where(gated, gate, INF).min(axis=1)
+    blocked = ((got & (delivered >= min_gate[:, None]))
+               .sum(axis=0).astype(np.int64))
+    ref = np.zeros(w, np.int64)
+    pv = ping[(ping >= 0) & ~crashed[:, None]]
+    np.add.at(ref, pv, 1)
+    bdone = np.zeros(w, np.int64)
+    ok = origins >= 0
+    bdone[ok] = got[origins[ok], np.nonzero(ok)[0]]
+    return (cnt, arrcnt, sumdel, alive, alivedel, blocked, ref, bdone)
+
+
+def decide(red, slot_app, slot_birth, t_now, horizon=None):
+    """The driver's retirement decision formula, verbatim, from the
+    reduced aggregates: returns (done, by_exp, hung) masks."""
+    cnt, _, _, alive, alivedel, blockcnt, refcnt, _ = red
+    w = len(cnt)
+    live = slot_birth >= 0  # tests encode "free" as birth -1
+    full_del = alivedel == int(alive)
+    blocked = (blockcnt > 0) & slot_app
+    ref = refcnt > 0
+    dead = (cnt == 0) & (slot_birth < t_now)
+    done = live & ~ref & ((full_del & ~blocked) | dead)
+    by_exp = np.zeros(w, bool)
+    hung = np.zeros(w, bool)
+    if horizon is not None:
+        by_exp = live & ~done & (t_now - slot_birth > horizon)
+        hung = by_exp & ref
+        done = done | by_exp
+    return done, by_exp, hung
+
+
+def _random_state(rng, n, w, k):
+    return dict(
+        arr=np.where(rng.random((n, w)) < 0.4,
+                     rng.integers(0, 25, (n, w)), INF).astype(np.int32),
+        delivered=np.where(rng.random((n, w)) < 0.4,
+                           rng.integers(0, 20, (n, w)), -1).astype(np.int32),
+        adj=rng.integers(0, n, (n, k)).astype(np.int32),
+        delay=rng.integers(1, 4, (n, k)).astype(np.int32),
+        active=rng.random((n, k)) < 0.8,
+        gate=np.where(rng.random((n, k)) < 0.3,
+                      rng.integers(0, 15, (n, k)), -1).astype(np.int32),
+        flush=np.full((n, k), INF, np.int32),
+        ping=np.where(rng.random((n, k)) < 0.25,
+                      rng.integers(0, w, (n, k)), -1).astype(np.int32),
+        crashed=rng.random(n) < 0.2,
+        ever_del=np.zeros(n, bool),
+    )
+
+
+def _device_state(st, d):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    row = NamedSharding(shard_mesh(d), P("shard"))
+    return tuple(jax.device_put(st[key], row) for key in STATE_KEYS)
+
+
+def run_reduce_matches_reference(n_devices, seeds=(0, 1, 2)):
+    """Standalone device reduce == numpy reference on random states."""
+    reduce_run, _ = shard_retire_kernels(n_devices)
+    for seed in seeds:
+        rng = np.random.default_rng(seed)
+        n, w, k = 8 * n_devices, 7, 3
+        st = _random_state(rng, n, w, k)
+        origins = np.where(rng.random(w) < 0.6,
+                           rng.integers(0, n, w), -1).astype(np.int32)
+        rounds = np.int32(25)
+        got = tuple(np.asarray(x) for x in
+                    reduce_run(_device_state(st, n_devices), origins,
+                               rounds))
+        want = reduce_reference(st, origins, rounds)
+        for g, wnt, name in zip(got, want,
+                                ("cnt", "arrcnt", "sumdel", "alive",
+                                 "alivedel", "blocked", "ref", "bdone")):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(wnt),
+                                          err_msg=f"seed={seed} {name}")
+
+
+def run_fused_vs_standalone(n_devices, case=("crash", 5, 32),
+                            segments=((0, 3), (3, 11), (11, 16))):
+    """Real-scenario segments through the scanned runner: the fused
+    aggregates at the segment tail must equal a standalone reduce of
+    the post-segment state AND the numpy reference on the fetched host
+    state.  Segment spans include a mid-segment stop (shorter than
+    seg_len, so the tail rounds are padding) and on-grid boundaries."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.vecsim.shard.driver import _padded_state
+    from repro.core.vecsim.stream import ColumnWindow
+
+    name, seed, n = case
+    scn = build(name, seed, n)
+    w = scn.m_total
+    seg_len = 8
+    cw = ColumnWindow(scn, w)
+    st0 = _padded_state(scn, w, pad_rows(scn.n, n_devices))
+    mesh = shard_mesh(n_devices)
+    row = NamedSharding(mesh, P("shard"))
+    rep = NamedSharding(mesh, P())
+    state = tuple(jax.device_put(st0[key], row) for key in STATE_KEYS)
+    runner = shard_span_runner(n_devices, scn.k, scn.mode == "pc",
+                               scn.always_gate, scn.pong_delay,
+                               gating=scn.n_adds > 0, backend="jax",
+                               scan=True)
+    reduce_run, _ = shard_retire_kernels(n_devices)
+    caps = cw.round_caps(scn.rounds)
+    rounds = np.int32(scn.rounds)
+    for lo, hi in segments:
+        hi = min(hi, scn.rounds)
+        assert cw.activate(lo, hi) == hi, "case must not shorten segments"
+        sst = cw.stacked_schedule(lo, hi, caps, seg_len)
+        ts = np.full(seg_len, -3, np.int32)
+        ts[: hi - lo] = np.arange(lo, hi, dtype=np.int32)
+        origins = np.full(w, -1, np.int32)
+        app = cw.slot_app & (cw.slot_msg >= 0)
+        origins[app] = scn.bcast_origin[cw.slot_msg[app]]
+        state, _, red = runner(
+            state, {key: jax.device_put(v, rep) for key, v in sst.items()},
+            jax.device_put(ts, rep), jax.device_put(origins, rep), rounds)
+        fused = tuple(np.asarray(x) for x in red)
+        standalone = tuple(np.asarray(x)
+                           for x in reduce_run(state, origins, rounds))
+        host = {key: np.asarray(v) for key, v in zip(STATE_KEYS, state)}
+        ref = reduce_reference(host, origins, rounds)
+        for f, s, r in zip(fused, standalone, ref):
+            np.testing.assert_array_equal(f, s, err_msg=f"seg [{lo},{hi})")
+            np.testing.assert_array_equal(f, np.asarray(r),
+                                          err_msg=f"seg [{lo},{hi})")
+
+
+def test_reduce_matches_reference_one_device():
+    run_reduce_matches_reference(1)
+
+
+def test_fused_reduce_matches_standalone_one_device():
+    run_fused_vs_standalone(1)
+    run_fused_vs_standalone(1, case=("link_add", 3, 24))
+
+
+def test_retirement_decision_rules():
+    """One handcrafted column per rule; the decisions derived from the
+    device reduce must match the expectations exactly.
+
+    col0 full-delivery: delivered on every alive row -> retires
+    col1 dead: no deliveries, born before t_now -> retires
+    col2 blocked app: fully delivered but a delivery lands at-or-after
+         an open gate on an active link -> held
+    col3 ping-referenced: an alive row's ping slot points here -> held,
+         and under a horizon it force-expires as *hung*
+    col4 full-delivery modulo crashes: only crashed rows undelivered ->
+         retires (the alive-rows-only rule)
+    col5 straggler: partial delivery, old birth -> held without a
+         horizon, force-expired (not hung) with one
+    """
+    n, w, k = 8, 6, 2
+    st = dict(
+        arr=np.full((n, w), INF, np.int32),
+        delivered=np.full((n, w), -1, np.int32),
+        adj=np.zeros((n, k), np.int32),
+        delay=np.ones((n, k), np.int32),
+        active=np.ones((n, k), bool),
+        gate=np.full((n, k), -1, np.int32),
+        flush=np.full((n, k), INF, np.int32),
+        ping=np.full((n, k), -1, np.int32),
+        crashed=np.zeros(n, bool),
+        ever_del=np.zeros(n, bool),
+    )
+    st["crashed"][6:] = True
+    st["delivered"][:, 0] = 3            # col0: everywhere (crashed too)
+    st["delivered"][:, 2] = 4            # col2: everywhere, but gated:
+    st["gate"][1, 0] = 4                 #   row1 delivery at gate round
+    st["delivered"][:, 3] = 3            # (below the gate: not blocked)
+    st["delivered"][0, 3] = -1           # col3: one miss + a ping ref
+    st["ping"][2, 1] = 3
+    st["delivered"][:6, 4] = 3           # col4: all *alive* rows
+    st["delivered"][:2, 5] = 2           # col5: partial
+    st["arr"][:, (0, 2, 3, 4)] = 3
+    st["arr"][:2, 5] = 2
+
+    slot_app = np.array([True, True, True, True, True, True])
+    slot_birth = np.array([2, 1, 2, 2, 2, 1], np.int64)
+    origins = np.array([0, -1, 1, 2, 3, 4], np.int32)
+    t_now, rounds = 12, np.int32(20)
+
+    reduce_run, _ = shard_retire_kernels(1)
+    red = tuple(np.asarray(x) for x in
+                reduce_run(_device_state(st, 1), origins, rounds))
+    for g, wnt in zip(red, reduce_reference(st, origins, rounds)):
+        np.testing.assert_array_equal(g, np.asarray(wnt))
+
+    done, by_exp, hung = decide(red, slot_app, slot_birth, t_now)
+    assert done.tolist() == [True, True, False, False, True, False]
+    assert not by_exp.any() and not hung.any()
+
+    done_h, by_exp_h, hung_h = decide(red, slot_app, slot_birth, t_now,
+                                      horizon=8)
+    assert done_h.tolist() == [True, True, True, True, True, True]
+    assert by_exp_h.tolist() == [False, False, True, True, False, True]
+    assert hung_h.tolist() == [False, False, False, True, False, False]
+
+    # bdone: the origin row of each retiring app column delivered it
+    assert red[7].tolist() == [1, 0, 1, 1, 1, 0]
+
+
+_MULTIDEV_SNIPPET = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={d}"
+import sys
+sys.path.insert(0, {tests_dir!r})
+from test_vecsim_retire import (run_fused_vs_standalone,
+                                run_reduce_matches_reference)
+run_reduce_matches_reference({d})
+run_fused_vs_standalone({d})
+print("RETIRE_OK")
+"""
+
+
+@pytest.mark.parametrize("d", [2, 4])
+def test_retire_reduce_multidevice_subprocess(d):
+    """Reference match + fused-vs-standalone on real 2- and 4-device
+    meshes (psum across shards, padded rows in play)."""
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    repo_root = os.path.dirname(tests_dir)
+    out = subprocess.run(
+        [sys.executable, "-c",
+         _MULTIDEV_SNIPPET.format(tests_dir=tests_dir, d=d)],
+        capture_output=True, text=True,
+        env=dict(os.environ, PYTHONPATH="src"), cwd=repo_root)
+    assert out.returncode == 0 and "RETIRE_OK" in out.stdout, \
+        out.stdout + out.stderr

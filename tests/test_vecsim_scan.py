@@ -156,9 +156,8 @@ def test_scan_zero_traffic_tail_and_retire_everything_boundary():
 
 @pytest.mark.parametrize("seg_len", [1, 5, 64])
 def test_scan_seg_len_invariance(seg_len):
-    """Any seg_len gives the same run as the seg_len=16 base (full-width
-    window, so no overflow-timing interaction): segment boundaries are
-    pure execution structure."""
+    """Any seg_len gives the same run as the seg_len=16 base: segment
+    boundaries are pure execution structure."""
     scn = build("churn", 31, 64)
     base = execute_sharded(scn, scn.m_total, n_devices=1, collect="full",
                            seg_len=16, scan="on")
@@ -170,6 +169,76 @@ def test_scan_seg_len_invariance(seg_len):
     for key in base.state:
         np.testing.assert_array_equal(base.state[key], other.state[key],
                                       err_msg=key)
+
+
+@pytest.mark.parametrize("seg_len", [1, 3, 16, 64])
+def test_scan_seg_len_invariance_narrow_window_horizon(seg_len):
+    """seg_len-invariance where it used to break: a narrow window under
+    a horizon.  ``activate`` now caps every segment at the earliest
+    expiry-due round, so force-expiries (and the columns they free)
+    land at the same round for every seg_len — results match the
+    windowed numpy reference byte-for-byte."""
+    scn = build("crash", 9, 64)
+    w, h = 6, 9
+    win = execute_windowed(scn, w, backend="numpy", collect="full",
+                           horizon=h, seg_len=seg_len)
+    sh = execute_sharded(scn, w, n_devices=1, collect="full",
+                         seg_len=seg_len, scan="on", horizon=h)
+    _assert_matches(win, sh)
+
+
+def test_scan_on_never_dispatches_standalone_reduce(monkeypatch):
+    """The fused segment aggregates fully replace the standalone
+    retirement reduce on the scanned path: across a run whose final
+    boundary retires every live column at once, zero ``reduce_run``
+    dispatches happen — the boundary sweeps consume the fused 8-tuple
+    and the drain skips its reduce because nothing is live (the old
+    drain ran a full (N, W) reduction just to learn there was nothing
+    to record).  scan="off" keeps the standalone reduce as reference."""
+    from repro.core.vecsim.shard import driver as drv
+    calls = {"reduce": 0}
+    orig = drv.shard_retire_kernels
+
+    def counting(d):
+        reduce_run, apply_run = orig(d)
+
+        def reduce_counted(*a, **kw):
+            calls["reduce"] += 1
+            return reduce_run(*a, **kw)
+        return reduce_counted, apply_run
+
+    monkeypatch.setattr(drv, "shard_retire_kernels", counting)
+    scn = static_scenario(2, 64)
+    res = drv.execute_sharded(scn, scn.m_total, n_devices=1,
+                              collect="full", seg_len=4, scan="on")
+    assert res.delivered_frac() == 1.0
+    assert calls["reduce"] == 0
+    calls["reduce"] = 0
+    drv.execute_sharded(scn, scn.m_total, n_devices=1, collect="full",
+                        seg_len=4, scan="off")
+    assert calls["reduce"] > 0
+
+
+def test_overflow_round_invariant_across_seg_len():
+    """The S-curve of the old bug: overflow used to fire at whatever
+    segment boundary happened to follow the fatal round, so its timing
+    depended on seg_len.  It must now raise at the same round — and the
+    same :attr:`WindowOverflowError.round` — for every seg_len, with
+    and without a horizon, in both engines."""
+    scn = build("sustained_kreg", 13, 64)
+    for h in (None, 5):
+        rounds = set()
+        for seg_len in (1, 2, 7, 16, 64):
+            for run in (
+                lambda: execute_windowed(scn, 2, backend="numpy",
+                                         horizon=h, seg_len=seg_len),
+                lambda: execute_sharded(scn, 2, n_devices=1, horizon=h,
+                                        seg_len=seg_len, scan="on"),
+            ):
+                with pytest.raises(WindowOverflowError) as ei:
+                    run()
+                rounds.add(ei.value.round)
+        assert len(rounds) == 1, (h, rounds)
 
 
 # --------------------------------------------------------------------- #
@@ -226,8 +295,10 @@ def _scan_lowering(n_devices, scn, w, seg_len):
                                scn.always_gate, scn.pong_delay,
                                gating=scn.n_adds > 0, backend="jax",
                                scan=True)
+    origins = np.full(w, -1, np.int32)
     with enable_x64():
-        return runner.jitted.lower(state, sst, ts), state
+        return runner.jitted.lower(state, sst, ts, origins,
+                                   np.int32(scn.rounds)), state
 
 
 def test_scan_donation_aliases_live_planes():
@@ -324,6 +395,36 @@ def test_scan_spec_validation():
     # JSON round-trip carries the knob
     spec = RunSpec(engine="sharded", shard=ShardSpec(scan="off")).validate()
     assert RunSpec.from_dict(spec.to_dict()) == spec
+    # profile: sharded/auto engines only, and round-trips like scan
+    with pytest.raises(SpecError, match="shard.profile"):
+        RunSpec(engine="windowed", shard=ShardSpec(profile=True)).validate()
+    spec = RunSpec(engine="sharded",
+                   shard=ShardSpec(profile=True)).validate()
+    assert RunSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_profile_through_api_front_door():
+    """shard.profile=True yields per-segment timings on the raw result
+    and scalar totals in extras, without changing any result."""
+    from repro.api import RunSpec, ShardSpec, run
+
+    def go(profile):
+        return run(RunSpec(engine="sharded", n=64, seed=3,
+                           shard=ShardSpec(devices=1, profile=profile)))
+
+    on, off = go(True), go(False)
+    prof = on.result.seg_profile
+    assert off.result.seg_profile is None
+    assert len(prof) == on.extras["profile_segments"] > 0
+    assert all(set(p) == {"lo", "hi", "fast", "stage_s", "dispatch_s",
+                          "block_s", "retire_s"} for p in prof)
+    assert [(p["lo"], p["hi"]) for p in prof] == \
+        sorted((p["lo"], p["hi"]) for p in prof)
+    assert on.extras["profile_dispatch_s"] == sum(
+        p["dispatch_s"] for p in prof)
+    assert on.stats == off.stats
+    assert on.delivered_frac == off.delivered_frac
+    assert on.mean_latency == off.mean_latency
 
 
 def test_scan_through_api_front_door():
