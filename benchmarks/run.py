@@ -44,6 +44,13 @@ def main() -> None:
                     help="also run a harness-sized sharded scale point "
                          "on this many devices (forces host platform "
                          "devices; full run: benchmarks/bench_scale.py)")
+    ap.add_argument("--serve", action="store_true",
+                    help="also run a harness-sized live-serving capacity "
+                         "sweep (open-loop ingest; honors --scale-devices "
+                         "and --scan; full run: benchmarks/bench_serve.py)")
+    ap.add_argument("--scan", choices=("auto", "on", "off"), default="auto",
+                    help="sharded segment stepping for --serve/"
+                         "--scale-devices points")
     args = ap.parse_args()
     if args.scale_devices and args.engine == "exact":
         print("warning: --scale-devices runs with the vec benches only; "
@@ -58,7 +65,8 @@ def main() -> None:
                 f"{args.scale_devices}").strip()
     # imported after the device-count env var so it precedes jax init
     from benchmarks import bench_backend, bench_engine, bench_fig7, \
-        bench_scale, bench_table1, bench_throughput, bench_train
+        bench_scale, bench_serve, bench_table1, bench_throughput, \
+        bench_train
     engines = ("exact", "vec") if args.engine == "both" else (args.engine,)
 
     print("name,us_per_call,derived")
@@ -106,10 +114,28 @@ def main() -> None:
                 traceback.print_exc()
         if eng == "vec" and args.scale_devices:
             try:
-                for name, us, derived in bench_scale.rows(
-                        n=args.n if args.n is not None else 65536,
-                        devices=args.scale_devices, messages=128,
-                        rate=4.0, window=64, seg_len=8, out=None):
+                _, csv = bench_scale.rows(
+                    n=args.n if args.n is not None else 65536,
+                    devices=args.scale_devices, messages=128,
+                    rate=4.0, window=64, seg_len=8, out=None,
+                    scan=args.scan)
+                for name, us, derived in csv:
+                    print(f"{prefix}{name},{us:.2f},{derived:.3f}",
+                          flush=True)
+            except Exception:                  # noqa: BLE001
+                failed += 1
+                traceback.print_exc()
+        if eng == "vec" and args.serve:
+            # live serving capacity: a harness-sized two-rate sweep (the
+            # nightly CI smoke runs the full bench_serve sweep)
+            try:
+                _, csv = bench_serve.rows(
+                    n=args.n if args.n is not None else 4096,
+                    devices=args.scale_devices,
+                    engine="sharded" if args.scale_devices else "auto",
+                    scan=args.scan, rates=(4.0, 16.0), messages=2000,
+                    window=args.window, seg_len=8, out=None)
+                for name, us, derived in csv:
                     print(f"{prefix}{name},{us:.2f},{derived:.3f}",
                           flush=True)
             except Exception:                  # noqa: BLE001

@@ -21,19 +21,24 @@ the schema, the registry keys, and the auto-selection rule.
 """
 
 from ..core.vecsim import TrafficModel
-from .registry import (BACKENDS, ENGINES, PROTOCOLS, SCENARIOS, TOPOLOGIES,
-                       TRAFFIC, BackendEntry, EngineEntry, ProtocolEntry,
-                       Registry, ScenarioEntry, describe_entry)
-from .run import RunReport, build_scenario, run, select_engine
-from .spec import (DynamicsSpec, MetricsSpec, RunSpec, ShardSpec, SpecError,
-                   TopologySpec, TrafficSpec, WindowSpec)
+from ..core.vecsim.live import AdmissionPolicy, ArrivalProcess, LiveReport
+from .registry import (ADMISSION, ARRIVALS, BACKENDS, ENGINES, PROTOCOLS,
+                       SCENARIOS, TOPOLOGIES, TRAFFIC, BackendEntry,
+                       EngineEntry, ProtocolEntry, Registry, ScenarioEntry,
+                       describe_entry)
+from .run import (RunReport, build_live_scenario, build_scenario, run,
+                  select_engine)
+from .spec import (DynamicsSpec, LiveSpec, MetricsSpec, RunSpec, ShardSpec,
+                   SpecError, TopologySpec, TrafficSpec, WindowSpec)
 
 __all__ = [
     "RunSpec", "TopologySpec", "TrafficSpec", "DynamicsSpec", "WindowSpec",
-    "ShardSpec", "MetricsSpec", "SpecError",
-    "run", "RunReport", "build_scenario", "select_engine",
+    "ShardSpec", "LiveSpec", "MetricsSpec", "SpecError",
+    "run", "RunReport", "build_scenario", "build_live_scenario",
+    "select_engine", "LiveReport",
     "Registry", "ProtocolEntry", "EngineEntry", "BackendEntry",
-    "ScenarioEntry", "TrafficModel", "describe_entry",
+    "ScenarioEntry", "TrafficModel", "ArrivalProcess", "AdmissionPolicy",
+    "describe_entry",
     "PROTOCOLS", "ENGINES", "BACKENDS", "TOPOLOGIES", "TRAFFIC",
-    "SCENARIOS",
+    "SCENARIOS", "ARRIVALS", "ADMISSION",
 ]

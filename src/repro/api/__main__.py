@@ -17,8 +17,8 @@ import argparse
 import json
 import sys
 
-from . import (BACKENDS, ENGINES, PROTOCOLS, SCENARIOS, TOPOLOGIES, TRAFFIC,
-               RunSpec, SpecError, describe_entry, run)
+from . import (ADMISSION, ARRIVALS, BACKENDS, ENGINES, PROTOCOLS, SCENARIOS,
+               TOPOLOGIES, TRAFFIC, RunSpec, SpecError, describe_entry, run)
 
 
 def _spec_dict(src: str) -> dict:
@@ -81,6 +81,27 @@ def build_parser() -> argparse.ArgumentParser:
                     help="segment stepping for engine 'sharded': one "
                          "lax.scan per segment (on, the auto default) "
                          "vs per-round host dispatch (off)")
+    lv = ap.add_argument_group("live serving (mode='live')")
+    lv.add_argument("--serve", action="store_true",
+                    help="run as an open-loop service (mode='live'): an "
+                         "arrival process feeds a bounded ingest queue, "
+                         "an admission policy micro-batches it into the "
+                         "streaming engine each segment; --rate/"
+                         "--messages then describe the offered load")
+    lv.add_argument("--arrivals", choices=sorted(ARRIVALS.keys()),
+                    help="open-loop arrival process (live mode)")
+    lv.add_argument("--admission", choices=sorted(ADMISSION.keys()),
+                    help="admission policy against the window-occupancy "
+                         "backpressure signal (live mode)")
+    lv.add_argument("--queue-cap", type=int,
+                    help="bounded ingest queue length; overflow is "
+                         "tail-dropped into the shed count (live mode)")
+    lv.add_argument("--admit-cap", type=int,
+                    help="max admissions per simulated round "
+                         "(live.per_round_cap; default auto from --rate)")
+    lv.add_argument("--slo-p99", type=float,
+                    help="p99 rounds-to-delivery SLO target; the report's "
+                         "serve_slo_ok says whether it was met")
     met = ap.add_argument_group("metrics")
     met.add_argument("--oracle", action="store_true", default=None,
                      help="happens-before oracle check on the trace")
@@ -103,6 +124,10 @@ _FLAG_MAP = [
     ("window", "window", "window"), ("seg_len", "window", "seg_len"),
     ("horizon", "window", "horizon"), ("collect", "window", "collect"),
     ("devices", "shard", "devices"), ("scan", "shard", "scan"),
+    ("arrivals", "live", "arrivals"), ("admission", "live", "admission"),
+    ("queue_cap", "live", "queue_cap"),
+    ("admit_cap", "live", "per_round_cap"),
+    ("slo_p99", "live", "slo_p99"),
     ("oracle", "metrics", "oracle"), ("crossval", "metrics", "crossval"),
 ]
 
@@ -117,6 +142,15 @@ def spec_from_args(args: argparse.Namespace) -> RunSpec:
             d[fld] = value
         else:
             d.setdefault(section, {})[fld] = value
+    if args.serve:
+        d["mode"] = "live"
+        # under --serve, --rate/--messages describe the offered load,
+        # not a pre-scripted traffic schedule
+        tr = d.get("traffic", {})
+        live = d.setdefault("live", {})
+        for fld in ("rate", "messages"):
+            if fld in tr:
+                live.setdefault(fld, tr.pop(fld))
     return RunSpec.from_dict(d)
 
 
@@ -127,7 +161,9 @@ def print_registries() -> None:
     so the note says whether (and how) that backend can run *here*."""
     for name, registry in (("protocols", PROTOCOLS), ("engines", ENGINES),
                            ("topologies", TOPOLOGIES), ("traffic", TRAFFIC),
-                           ("scenarios (dynamics kinds)", SCENARIOS)):
+                           ("scenarios (dynamics kinds)", SCENARIOS),
+                           ("arrivals (live mode)", ARRIVALS),
+                           ("admission (live mode)", ADMISSION)):
         print(f"{name}:")
         for key in sorted(registry.keys()):
             desc = describe_entry(registry.get(key))
@@ -162,7 +198,18 @@ def main(argv=None) -> int:
         if args.dump_spec:
             print(json.dumps(spec.validate().to_dict(), indent=2))
             return 0
-        rep = run(spec)
+        on_tick = None
+        if args.serve:
+            tick_no = [0]
+
+            def on_tick(info):
+                tick_no[0] += 1
+                if tick_no[0] % 16 == 0:
+                    print(f"  serve: t={info['t']} "
+                          f"admitted={info['admitted_total']} "
+                          f"queue={info['queue']} live={info['live']} "
+                          f"shed={info['shed']}", file=sys.stderr)
+        rep = run(spec, on_tick=on_tick)
     except (SpecError, FileNotFoundError, json.JSONDecodeError,
             TypeError) as exc:
         # TypeError: a JSON spec with a wrongly-typed field value (e.g.

@@ -24,11 +24,13 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, Iterable, Optional
 
 from ..core.vecsim import scenario as _scn
+from ..core.vecsim.live import _ADMISSION, _ARRIVALS
 from .spec import RunSpec, SpecError
 
 __all__ = ["Registry", "ProtocolEntry", "EngineEntry", "BackendEntry",
            "ScenarioEntry", "PROTOCOLS", "ENGINES", "BACKENDS",
-           "TOPOLOGIES", "TRAFFIC", "SCENARIOS", "describe_entry"]
+           "TOPOLOGIES", "TRAFFIC", "SCENARIOS", "ARRIVALS", "ADMISSION",
+           "describe_entry"]
 
 
 class Registry:
@@ -87,6 +89,12 @@ BACKENDS = Registry("backend")
 TOPOLOGIES = Registry("topology", items=_scn._TOPOLOGIES)
 TRAFFIC = Registry("traffic", items=_scn._TRAFFIC)
 SCENARIOS = Registry("scenario")
+# Live serving axes (mode="live"): open-loop arrival processes and
+# admission policies, shared live with vecsim.live so an ArrivalProcess
+# or AdmissionPolicy registered here is immediately buildable by
+# LiveLoop (and vice versa).
+ARRIVALS = Registry("arrivals", items=_ARRIVALS)
+ADMISSION = Registry("admission", items=_ADMISSION)
 
 
 # --------------------------------------------------------------------- #

@@ -38,6 +38,7 @@ from ..core.oracle import OracleReport, check_trace
 from ..core.types import NetStats
 from ..core.vecsim import crossval as _crossval
 from ..core.vecsim import stream as _stream
+from ..core.vecsim.live import LiveLoop, LiveReport
 from ..core.vecsim.metrics import build_trace
 from ..core.vecsim.scenario import VecScenario
 from ..core.vecsim.sim import execute_vec, resolve_backend
@@ -45,7 +46,8 @@ from ..core.vecsim.vc import run_vec_vc
 from .registry import ENGINES, PROTOCOLS, SCENARIOS, EngineEntry
 from .spec import RunSpec, SpecError
 
-__all__ = ["RunReport", "run", "build_scenario", "select_engine"]
+__all__ = ["RunReport", "run", "build_scenario", "select_engine",
+           "build_live_scenario"]
 
 
 @dataclass
@@ -68,6 +70,7 @@ class RunReport:
     crossval_ok: Optional[bool] = None
     result: Any = None         # the raw engine result object
     scenario: Any = None       # the VecScenario that ran
+    live: Optional[LiveReport] = None   # serving report (mode="live")
 
     def to_dict(self) -> Dict[str, Any]:
         """JSON-safe summary (drops the raw result and scenario)."""
@@ -86,6 +89,7 @@ class RunReport:
                     for k, v in self.extras.items()},
             oracle_ok=None if self.oracle is None else self.oracle.ok,
             crossval_ok=self.crossval_ok,
+            live=None if self.live is None else self.live.to_dict(),
         )
 
 
@@ -316,12 +320,103 @@ ENGINES.register("sharded", EngineEntry(
 
 
 # --------------------------------------------------------------------- #
+# Live serving mode
+# --------------------------------------------------------------------- #
+def build_live_scenario(spec: RunSpec) -> VecScenario:
+    """The broadcast-free base a live run serves over: the spec's
+    topology and dynamics with every pre-scripted broadcast stripped
+    (live traffic arrives through the ingest queue instead)."""
+    scn = build_scenario(spec)
+    if scn.m_app:
+        scn = replace(scn, bcast_round=np.empty(0, np.int32),
+                      bcast_origin=np.empty(0, np.int32)).validate()
+    return scn
+
+
+def _select_live_engine(spec: RunSpec, scn: VecScenario
+                        ) -> Tuple[str, int]:
+    """Streaming-engine selection for live mode: the explicit engine if
+    named, else sharded on a multi-device mesh, windowed otherwise; the
+    window follows the batch budget rule with ``M_total`` read from the
+    serving capacity (``live.messages`` + pre-scripted adds)."""
+    if spec.engine in ("windowed", "sharded"):
+        name = spec.engine
+    elif spec.backend == "numpy":
+        name = "windowed"
+    else:
+        name = "sharded" if _device_count(spec) > 1 else "windowed"
+    window = spec.window.window
+    if window is None:
+        devices = _device_count(spec) if name == "sharded" else 1
+        budget = devices * spec.memory_budget_mb * 2 ** 20
+        m_total = spec.live.messages + scn.n_adds
+        window = int(min(max(64, budget // (8 * scn.n)), max(m_total, 1)))
+    return name, window
+
+
+def _run_live(spec: RunSpec, on_tick=None) -> RunReport:
+    scn = build_live_scenario(spec)
+    engine_name, window = _select_live_engine(spec, scn)
+    lv = spec.live
+    arrival_params = dict(rate_lo=lv.rate_lo, period=lv.period,
+                          duty=lv.duty)
+    loop = LiveLoop(
+        scn, window, engine=engine_name, backend=spec.backend,
+        devices=spec.shard.devices, scan=spec.shard.scan,
+        seg_len=spec.window.seg_len, horizon=spec.window.horizon,
+        collect=spec.window.collect, arrivals=lv.arrivals,
+        admission=lv.admission, rate=lv.rate, messages=lv.messages,
+        queue_cap=lv.queue_cap, per_round_cap=lv.per_round_cap,
+        slo_p99=lv.slo_p99, seed=spec.seed,
+        arrival_params=arrival_params, profile=spec.shard.profile,
+        on_tick=on_tick)
+    lr = loop.run()
+    res = lr.result
+
+    extras = _vec_extras(spec, res)
+    extras["peak_live"] = lr.peak_live
+    for key in ("offered", "admitted", "shed_queue", "shed_policy",
+                "unserved", "queue_peak", "backpressure_ticks",
+                "overflow_catches", "requests_per_sec", "p50", "p99",
+                "p999", "mean_latency_rounds"):
+        v = getattr(lr, key)
+        if isinstance(v, float) and not np.isfinite(v):
+            continue
+        extras["serve_" + key] = v
+    if lr.slo_ok is not None:
+        extras["serve_slo_ok"] = int(lr.slo_ok)
+
+    report = RunReport(
+        spec=spec, engine=engine_name,
+        backend=getattr(res, "backend", resolve_backend(spec.backend)),
+        window=getattr(res, "window", window),
+        wall_seconds=lr.wall_seconds, n=scn.n,
+        m_app=lr.scenario.m_app, rounds=lr.scenario.rounds,
+        stats=res.stats, delivered_frac=lr.delivered_frac,
+        mean_latency=res.mean_latency(), extras=extras, result=res,
+        scenario=lr.scenario, live=lr)
+    # the live result is re-indexed to the admitted scenario, so the
+    # batch-mode checkers run on it unchanged
+    if spec.metrics.oracle:
+        report.oracle = _check_oracle(spec, lr.scenario, engine_name, res)
+    if spec.metrics.crossval:
+        report.crossval_ok = _check_crossval(spec, lr.scenario,
+                                             report.window, engine_name,
+                                             res)
+    return report
+
+
+# --------------------------------------------------------------------- #
 # The front door
 # --------------------------------------------------------------------- #
-def run(spec: RunSpec) -> RunReport:
+def run(spec: RunSpec, on_tick=None) -> RunReport:
     """Validate ``spec``, build the scenario, pick the engine, execute,
-    and measure — the one entry point every benchmark and example uses."""
+    and measure — the one entry point every benchmark and example uses.
+    ``on_tick`` (live mode only) is called with a small progress dict
+    after every serving tick."""
     spec.validate()
+    if spec.mode == "live":
+        return _run_live(spec, on_tick=on_tick)
     scn = build_scenario(spec)
     engine_name, window = select_engine(spec, scn)
     snapshot_round = _snapshot_round(spec, scn)

@@ -21,7 +21,7 @@ from dataclasses import dataclass, field, replace
 from typing import Any, Dict, Optional, Union
 
 __all__ = ["SpecError", "TopologySpec", "TrafficSpec", "DynamicsSpec",
-           "WindowSpec", "ShardSpec", "MetricsSpec", "RunSpec"]
+           "WindowSpec", "ShardSpec", "MetricsSpec", "LiveSpec", "RunSpec"]
 
 
 class SpecError(ValueError):
@@ -110,6 +110,36 @@ class ShardSpec:
 
 
 @dataclass(frozen=True)
+class LiveSpec:
+    """Live serving-mode knobs (``mode="live"``; DESIGN.md §2.9).
+
+    In live mode the run is an *open-loop service*: an arrival process
+    (registry: ``repro.api.ARRIVALS``) submits broadcasts into a bounded
+    ingest queue as simulated time passes, and an admission policy
+    (registry: ``repro.api.ADMISSION``) plans each segment's micro-batch
+    against the engine's window-occupancy backpressure signal.  The
+    ``traffic`` section is ignored — live traffic is not pre-scripted —
+    while topology/dynamics still shape the overlay under serving.
+
+    ``per_round_cap`` bounds admissions per simulated round (default
+    ``min(n, max(4, ceil(3·rate)))``); the live schedule caps are jitted
+    against it, so every segment reuses one compiled trace.  ``slo_p99``
+    is a rounds-to-delivery target: the report's ``slo_ok`` says whether
+    the measured p99 (queueing delay included) met it."""
+
+    arrivals: str = "poisson"      # repro.api.ARRIVALS key
+    admission: str = "defer"       # repro.api.ADMISSION key
+    rate: float = 8.0              # mean offered submissions per round
+    messages: int = 1024           # total submissions offered
+    queue_cap: int = 4096          # bounded ingest queue (tail-drop)
+    per_round_cap: Optional[int] = None   # admissions per round; None=auto
+    slo_p99: Optional[float] = None       # p99 rounds-to-delivery target
+    rate_lo: Optional[float] = None       # bursty baseline (default rate/8)
+    period: int = 256              # bursty/diurnal period in rounds
+    duty: float = 0.25             # bursty high-rate fraction of period
+
+
+@dataclass(frozen=True)
 class MetricsSpec:
     """What to measure beyond the engine's NetStats."""
 
@@ -123,6 +153,7 @@ class RunSpec:
     """One experiment, declaratively: ``repro.api.run(RunSpec(...))``."""
 
     protocol: str = "pc"       # pc | r | vc   (repro.api.PROTOCOLS)
+    mode: str = "batch"        # batch (pre-scripted) | live (open-loop)
     engine: str = "auto"       # auto | exact | vec | windowed
     backend: str = "auto"      # auto | numpy | jax | pallas
     n: int = 64                # processes
@@ -135,6 +166,7 @@ class RunSpec:
     dynamics: DynamicsSpec = field(default_factory=DynamicsSpec)
     window: WindowSpec = field(default_factory=WindowSpec)
     shard: ShardSpec = field(default_factory=ShardSpec)
+    live: LiveSpec = field(default_factory=LiveSpec)
     metrics: MetricsSpec = field(default_factory=MetricsSpec)
     # Escape hatch: run a prebuilt VecScenario (topology/traffic/dynamics
     # sections are then ignored).  Used by the legacy shims and tests.
@@ -258,6 +290,41 @@ class RunSpec:
                                      or snap == "last_churn"):
             raise SpecError(f"metrics.snapshot={snap!r} must be a round "
                             "number or 'last_churn'")
+        if self.mode not in ("batch", "live"):
+            raise SpecError(f"mode={self.mode!r} must be 'batch' or 'live'")
+        if self.mode == "live":
+            check_key(reg.ARRIVALS, self.live.arrivals, "live.arrivals")
+            check_key(reg.ADMISSION, self.live.admission, "live.admission")
+            if self.live.messages < 1:
+                raise SpecError("live.messages must be >= 1")
+            if self.live.rate <= 0:
+                raise SpecError("live.rate must be > 0")
+            if self.live.queue_cap < 1:
+                raise SpecError("live.queue_cap must be >= 1")
+            if self.live.per_round_cap is not None \
+                    and not (1 <= self.live.per_round_cap <= self.n):
+                raise SpecError(
+                    f"live.per_round_cap={self.live.per_round_cap} must "
+                    f"be in [1, n={self.n}] (one broadcast per (origin, "
+                    "round))")
+            if self.engine not in ("auto", "windowed", "sharded"):
+                raise SpecError(
+                    f"mode='live' serves through the streaming engines; "
+                    f"engine must be 'auto', 'windowed' or 'sharded' "
+                    f"(got {self.engine!r})")
+            if self.protocol == "vc":
+                raise SpecError("mode='live' needs a windowed protocol; "
+                                "'vc' has no streaming engine")
+            if snap is not None:
+                raise SpecError("metrics.snapshot is not supported in "
+                                "mode='live' (segment boundaries are "
+                                "load-dependent)")
+            if self.scenario is not None:
+                raise SpecError(
+                    "mode='live' builds its own broadcast-free base "
+                    "scenario from the topology/dynamics sections; a "
+                    "prebuilt scenario belongs to batch mode (drive "
+                    "LiveLoop directly for custom bases)")
         return self
 
     # ----------------------------------------------------------------- #
@@ -275,7 +342,8 @@ class RunSpec:
         keys raise, missing keys take the dataclass defaults."""
         sections = dict(topology=TopologySpec, traffic=TrafficSpec,
                         dynamics=DynamicsSpec, window=WindowSpec,
-                        shard=ShardSpec, metrics=MetricsSpec)
+                        shard=ShardSpec, live=LiveSpec,
+                        metrics=MetricsSpec)
         kw: Dict[str, Any] = {}
         top_fields = {f.name for f in dataclasses.fields(cls)}
         for key, value in d.items():

@@ -21,6 +21,10 @@ Modules:
   sim       — the lockstep engine, numpy/jax/pallas backends, NetStats
               emission
   stream    — streaming windowed execution in O(N·window) memory
+  live      — the open-loop serving front door over the windowed and
+              sharded engines: bounded ingest queue, arrival processes,
+              admission policies, backpressure via the window-occupancy
+              signal, rounds-to-delivery latency SLOs (DESIGN.md §2.9)
   kernels   — fused Pallas delivery-sweep kernels behind
               ``backend="pallas"`` (kernel/ops/ref layout, interpret
               mode on CPU; DESIGN.md §2.6)
@@ -50,11 +54,14 @@ from .scenario import (INF, TrafficModel, VecScenario, bursty_traffic,
                        partition_heal_scenario, poisson_traffic,
                        ring_topology, settle_rounds, smallworld_topology,
                        static_scenario, sustained_scenario)
+from .live import (AdmissionPolicy, ArrivalProcess, LiveColumnWindow,
+                   LiveLoop, LiveReport, build_arrivals)
 from .sim import (SERIES_FIELDS, SlotSchedule, VecRunResult, execute_vec,
                   run_vec)
-from .shard import ShardedRunResult, execute_sharded
-from .stream import (ColumnWindow, WindowedRunResult, WindowOverflowError,
-                     execute_windowed, run_vec_windowed)
+from .shard import ShardedRunResult, ShardedStepper, execute_sharded
+from .stream import (ColumnWindow, WindowedRunResult, WindowedStepper,
+                     WindowOverflowError, execute_windowed,
+                     run_vec_windowed)
 from .vc import VCVecRunResult, run_vec_vc
 
 __all__ = [
@@ -67,8 +74,10 @@ __all__ = [
     "SERIES_FIELDS", "SlotSchedule", "VecRunResult", "run_vec",
     "execute_vec",
     "WindowedRunResult", "WindowOverflowError", "ColumnWindow",
-    "run_vec_windowed", "execute_windowed",
-    "ShardedRunResult", "execute_sharded",
+    "WindowedStepper", "run_vec_windowed", "execute_windowed",
+    "ShardedRunResult", "ShardedStepper", "execute_sharded",
+    "LiveLoop", "LiveReport", "LiveColumnWindow", "ArrivalProcess",
+    "AdmissionPolicy", "build_arrivals",
     "VCVecRunResult", "run_vec_vc",
     "safe_out_mask", "full_out_mask", "mean_shortest_path_vec",
     "unsafe_link_stats_vec", "build_trace", "delivered_multiset",

@@ -1,0 +1,23 @@
+"""Live-traffic serving front door for the vecsim engines.
+
+Open-loop causal-broadcast ingest: an :class:`ArrivalProcess` drives
+submissions into a bounded queue, an :class:`AdmissionPolicy` plans
+them into each segment's rounds, a :class:`LiveColumnWindow` grows the
+engine's broadcast schedule between segments, and :class:`LiveLoop`
+ties it together with backpressure (the window-occupancy signal and the
+state-clean ``WindowOverflowError`` catch-and-defer path) plus
+rounds-to-delivery latency SLOs.  See ``DESIGN.md`` §2.9.
+"""
+
+from .admission import _ADMISSION, AdmissionPolicy
+from .arrivals import _ARRIVALS, ArrivalProcess, build_arrivals
+from .loop import (LiveLoop, LiveReport, default_per_round_cap,
+                   serving_bound)
+from .window import LiveColumnWindow
+
+__all__ = [
+    "AdmissionPolicy", "_ADMISSION",
+    "ArrivalProcess", "_ARRIVALS", "build_arrivals",
+    "LiveColumnWindow",
+    "LiveLoop", "LiveReport", "default_per_round_cap", "serving_bound",
+]

@@ -46,8 +46,9 @@ Reachable from the front door as ``engine="sharded"``
 windowing and more than one device is visible (DESIGN.md §3.3).
 """
 
-from .driver import ShardedRunResult, execute_sharded
+from .driver import ShardedRunResult, ShardedStepper, execute_sharded
 from .mesh import pad_rows, resolve_devices, shard_mesh
 
-__all__ = ["ShardedRunResult", "execute_sharded", "resolve_devices",
+__all__ = ["ShardedRunResult", "ShardedStepper", "execute_sharded",
+           "resolve_devices",
            "shard_mesh", "pad_rows"]

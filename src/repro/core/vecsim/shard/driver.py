@@ -24,6 +24,11 @@ returned delivered matrix, per-round series, ``NetStats``, per-message
 aggregates, ``peak_live`` and overflow behavior equal the windowed
 engine's exactly, at every device count — asserted by
 ``tests/test_vecsim_shard.py`` and the differential fuzz suite.
+
+Like the windowed engine, the segment loop is exposed as a stepper
+(:class:`ShardedStepper`, one ``advance()`` per segment) so the live
+serving front door (``vecsim.live``) can interleave admission control
+between segments; :func:`execute_sharded` is the one-shot wrapper.
 """
 
 from __future__ import annotations
@@ -44,7 +49,7 @@ from .spanner import (INT16_LIMIT, STATE_KEYS, resolve_scan,
                       resolve_shard_backend, shard_fast_span_runner,
                       shard_retire_kernels, shard_span_runner)
 
-__all__ = ["ShardedRunResult", "execute_sharded"]
+__all__ = ["ShardedRunResult", "ShardedStepper", "execute_sharded"]
 
 
 @dataclass
@@ -164,6 +169,344 @@ class _SegmentStager:
         return out
 
 
+class ShardedStepper:
+    """The sharded engine, one segment per :meth:`advance` call — the
+    device-mesh twin of :class:`~repro.core.vecsim.stream.WindowedStepper`
+    with identical stepping semantics.  ``cw`` optionally supplies an
+    externally-built :class:`ColumnWindow` (the live front door passes
+    its growable subclass; when that window flags ``mutable_schedule``
+    the scanned path skips cross-segment schedule prefetch, since the
+    next segment's traffic is not yet admitted while this one runs)."""
+
+    def __init__(self, scn: VecScenario, window: int,
+                 n_devices: Optional[int] = None,
+                 horizon: Optional[int] = None, seg_len: int = 32,
+                 snapshot_round: Optional[int] = None,
+                 collect: str = "auto",
+                 backend: str = "jax",
+                 scan: str = "auto",
+                 profile: bool = False,
+                 cw: Optional[ColumnWindow] = None):
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        self._jax = jax
+        self.backend = backend = resolve_shard_backend(backend)
+        self.scan = scan = resolve_scan(scan)
+        self.d = d = resolve_devices(n_devices)
+        self.mesh = shard_mesh(d)
+        self.w = w = int(window)
+        if w < 1:
+            raise ValueError("window must be >= 1")
+        self.seg_len = seg_len = max(1, int(seg_len))
+        self.scn = scn
+        self.horizon = None if horizon is None else int(horizon)
+        self.snapshot_round = snapshot_round
+        n = scn.n
+        self.n_pad = n_pad = pad_rows(n, d)
+        self.rounds = rounds = scn.rounds
+        self.pc = pc = scn.mode == "pc"
+        self.gating = gating = scn.n_adds > 0
+
+        self.cw = cw = cw if cw is not None else ColumnWindow(
+            scn, w, horizon=horizon)
+        self.m_app = cw.m_app_cap
+        self.m_total = m_total = self.m_app + scn.n_adds
+        if collect == "auto":
+            collect = ("full" if n * max(m_total, 1) <= (1 << 26)
+                       else "aggregate")
+        if collect not in ("full", "aggregate"):
+            raise ValueError(f"unknown collect mode {collect!r}")
+        self.collect = collect
+
+        self.row = row = NamedSharding(self.mesh, P("shard"))
+        self.rep = rep = NamedSharding(self.mesh, P())
+        st0 = _padded_state(scn, w, n_pad)
+        self.state = tuple(jax.device_put(st0[key], row)
+                           for key in STATE_KEYS)
+        if scan == "on":
+            # host mirror of the (padded) topology tables, advanced past
+            # each segment's add/rm events so the fast body's inverse
+            # tables are always built from the segment-entry topology
+            self.topo_adj = st0["adj"].copy()
+            self.topo_delay = st0["delay"].copy()
+            self.topo_active = st0["active"].copy()
+        del st0
+
+        self.series = np.zeros((rounds, len(SERIES_FIELDS)), np.int64)
+        self.delivered_full = (np.full((n, m_total), -1, np.int32)
+                               if collect == "full" else None)
+        self.deliv_count = np.zeros(m_total, np.int64)
+        self.deliv_round_sum = np.zeros(m_total, np.int64)
+        self.bcast_done = np.zeros(self.m_app, bool)
+        self.expired = np.zeros(m_total, bool)
+        self.first_receipts = 0
+        self.lat_sum = 0
+        self.lat_cnt = 0
+        self.snapshot: Optional[Dict[str, np.ndarray]] = None
+        self.seg_profile: Optional[List[dict]] = [] if profile else None
+        self._clock = time.perf_counter
+        self.t = 0
+
+        self.caps = cw.segment_caps(rounds, seg_len)
+        self.runner = shard_span_runner(d, scn.k, pc, scn.always_gate,
+                                        scn.pong_delay, gating=gating,
+                                        backend=backend, scan=scan == "on")
+        self.reduce_run, self.apply_run = shard_retire_kernels(d)
+        self.rounds_dev = jax.device_put(np.int32(rounds), rep)
+
+        if scan == "on":
+            self.caps_r = cw.round_caps(rounds)
+            self.stager = _SegmentStager(cw, self.caps_r, seg_len, rounds,
+                                         lambda a: jax.device_put(a, rep))
+            # The fast body needs the gating machinery quiescent for the
+            # whole run (gate/flush/ping state can straddle segments)
+            # and the arrival clock to fit int16; per segment it
+            # additionally needs a topology-quiescent span (no add/rm
+            # events).
+            max_dl = int(max(self.topo_delay.max(initial=1),
+                             scn.add_delay.max(initial=1)))
+            self.fast_allowed = (not (pc and gating)
+                                 and rounds + max_dl < INT16_LIMIT - 1)
+            self.fast_tabs: Optional[tuple] = None
+            # inverse tables keyed by topology content: quiescent
+            # stretches between (or cycling through) churn events
+            # rebuild nothing
+            self.tab_cache: Dict[bytes, tuple] = {}
+
+    @property
+    def done(self) -> bool:
+        return self.t >= self.rounds
+
+    def _seg_topo_events(self, lo: int, hi: int):
+        cw = self.cw
+        a0, a1 = np.searchsorted(cw.add_round_s, [lo, hi])
+        r0, r1 = np.searchsorted(cw.rm_round_s, [lo, hi])
+        return int(a0), int(a1), int(r0), int(r1)
+
+    def _apply_topo_events(self, lo: int, hi: int) -> None:
+        """Advance the host topology mirror past segment ``[lo, hi)``
+        (same event semantics as the round body's phases 1-2: additions
+        set adj/delay/active, removals deactivate in place)."""
+        cw = self.cw
+        a0, a1, r0, r1 = self._seg_topo_events(lo, hi)
+        if a1 > a0:
+            self.topo_adj[cw.add_p_s[a0:a1], cw.add_k_s[a0:a1]] = \
+                cw.add_q_s[a0:a1]
+            self.topo_delay[cw.add_p_s[a0:a1], cw.add_k_s[a0:a1]] = \
+                cw.add_delay_s[a0:a1]
+            self.topo_active[cw.add_p_s[a0:a1], cw.add_k_s[a0:a1]] = True
+        if r1 > r0:
+            self.topo_active[cw.rm_p_s[r0:r1], cw.rm_k_s[r0:r1]] = False
+        if a1 > a0 or r1 > r0:
+            self.fast_tabs = None
+
+    def _fast_runner_and_tables(self):
+        jax = self._jax
+        if self.fast_tabs is None:
+            key = topology_digest(self.topo_adj, self.topo_delay,
+                                  self.topo_active)
+            ent = self.tab_cache.get(key)
+            if ent is None:
+                sig, tabs = inverse_tables(self.topo_adj, self.topo_delay,
+                                           self.topo_active)
+                ent = (sig, tuple(jax.device_put(tb, self.row)
+                                  for tb in tabs))
+                if len(self.tab_cache) >= 16:
+                    self.tab_cache.pop(next(iter(self.tab_cache)))
+                self.tab_cache[key] = ent
+            self.fast_tabs = ent
+        sig, tabs = self.fast_tabs
+        return shard_fast_span_runner(self.d, sig), tabs
+
+    def host_state(self) -> Dict[str, np.ndarray]:
+        return {key: np.asarray(v)[: self.scn.n]
+                for key, v in zip(STATE_KEYS, self.state)}
+
+    def _column_origins(self) -> np.ndarray:
+        """Per-column broadcast origin (app columns only; -1 elsewhere),
+        so the reduce kernel's owner shard can answer bcast_done."""
+        cw = self.cw
+        origins = np.full(self.w, -1, np.int32)
+        app = cw.slot_app & (cw.slot_msg >= 0)
+        if app.any():
+            origins[app] = cw.bc_origin[cw.slot_msg[app]]
+        return origins
+
+    def _run_segment(self, lo: int, hi: int):
+        """Dispatch segment ``[lo, hi)``; returns the (device) stats
+        rows and, on the scanned path, the fused retirement aggregates.
+        """
+        jax, cw, seg_len = self._jax, self.cw, self.seg_len
+        t0 = self._clock()
+        if self.scan == "off":
+            ts = np.full(seg_len, -3, np.int32)
+            ts[: hi - lo] = np.arange(lo, hi, dtype=np.int32)
+            ts_dev = jax.device_put(ts, self.rep)
+            padded = cw.padded_schedule(lo, hi, self.caps)
+            sched_dev = {f.name: jax.device_put(getattr(padded, f.name),
+                                                self.rep)
+                         for f in SlotSchedule.__dataclass_fields__
+                         .values()}
+            t1 = self._clock()
+            self.state, stats = self.runner(self.state, sched_dev, ts_dev)
+            red = None
+            fast = False
+        else:
+            a0, a1, r0, r1 = self._seg_topo_events(lo, hi)
+            origins_dev = jax.device_put(self._column_origins(), self.rep)
+            fast = self.fast_allowed and a1 == a0 and r1 == r0
+            if fast:
+                frun, tabs = self._fast_runner_and_tables()
+                sched_dev = self.stager.stage(lo, hi)
+                ia = np.packbits(
+                    np.concatenate([cw.slot_app,
+                                    np.zeros((-self.w) % 8, bool)]),
+                    bitorder="little")
+                ia_dev = self.stager._stage("__ia_pack", ia)
+                t1 = self._clock()
+                self.state, stats, red = frun(
+                    self.state, tabs, ia_dev,
+                    {key: sched_dev[key]
+                     for key in ("bc_round", "bc_origin", "bc_slot",
+                                 "cr_round", "cr_pid")},
+                    sched_dev["ts"], origins_dev, self.rounds_dev)
+            else:
+                sched_dev = self.stager.stage(lo, hi)
+                ts_dev = sched_dev.pop("ts")
+                t1 = self._clock()
+                self.state, stats, red = self.runner(
+                    self.state, sched_dev, ts_dev, origins_dev,
+                    self.rounds_dev)
+            self._apply_topo_events(lo, hi)
+        if self.seg_profile is not None:
+            self.seg_profile.append(dict(lo=lo, hi=hi, fast=fast,
+                                         stage_s=t1 - t0,
+                                         dispatch_s=self._clock() - t1))
+        return stats, red
+
+    def _record_and_free(self, cols: np.ndarray, by_expiry: np.ndarray,
+                         red, hung: np.ndarray) -> None:
+        """Fold retired columns into the host aggregates and recycle
+        their device-side planes — the sharded twin of the windowed
+        driver's ``_record_and_free``."""
+        if not len(cols):
+            return
+        cw = self.cw
+        cnt, arrcnt, sumdel, _, _, _, _, bdone = red
+        ids = cw.slot_msg[cols]
+        self.deliv_count[ids] = cnt[cols]
+        self.deliv_round_sum[ids] = sumdel[cols].astype(np.int64)
+        self.expired[ids] |= by_expiry
+        self.first_receipts += int(arrcnt[cols].sum())
+        app = cw.slot_app[cols]
+        if self.delivered_full is not None:
+            self.delivered_full[:, ids] = \
+                np.asarray(self.state[1][:, cols])[: self.scn.n]
+        retire = np.zeros(self.w, bool)
+        retire[cols] = True
+        if app.any():
+            acols = cols[app]
+            births = cw.slot_birth[acols].astype(np.int64)
+            self.lat_sum += int((sumdel[acols] - cnt[acols] * births).sum())
+            self.lat_cnt += int(cnt[acols].sum())
+            self.bcast_done[ids[app]] = bdone[acols] > 0
+        self.state = self.apply_run(self.state, retire,
+                                    retire & cw.slot_app, hung)
+        cw.free_cols(cols)
+
+    def _retire(self, t_now: int, red_dev=None) -> int:
+        """Retire columns from the fused segment aggregates (scanned
+        path) or a standalone ``reduce_run`` dispatch (per-round path
+        and the drain)."""
+        cw, w = self.cw, self.w
+        live = cw.slot_msg >= 0
+        if not live.any():
+            return 0
+        if red_dev is None:
+            red_dev = self.reduce_run(self.state, self._column_origins(),
+                                      self.rounds_dev)
+        red = tuple(np.asarray(x) for x in red_dev)
+        cnt, arrcnt, sumdel, alive, alivedel, blockcnt, refcnt, bdone = red
+        full_del = alivedel == int(alive)
+        blocked = (blockcnt > 0) & cw.slot_app
+        ref = refcnt > 0
+        dead = (cnt == 0) & (cw.slot_birth < t_now)
+        done = live & ~ref & ((full_del & ~blocked) | dead)
+        by_exp = np.zeros(w, bool)
+        hung = np.zeros(w, bool)
+        if self.horizon is not None:
+            by_exp = live & ~done & (t_now - cw.slot_birth > self.horizon)
+            hung = by_exp & ref
+            done |= by_exp
+        cols = np.nonzero(done)[0]
+        self._record_and_free(cols, by_exp[cols], red, hung)
+        return len(cols)
+
+    def advance(self) -> int:
+        """Run one segment (activate -> dispatch -> retire); returns the
+        new current round.  May raise
+        :class:`~repro.core.vecsim.stream.WindowOverflowError` from
+        ``activate`` with the engine state untouched since the previous
+        segment boundary."""
+        t = self.t
+        if t >= self.rounds:
+            return t
+        t_end = min(t + self.seg_len, self.rounds)
+        if self.snapshot_round is not None and t <= self.snapshot_round:
+            t_end = min(t_end, self.snapshot_round + 1)
+        t_end = self.cw.activate(t, t_end)
+        stats_dev, red_dev = self._run_segment(t, t_end)
+        if self.scan == "on" and not self.cw.mutable_schedule:
+            # stage segment k+1's activation-independent schedule fields
+            # while segment k executes on the mesh (pre-scripted runs
+            # only: a live window admits segment k+1's traffic after
+            # this segment completes, so there is nothing to prefetch)
+            self.stager.prefetch(t_end)
+        t0 = self._clock()
+        self.series[t:t_end] = np.asarray(stats_dev, np.int64)[: t_end - t]
+        if (self.snapshot_round is not None
+                and t_end - 1 == self.snapshot_round):
+            self.snapshot = self.host_state()
+            self.snapshot["is_app"] = self.cw.slot_app.copy()
+            self.snapshot["slot_msg"] = self.cw.slot_msg.copy()
+        t1 = self._clock()
+        self._retire(t_end, red_dev)
+        if self.seg_profile is not None:
+            self.seg_profile[-1]["block_s"] = t1 - t0
+            self.seg_profile[-1]["retire_s"] = self._clock() - t1
+        self.t = t_end
+        return t_end
+
+    def finish(self) -> ShardedRunResult:
+        """Drain still-live columns and build the run result.  Whatever
+        is still live keeps its end-of-run values, exactly like the
+        windowed engine at ``t == rounds``.  The final boundary sweep
+        often freed every column (apply_run mutated the state after the
+        fused reduce, so its aggregates cannot be reused); skip the
+        standalone reduce dispatch entirely when nothing is live."""
+        cw = self.cw
+        live_cols = cw.live_cols()
+        if len(live_cols):
+            red = tuple(np.asarray(x)
+                        for x in self.reduce_run(self.state,
+                                                 self._column_origins(),
+                                                 self.rounds_dev))
+            self._record_and_free(live_cols,
+                                  np.zeros(len(live_cols), bool), red,
+                                  np.zeros(self.w, bool))
+        stats = stats_from_series(self.series, self.first_receipts)
+        return ShardedRunResult(
+            scenario=self.scn, window=self.w, backend=self.backend,
+            stats=stats, series=self.series, delivered=self.delivered_full,
+            deliv_count=self.deliv_count, bcast_done=self.bcast_done,
+            expired=self.expired, state=self.host_state(),
+            snapshot=self.snapshot, peak_live=cw.peak_live,
+            lat_sum=self.lat_sum, lat_cnt=self.lat_cnt,
+            deliv_round_sum=self.deliv_round_sum,
+            n_devices=self.d, scan=self.scan, seg_profile=self.seg_profile)
+
+
 def execute_sharded(scn: VecScenario, window: int,
                     n_devices: Optional[int] = None,
                     horizon: Optional[int] = None, seg_len: int = 32,
@@ -197,273 +540,10 @@ def execute_sharded(scn: VecScenario, window: int,
 
     This is the engine implementation behind ``repro.api.run`` with
     ``engine="sharded"``; prefer the front door in new code."""
-    import jax
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    backend = resolve_shard_backend(backend)
-    scan = resolve_scan(scan)
-
-    d = resolve_devices(n_devices)
-    mesh = shard_mesh(d)
-    w = int(window)
-    if w < 1:
-        raise ValueError("window must be >= 1")
-    seg_len = max(1, int(seg_len))
-    n, m_app, m_total = scn.n, scn.m_app, scn.m_total
-    n_pad = pad_rows(n, d)
-    rounds = scn.rounds
-    pc = scn.mode == "pc"
-    gating = scn.n_adds > 0
-    if collect == "auto":
-        collect = "full" if n * max(m_total, 1) <= (1 << 26) else "aggregate"
-    if collect not in ("full", "aggregate"):
-        raise ValueError(f"unknown collect mode {collect!r}")
-
-    cw = ColumnWindow(scn, w, horizon=horizon)
-    row = NamedSharding(mesh, P("shard"))
-    rep = NamedSharding(mesh, P())
-    st0 = _padded_state(scn, w, n_pad)
-    state = tuple(jax.device_put(st0[key], row) for key in STATE_KEYS)
-    if scan == "on":
-        # host mirror of the (padded) topology tables, advanced past
-        # each segment's add/rm events so the fast body's inverse
-        # tables are always built from the segment-entry topology
-        topo_adj = st0["adj"].copy()
-        topo_delay = st0["delay"].copy()
-        topo_active = st0["active"].copy()
-    del st0
-
-    series = np.zeros((rounds, len(SERIES_FIELDS)), np.int64)
-    delivered_full = (np.full((n, m_total), -1, np.int32)
-                      if collect == "full" else None)
-    deliv_count = np.zeros(m_total, np.int64)
-    bcast_done = np.zeros(m_app, bool)
-    expired = np.zeros(m_total, bool)
-    first_receipts = 0
-    lat_sum = 0
-    lat_cnt = 0
-    snapshot: Optional[Dict[str, np.ndarray]] = None
-    seg_profile: Optional[List[dict]] = [] if profile else None
-    clock = time.perf_counter
-
-    caps = cw.segment_caps(rounds, seg_len)
-    runner = shard_span_runner(d, scn.k, pc, scn.always_gate,
-                               scn.pong_delay, gating=gating,
-                               backend=backend, scan=scan == "on")
-    reduce_run, apply_run = shard_retire_kernels(d)
-    rounds_dev = jax.device_put(np.int32(rounds), rep)
-
-    if scan == "on":
-        caps_r = cw.round_caps(rounds)
-        stager = _SegmentStager(cw, caps_r, seg_len, rounds,
-                                lambda a: jax.device_put(a, rep))
-        # The fast body needs the gating machinery quiescent for the
-        # whole run (gate/flush/ping state can straddle segments) and
-        # the arrival clock to fit int16; per segment it additionally
-        # needs a topology-quiescent span (no add/rm events).
-        max_dl = int(max(topo_delay.max(initial=1),
-                         scn.add_delay.max(initial=1)))
-        fast_allowed = (not (pc and gating)
-                        and rounds + max_dl < INT16_LIMIT - 1)
-        fast_tabs: Optional[tuple] = None
-        # inverse tables keyed by topology content: quiescent stretches
-        # between (or cycling through) churn events rebuild nothing
-        tab_cache: Dict[bytes, tuple] = {}
-
-    def seg_topo_events(lo: int, hi: int):
-        a0, a1 = np.searchsorted(cw.add_round_s, [lo, hi])
-        r0, r1 = np.searchsorted(cw.rm_round_s, [lo, hi])
-        return int(a0), int(a1), int(r0), int(r1)
-
-    def apply_topo_events(lo: int, hi: int) -> None:
-        """Advance the host topology mirror past segment ``[lo, hi)``
-        (same event semantics as the round body's phases 1-2: additions
-        set adj/delay/active, removals deactivate in place)."""
-        nonlocal fast_tabs
-        a0, a1, r0, r1 = seg_topo_events(lo, hi)
-        if a1 > a0:
-            topo_adj[cw.add_p_s[a0:a1], cw.add_k_s[a0:a1]] = \
-                cw.add_q_s[a0:a1]
-            topo_delay[cw.add_p_s[a0:a1], cw.add_k_s[a0:a1]] = \
-                cw.add_delay_s[a0:a1]
-            topo_active[cw.add_p_s[a0:a1], cw.add_k_s[a0:a1]] = True
-        if r1 > r0:
-            topo_active[cw.rm_p_s[r0:r1], cw.rm_k_s[r0:r1]] = False
-        if a1 > a0 or r1 > r0:
-            fast_tabs = None
-
-    def fast_runner_and_tables():
-        nonlocal fast_tabs
-        if fast_tabs is None:
-            key = topology_digest(topo_adj, topo_delay, topo_active)
-            ent = tab_cache.get(key)
-            if ent is None:
-                sig, tabs = inverse_tables(topo_adj, topo_delay,
-                                           topo_active)
-                ent = (sig, tuple(jax.device_put(tb, row) for tb in tabs))
-                if len(tab_cache) >= 16:
-                    tab_cache.pop(next(iter(tab_cache)))
-                tab_cache[key] = ent
-            fast_tabs = ent
-        sig, tabs = fast_tabs
-        return shard_fast_span_runner(d, sig), tabs
-
-    def host_state() -> Dict[str, np.ndarray]:
-        return {key: np.asarray(v)[:n] for key, v in zip(STATE_KEYS, state)}
-
-    def column_origins() -> np.ndarray:
-        """Per-column broadcast origin (app columns only; -1 elsewhere),
-        so the reduce kernel's owner shard can answer bcast_done."""
-        origins = np.full(w, -1, np.int32)
-        app = cw.slot_app & (cw.slot_msg >= 0)
-        if app.any():
-            origins[app] = scn.bcast_origin[cw.slot_msg[app]]
-        return origins
-
-    def run_segment(lo: int, hi: int):
-        """Dispatch segment ``[lo, hi)``; returns the (device) stats
-        rows and, on the scanned path, the fused retirement aggregates.
-        """
-        nonlocal state
-        t0 = clock()
-        if scan == "off":
-            ts = np.full(seg_len, -3, np.int32)
-            ts[: hi - lo] = np.arange(lo, hi, dtype=np.int32)
-            ts_dev = jax.device_put(ts, rep)
-            padded = cw.padded_schedule(lo, hi, caps)
-            sched_dev = {f.name: jax.device_put(getattr(padded, f.name),
-                                                rep)
-                         for f in SlotSchedule.__dataclass_fields__
-                         .values()}
-            t1 = clock()
-            state, stats = runner(state, sched_dev, ts_dev)
-            red = None
-            fast = False
-        else:
-            a0, a1, r0, r1 = seg_topo_events(lo, hi)
-            origins_dev = jax.device_put(column_origins(), rep)
-            fast = fast_allowed and a1 == a0 and r1 == r0
-            if fast:
-                frun, tabs = fast_runner_and_tables()
-                sched_dev = stager.stage(lo, hi)
-                ia = np.packbits(
-                    np.concatenate([cw.slot_app,
-                                    np.zeros((-w) % 8, bool)]),
-                    bitorder="little")
-                ia_dev = stager._stage("__ia_pack", ia)
-                t1 = clock()
-                state, stats, red = frun(
-                    state, tabs, ia_dev,
-                    {key: sched_dev[key]
-                     for key in ("bc_round", "bc_origin", "bc_slot",
-                                 "cr_round", "cr_pid")},
-                    sched_dev["ts"], origins_dev, rounds_dev)
-            else:
-                sched_dev = stager.stage(lo, hi)
-                ts_dev = sched_dev.pop("ts")
-                t1 = clock()
-                state, stats, red = runner(state, sched_dev, ts_dev,
-                                           origins_dev, rounds_dev)
-            apply_topo_events(lo, hi)
-        if seg_profile is not None:
-            seg_profile.append(dict(lo=lo, hi=hi, fast=fast,
-                                    stage_s=t1 - t0,
-                                    dispatch_s=clock() - t1))
-        return stats, red
-
-    def record_and_free(cols: np.ndarray, by_expiry: np.ndarray,
-                        red, hung: np.ndarray) -> None:
-        """Fold retired columns into the host aggregates and recycle
-        their device-side planes — the sharded twin of the windowed
-        driver's ``record_and_free``."""
-        nonlocal state, first_receipts, lat_sum, lat_cnt
-        if not len(cols):
-            return
-        cnt, arrcnt, sumdel, _, _, _, _, bdone = red
-        ids = cw.slot_msg[cols]
-        deliv_count[ids] = cnt[cols]
-        expired[ids] |= by_expiry
-        first_receipts += int(arrcnt[cols].sum())
-        app = cw.slot_app[cols]
-        if delivered_full is not None:
-            delivered_full[:, ids] = np.asarray(state[1][:, cols])[:n]
-        retire = np.zeros(w, bool)
-        retire[cols] = True
-        if app.any():
-            acols = cols[app]
-            births = cw.slot_birth[acols].astype(np.int64)
-            lat_sum += int((sumdel[acols] - cnt[acols] * births).sum())
-            lat_cnt += int(cnt[acols].sum())
-            bcast_done[ids[app]] = bdone[acols] > 0
-        state = apply_run(state, retire, retire & cw.slot_app, hung)
-        cw.free_cols(cols)
-
-    def retire(t_now: int, red_dev=None) -> int:
-        """Retire columns from the fused segment aggregates (scanned
-        path) or a standalone ``reduce_run`` dispatch (per-round path
-        and the drain)."""
-        live = cw.slot_msg >= 0
-        if not live.any():
-            return 0
-        if red_dev is None:
-            red_dev = reduce_run(state, column_origins(), rounds_dev)
-        red = tuple(np.asarray(x) for x in red_dev)
-        cnt, arrcnt, sumdel, alive, alivedel, blockcnt, refcnt, bdone = red
-        full_del = alivedel == int(alive)
-        blocked = (blockcnt > 0) & cw.slot_app
-        ref = refcnt > 0
-        dead = (cnt == 0) & (cw.slot_birth < t_now)
-        done = live & ~ref & ((full_del & ~blocked) | dead)
-        by_exp = np.zeros(w, bool)
-        hung = np.zeros(w, bool)
-        if horizon is not None:
-            by_exp = live & ~done & (t_now - cw.slot_birth > horizon)
-            hung = by_exp & ref
-            done |= by_exp
-        cols = np.nonzero(done)[0]
-        record_and_free(cols, by_exp[cols], red, hung)
-        return len(cols)
-
-    t = 0
-    while t < rounds:
-        t_end = min(t + seg_len, rounds)
-        if snapshot_round is not None and t <= snapshot_round:
-            t_end = min(t_end, snapshot_round + 1)
-        t_end = cw.activate(t, t_end)
-        stats_dev, red_dev = run_segment(t, t_end)
-        if scan == "on":
-            # stage segment k+1's activation-independent schedule fields
-            # while segment k executes on the mesh
-            stager.prefetch(t_end)
-        t0 = clock()
-        series[t:t_end] = np.asarray(stats_dev, np.int64)[: t_end - t]
-        if snapshot_round is not None and t_end - 1 == snapshot_round:
-            snapshot = host_state()
-            snapshot["is_app"] = cw.slot_app.copy()
-            snapshot["slot_msg"] = cw.slot_msg.copy()
-        t1 = clock()
-        retire(t_end, red_dev)
-        if seg_profile is not None:
-            seg_profile[-1]["block_s"] = t1 - t0
-            seg_profile[-1]["retire_s"] = clock() - t1
-        t = t_end
-
-    # Drain: whatever is still live keeps its end-of-run values, exactly
-    # like the windowed engine at t == rounds.  The final boundary sweep
-    # often freed every column (apply_run mutated the state after the
-    # fused reduce, so its aggregates cannot be reused); skip the
-    # standalone reduce dispatch entirely when nothing is live.
-    live_cols = cw.live_cols()
-    if len(live_cols):
-        red = tuple(np.asarray(x)
-                    for x in reduce_run(state, column_origins(), rounds_dev))
-        record_and_free(live_cols, np.zeros(len(live_cols), bool), red,
-                        np.zeros(w, bool))
-
-    stats = stats_from_series(series, first_receipts)
-    return ShardedRunResult(
-        scenario=scn, window=w, backend=backend, stats=stats, series=series,
-        delivered=delivered_full, deliv_count=deliv_count,
-        bcast_done=bcast_done, expired=expired, state=host_state(),
-        snapshot=snapshot, peak_live=cw.peak_live, lat_sum=lat_sum,
-        lat_cnt=lat_cnt, n_devices=d, scan=scan, seg_profile=seg_profile)
+    stepper = ShardedStepper(scn, window, n_devices=n_devices,
+                             horizon=horizon, seg_len=seg_len,
+                             snapshot_round=snapshot_round, collect=collect,
+                             backend=backend, scan=scan, profile=profile)
+    while not stepper.done:
+        stepper.advance()
+    return stepper.finish()

@@ -38,6 +38,11 @@ of dropping whatever late activity the column still had.
 Memory is O(N·W) regardless of how many messages the schedule carries,
 which is what lets one host sustain millions of broadcasts at N ≥ 10k
 (``benchmarks/bench_throughput.py``).
+
+The segment loop itself lives in :class:`WindowedStepper` — one
+``advance()`` per segment — so a caller that interleaves work between
+segments (the live serving front door, ``vecsim.live``) drives the
+*same* engine code as the one-shot :func:`execute_windowed` wrapper.
 """
 
 from __future__ import annotations
@@ -55,7 +60,7 @@ from .sim import (SERIES_FIELDS, STACKED_SCHED_FIELDS, SlotSchedule,
                   stats_from_series)
 
 __all__ = ["WindowedRunResult", "WindowOverflowError", "ColumnWindow",
-           "run_vec_windowed", "execute_windowed"]
+           "WindowedStepper", "run_vec_windowed", "execute_windowed"]
 
 
 class WindowOverflowError(RuntimeError):
@@ -65,7 +70,13 @@ class WindowOverflowError(RuntimeError):
     column — with the round-granular horizon sweeps in
     :meth:`ColumnWindow.activate` it is the same round for every
     ``seg_len`` choice (the differential fuzz suite asserts exactly
-    that)."""
+    that).
+
+    The raise happens *before* any column assignment or schedule-cursor
+    movement, so the window (and with it the whole engine) is left
+    exactly as it was at the segment boundary: a caller may catch the
+    error, free up capacity (retire, shed, defer admissions) and call
+    ``activate`` again — the live serving loop's backpressure path."""
 
     def __init__(self, message: str, round: Optional[int] = None):
         super().__init__(message)
@@ -96,6 +107,11 @@ class WindowedRunResult:
     peak_live: int                  # max live columns ever resident
     lat_sum: int                    # sum of (deliver - broadcast) rounds
     lat_cnt: int                    # delivered (process, app msg) pairs
+    # (M_total,) sum of delivery rounds over the processes that
+    # delivered each message — with deliv_count this gives the
+    # per-message mean delivery round the live front door turns into
+    # rounds-to-delivery latency percentiles.
+    deliv_round_sum: Optional[np.ndarray] = None
 
     @property
     def m_app(self) -> int:
@@ -151,13 +167,22 @@ def _window_caps(rounds_arr: np.ndarray, total_rounds: int,
 class ColumnWindow:
     """Host-side live-column bookkeeping shared by the windowed drivers.
 
-    Owns the merged round-sorted activation stream (broadcasts + link
+    Owns the round-sorted activation streams (broadcasts + link
     additions), the column -> message assignment, the live high-water
     mark, and the segment-sliced slot-space schedules.  Both streaming
     drivers — the single-host engine below and the device-sharded engine
     (``vecsim.shard.driver``) — go through this one class, so they
     activate, overflow and peak in byte-identical ways; only the span
     execution and the retirement *mechanics* differ between them.
+
+    The broadcast stream is held in instance-owned ``bc_round`` /
+    ``bc_origin`` arrays (views of the scenario arrays for the
+    pre-scripted engines).  The live serving front door
+    (``vecsim.live``) subclasses with a growable admitted buffer and
+    appends broadcasts between segments; everything here routes through
+    ``self.bc_round[:self.m_bc]`` so both cases share one code path.
+    The global message-id space is split at ``m_app_cap``: app message
+    ``i`` is id ``i``, link-addition ping ``e`` is id ``m_app_cap + e``.
 
     ``horizon`` mirrors the drivers' force-expiry knob: when set,
     :meth:`activate` additionally caps every segment at the earliest
@@ -170,25 +195,25 @@ class ColumnWindow:
     overflow a window a shorter segment squeezed through.
     """
 
+    #: set by the live subclass: schedules may grow between segments,
+    #: so drivers must not prefetch/cache segment schedules ahead.
+    mutable_schedule = False
+
     def __init__(self, scn: VecScenario, window: int,
                  horizon: Optional[int] = None):
         self.scn = scn
         self.w = int(window)
         self.horizon = None if horizon is None else int(horizon)
         m_app = scn.m_app
-        # Merged activation stream: broadcasts then additions, round-
-        # sorted (stable in kind then index for same-round ties).
-        ev_round = np.concatenate([scn.bcast_round, scn.add_round])
-        ev_kind = np.concatenate([np.zeros(m_app, np.int8),
-                                  np.ones(scn.n_adds, np.int8)])
-        ev_idx = np.concatenate([np.arange(m_app, dtype=np.int64),
-                                 np.arange(scn.n_adds, dtype=np.int64)])
-        order = np.lexsort((ev_idx, ev_kind, ev_round))
-        self.ev_round = ev_round[order]
-        self.ev_kind = ev_kind[order]
-        self.ev_idx = ev_idx[order]
-        self.n_ev = len(self.ev_round)
-        self.next_ev = 0
+        # Broadcast activation stream (round-sorted by scenario
+        # construction).  Pre-scripted: a view of the scenario arrays,
+        # fully scheduled up front (m_bc == m_app).
+        self.bc_round = scn.bcast_round
+        self.bc_origin = scn.bcast_origin
+        self.m_bc = m_app           # broadcasts scheduled so far
+        self.m_app_cap = m_app      # id split: ping e -> m_app_cap + e
+        self.next_bc = 0            # first not-yet-activated broadcast
+        self.next_add = 0           # first not-yet-activated addition
         self.peak_live = 0
 
         self.slot_msg = np.full(self.w, -1, np.int64)   # global id, -1 = free
@@ -217,15 +242,14 @@ class ColumnWindow:
         self.cr_pid_s = scn.crash_pid[cr_ord]
 
     def seg_schedule(self, lo: int, hi: int) -> SlotSchedule:
-        scn = self.scn
-        b0, b1 = np.searchsorted(scn.bcast_round, [lo, hi])
+        b0, b1 = np.searchsorted(self.bc_round[: self.m_bc], [lo, hi])
         a0, a1 = np.searchsorted(self.add_round_s, [lo, hi])
         r0, r1 = np.searchsorted(self.rm_round_s, [lo, hi])
         c0, c1 = np.searchsorted(self.cr_round_s, [lo, hi])
         return SlotSchedule(
             is_app=self.slot_app,
-            bc_round=scn.bcast_round[b0:b1],
-            bc_origin=scn.bcast_origin[b0:b1],
+            bc_round=self.bc_round[b0:b1],
+            bc_origin=self.bc_origin[b0:b1],
             bc_slot=self.bc_live_slot[b0:b1],
             add_round=self.add_round_s[a0:a1],
             add_p=self.add_p_s[a0:a1], add_k=self.add_k_s[a0:a1],
@@ -243,7 +267,8 @@ class ColumnWindow:
         crashes) so every padded segment schedule reuses one jitted
         trace."""
         scn = self.scn
-        return (_window_caps(scn.bcast_round, total_rounds, seg_len),
+        return (_window_caps(self.bc_round[: self.m_bc], total_rounds,
+                             seg_len),
                 _window_caps(scn.add_round, total_rounds, seg_len),
                 _window_caps(scn.rm_round, total_rounds, seg_len),
                 _window_caps(scn.crash_round, total_rounds, seg_len))
@@ -289,7 +314,6 @@ class ColumnWindow:
         fields of segment k+1 while segment k executes; ``bc_slot``,
         ``add_slot`` and ``is_app`` depend on column assignment and can
         only be staged after ``activate``)."""
-        scn = self.scn
         out: Dict[str, np.ndarray] = {}
 
         def fill(rs, cap, cols):
@@ -311,8 +335,8 @@ class ColumnWindow:
                 buf[row, pos] = src[i0:i1]
                 out[name] = buf
 
-        fill(scn.bcast_round, caps[0], {
-            "bc_round": scn.bcast_round, "bc_origin": scn.bcast_origin,
+        fill(self.bc_round[: self.m_bc], caps[0], {
+            "bc_round": self.bc_round, "bc_origin": self.bc_origin,
             "bc_slot": lambda: self.bc_live_slot})
         fill(self.add_round_s, caps[1], {
             "add_round": self.add_round_s, "add_p": self.add_p_s,
@@ -328,11 +352,43 @@ class ColumnWindow:
             out["is_app"] = self.slot_app
         return out
 
+    def _assign(self, free: np.ndarray, nb_a: int, na_a: int) -> None:
+        """Bind the next ``nb_a`` broadcasts and ``na_a`` additions to
+        the leading free columns, in merged round order (broadcasts
+        before additions on round ties, original index order within a
+        kind — the stable lexsort is what keeps the column -> message
+        mapping byte-identical run to run)."""
+        n_assign = nb_a + na_a
+        b0, a0 = self.next_bc, self.next_add
+        r_all = np.concatenate([
+            self.bc_round[b0: b0 + nb_a],
+            self.add_round_s[a0: a0 + na_a]]).astype(np.int64)
+        kind = np.zeros(n_assign, np.int8)
+        kind[nb_a:] = 1
+        order = np.lexsort((kind, r_all))
+        col = np.empty(n_assign, np.int64)
+        col[order] = free[:n_assign]
+        bc_cols, add_cols = col[:nb_a], col[nb_a:]
+        bc_ids = np.arange(b0, b0 + nb_a)
+        self.slot_msg[bc_cols] = bc_ids
+        self.slot_birth[bc_cols] = self.bc_round[b0: b0 + nb_a]
+        self.slot_app[bc_cols] = True
+        self.bc_live_slot[bc_ids] = bc_cols
+        add_idx = self.add_ord[a0: a0 + na_a]
+        self.slot_msg[add_cols] = self.m_app_cap + add_idx
+        self.slot_birth[add_cols] = self.add_round_s[a0: a0 + na_a]
+        self.slot_app[add_cols] = False
+        self.add_live_slot[add_idx] = add_cols
+        self.next_bc = b0 + nb_a
+        self.next_add = a0 + na_a
+
     def activate(self, t: int, t_end: int) -> int:
         """Assign free columns to events due before ``t_end``; returns
         the (possibly shortened) segment end.  Raises
         :class:`WindowOverflowError` when the buffer is already full at
-        ``t`` with an event due.  Also tracks the live high-water mark.
+        ``t`` with an event due — *before* touching any state, so the
+        window is re-enterable after a catch (the live loop's
+        backpressure path).  Also tracks the live high-water mark.
 
         When a horizon is set the returned segment end is additionally
         capped at the earliest expiry-due round of any live column
@@ -342,28 +398,30 @@ class ColumnWindow:
         choice, which is what lets the fuzz suite assert full
         seg_len-invariance instead of skipping overflowing draws.
         """
-        m_app = self.scn.m_app
-        if self.next_ev < self.n_ev and self.ev_round[self.next_ev] < t_end:
+        b_hi = self.next_bc + int(np.searchsorted(
+            self.bc_round[self.next_bc: self.m_bc], t_end))
+        a_hi = int(np.searchsorted(self.add_round_s, t_end))
+        nb, na = b_hi - self.next_bc, a_hi - self.next_add
+        if nb or na:
             free = np.nonzero(self.slot_msg < 0)[0]
-            due = self.next_ev
-            while (due < self.n_ev and self.ev_round[due] < t_end
-                   and due - self.next_ev < len(free)):
-                col = int(free[due - self.next_ev])
-                kind, idx = int(self.ev_kind[due]), int(self.ev_idx[due])
-                self.slot_msg[col] = idx if kind == 0 else m_app + idx
-                self.slot_birth[col] = self.ev_round[due]
-                self.slot_app[col] = kind == 0
-                if kind == 0:
-                    self.bc_live_slot[idx] = col
-                else:
-                    self.add_live_slot[idx] = col
-                due += 1
-            self.next_ev = due
-            if self.next_ev < self.n_ev and self.ev_round[self.next_ev] < t_end:
-                # buffer full with events still due: stop the segment
-                # just before the first blocked event and retry after
-                # the next retirement sweep.
-                blocked_at = int(self.ev_round[self.next_ev])
+            kfree = len(free)
+            nb_a, na_a = nb, na
+            if nb + na > kfree:
+                # The merged stream blocks: find the round of the first
+                # event that does not fit BEFORE mutating anything, so
+                # an overflow raise leaves the window untouched.  The
+                # (kfree+1)-th smallest merged (round, kind) key lives
+                # within the first kfree+1 events of each stream, so
+                # the scratch stays O(W) even with a deep backlog.
+                bs = self.bc_round[
+                    self.next_bc: min(b_hi, self.next_bc + kfree + 1)]
+                as_ = self.add_round_s[
+                    self.next_add: min(a_hi, self.next_add + kfree + 1)]
+                keys = np.concatenate([bs.astype(np.int64) * 2,
+                                       as_.astype(np.int64) * 2 + 1])
+                keys.sort()
+                blocked_key = int(keys[kfree])
+                blocked_at = blocked_key >> 1
                 if blocked_at <= t:
                     raise WindowOverflowError(
                         f"window={self.w} cannot hold the live messages "
@@ -371,7 +429,20 @@ class ColumnWindow:
                         f"({int((self.slot_msg >= 0).sum())} live, "
                         f"next event needs a free column); raise the "
                         f"window or set a horizon", round=t)
+                # stop the segment just before the first blocked event
+                # and retry after the next retirement sweep; everything
+                # earlier in the merged order still fits.
                 t_end = blocked_at
+                if blocked_key & 1:      # first blocked event is an add
+                    nb_a = int(np.searchsorted(bs, blocked_at,
+                                               side="right"))
+                    na_a = kfree - nb_a
+                else:                    # first blocked event: broadcast
+                    na_a = int(np.searchsorted(as_, blocked_at,
+                                               side="left"))
+                    nb_a = kfree - na_a
+            if nb_a + na_a:
+                self._assign(free, nb_a, na_a)
         live = self.slot_msg >= 0
         if self.horizon is not None and live.any():
             # land the next boundary exactly on the earliest expiry-due
@@ -390,69 +461,92 @@ class ColumnWindow:
         self.slot_msg[cols] = -1
 
 
-def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
-                     horizon: Optional[int] = None, seg_len: int = 32,
-                     snapshot_round: Optional[int] = None,
-                     collect: str = "auto") -> WindowedRunResult:
-    """Run ``scn`` through a ``window``-column streaming buffer.
+class WindowedStepper:
+    """The windowed engine, one segment per :meth:`advance` call.
 
-    ``horizon`` — force-retire columns older than this many rounds
-    (default: never; exactness preserved).  ``seg_len`` — rounds per
-    jitted segment between retirement sweeps (also bounds how long a
-    finished column lingers before its slot recycles).  ``collect`` —
-    ``"full"`` keeps the (N, M_total) delivered matrix, ``"aggregate"``
-    keeps only per-message counters, ``"auto"`` picks by size.
+    Holds everything :func:`execute_windowed` used to keep in closure
+    scope — topology state, the :class:`ColumnWindow`, per-message
+    aggregates, the per-round series — and exposes the segment loop as
+    an explicit stepper so the live serving front door can interleave
+    admission control between segments while running byte-identical
+    engine code.  ``cw`` optionally supplies an externally-built
+    window (the live loop passes its growable subclass).
+    """
 
-    This is the engine implementation behind ``repro.api.run``; prefer
-    the front door (``repro.api.run(RunSpec(...))``) in new code."""
-    backend = resolve_backend(backend)
-    w = int(window)
-    if w < 1:
-        raise ValueError("window must be >= 1")
-    seg_len = max(1, int(seg_len))
-    n, m_app, m_total = scn.n, scn.m_app, scn.m_total
-    rounds = scn.rounds
-    pc = scn.mode == "pc"
-    # gates only ever open at link additions, so a scenario with none can
-    # skip the pong/flush phases in every segment (see sim.np_span)
-    gating = scn.n_adds > 0
-    if collect == "auto":
-        collect = "full" if n * max(m_total, 1) <= (1 << 26) else "aggregate"
-    if collect not in ("full", "aggregate"):
-        raise ValueError(f"unknown collect mode {collect!r}")
+    def __init__(self, scn: VecScenario, window: int, backend: str = "auto",
+                 horizon: Optional[int] = None, seg_len: int = 32,
+                 snapshot_round: Optional[int] = None,
+                 collect: str = "auto",
+                 cw: Optional[ColumnWindow] = None):
+        self.backend = backend = resolve_backend(backend)
+        self.w = w = int(window)
+        if w < 1:
+            raise ValueError("window must be >= 1")
+        self.seg_len = seg_len = max(1, int(seg_len))
+        self.scn = scn
+        self.horizon = None if horizon is None else int(horizon)
+        self.snapshot_round = snapshot_round
+        self.rounds = scn.rounds
+        self.pc = scn.mode == "pc"
+        # gates only ever open at link additions, so a scenario with
+        # none can skip the pong/flush phases in every segment
+        self.gating = scn.n_adds > 0
 
-    cw = ColumnWindow(scn, w, horizon=horizon)
-    st = init_topo_state(scn, w)
-    slot_msg, slot_birth, slot_app = cw.slot_msg, cw.slot_birth, cw.slot_app
+        self.cw = cw if cw is not None else ColumnWindow(
+            scn, w, horizon=horizon)
+        # the id space is the window's (the live subclass reserves
+        # capacity beyond the scenario's pre-scripted broadcasts)
+        self.m_app = self.cw.m_app_cap
+        self.m_total = self.m_app + scn.n_adds
+        n = scn.n
+        if collect == "auto":
+            collect = ("full" if n * max(self.m_total, 1) <= (1 << 26)
+                       else "aggregate")
+        if collect not in ("full", "aggregate"):
+            raise ValueError(f"unknown collect mode {collect!r}")
+        self.collect = collect
 
-    series = np.zeros((rounds, len(SERIES_FIELDS)), np.int64)
-    delivered_full = (np.full((n, m_total), -1, np.int32)
-                      if collect == "full" else None)
-    deliv_count = np.zeros(m_total, np.int64)
-    bcast_done = np.zeros(m_app, bool)
-    expired = np.zeros(m_total, bool)
-    first_receipts = 0
-    lat_sum = 0
-    lat_cnt = 0
-    snapshot: Optional[Dict[str, np.ndarray]] = None
+        self.st = init_topo_state(scn, w)
+        self.series = np.zeros((self.rounds, len(SERIES_FIELDS)), np.int64)
+        self.delivered_full = (np.full((n, self.m_total), -1, np.int32)
+                               if collect == "full" else None)
+        self.deliv_count = np.zeros(self.m_total, np.int64)
+        self.deliv_round_sum = np.zeros(self.m_total, np.int64)
+        self.bcast_done = np.zeros(self.m_app, bool)
+        self.expired = np.zeros(self.m_total, bool)
+        self.first_receipts = 0
+        self.lat_sum = 0
+        self.lat_cnt = 0
+        self.snapshot: Optional[Dict[str, np.ndarray]] = None
+        self.t = 0
 
-    if backend in ("jax", "pallas"):
-        import jax.numpy as jnp
+        if backend in ("jax", "pallas"):
+            import jax.numpy as jnp
 
-        from .sim import (sched_to_device, span_runner_for, state_to_device,
-                          state_to_host)
-        caps = cw.segment_caps(rounds, seg_len)
-        runner = span_runner_for(backend)(scn.k, pc, scn.always_gate,
-                                          scn.pong_delay, gating=gating)
+            from .sim import (sched_to_device, span_runner_for,
+                              state_to_device, state_to_host)
+            self._jnp = jnp
+            self._sched_to_device = sched_to_device
+            self._state_to_device = state_to_device
+            self._state_to_host = state_to_host
+            self._caps = self.cw.segment_caps(self.rounds, seg_len)
+            self._runner = span_runner_for(backend)(
+                scn.k, self.pc, scn.always_gate, scn.pong_delay,
+                gating=self.gating)
 
-    def run_segment(lo: int, hi: int) -> None:
-        if backend == "numpy":
-            np_span(st, cw.seg_schedule(lo, hi), lo, hi, series, pc=pc,
-                    always_gate=scn.always_gate, pong_delay=scn.pong_delay,
-                    gating=gating)
+    @property
+    def done(self) -> bool:
+        return self.t >= self.rounds
+
+    def _run_segment(self, lo: int, hi: int) -> None:
+        scn, st = self.scn, self.st
+        if self.backend == "numpy":
+            np_span(st, self.cw.seg_schedule(lo, hi), lo, hi, self.series,
+                    pc=self.pc, always_gate=scn.always_gate,
+                    pong_delay=scn.pong_delay, gating=self.gating)
             return
-        padded = cw.padded_schedule(lo, hi, caps)
-        ts = np.full(seg_len, -3, np.int32)
+        padded = self.cw.padded_schedule(lo, hi, self._caps)
+        ts = np.full(self.seg_len, -3, np.int32)
         ts[: hi - lo] = np.arange(lo, hi, dtype=np.int32)
         # The full state round-trips host<->device each segment so the
         # retirement sweep can run in numpy — a memcpy on the CPU
@@ -460,57 +554,66 @@ def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
         # of arr/delivered would dominate; moving the retirement
         # reductions and column resets device-side (pulling only the
         # (W,) retire mask) is the known next optimization.
-        state, stats = runner(state_to_device(st), sched_to_device(padded),
-                              jnp.asarray(ts))
-        st.update(state_to_host(state))
-        series[lo:hi] = np.asarray(stats, np.int64)[: hi - lo]
+        state, stats = self._runner(self._state_to_device(st),
+                                    self._sched_to_device(padded),
+                                    self._jnp.asarray(ts))
+        st.update(self._state_to_host(state))
+        self.series[lo:hi] = np.asarray(stats, np.int64)[: hi - lo]
 
-    def record_and_free(cols: np.ndarray, by_expiry: np.ndarray,
-                        red=None) -> None:
+    def _record_and_free(self, cols: np.ndarray, by_expiry: np.ndarray,
+                         red=None) -> None:
         """Fold retired columns into the aggregates and recycle them.
         When the pallas retirement sweep already reduced the planes
         (``red`` = the :func:`kernels.retire_reduce` columns), the
         delivery counts, first receipts and latency sums come from
         those five scalars per column instead of fresh plane reads."""
-        nonlocal first_receipts, lat_sum, lat_cnt
         if not len(cols):
             return
-        ids = slot_msg[cols]
+        st, cw = self.st, self.cw
+        ids = cw.slot_msg[cols]
         d = st["delivered"][:, cols]
-        app = slot_app[cols]
+        app = cw.slot_app[cols]
         if red is None:
-            deliv_count[ids] = (d >= 0).sum(axis=0)
-            first_receipts += int((st["arr"][:, cols] < rounds).sum())
+            d64 = d.astype(np.int64)
+            self.deliv_count[ids] = (d >= 0).sum(axis=0)
+            self.deliv_round_sum[ids] = np.where(d >= 0, d64, 0).sum(axis=0)
+            self.first_receipts += int((st["arr"][:, cols]
+                                        < self.rounds).sum())
             if app.any():
                 da = d[:, app]
                 got = da >= 0
-                lat_sum += int(
-                    (da - slot_birth[cols][app][None, :])[got].sum())
-                lat_cnt += int(got.sum())
+                self.lat_sum += int(
+                    (da - cw.slot_birth[cols][app][None, :])[got].sum())
+                self.lat_cnt += int(got.sum())
         else:
             cnt, arrcnt, sumdel = (x.astype(np.int64) for x in red)
-            deliv_count[ids] = cnt[cols]
-            first_receipts += int(arrcnt[cols].sum())
+            self.deliv_count[ids] = cnt[cols]
+            self.deliv_round_sum[ids] = sumdel[cols]
+            self.first_receipts += int(arrcnt[cols].sum())
             if app.any():
                 acols = cols[app]
-                births = slot_birth[acols].astype(np.int64)
-                lat_sum += int((sumdel[acols] - cnt[acols] * births).sum())
-                lat_cnt += int(cnt[acols].sum())
-        expired[ids] |= by_expiry
+                births = cw.slot_birth[acols].astype(np.int64)
+                self.lat_sum += int((sumdel[acols]
+                                     - cnt[acols] * births).sum())
+                self.lat_cnt += int(cnt[acols].sum())
+        self.expired[ids] |= by_expiry
         if app.any():
             st["ever_del"] |= (d[:, app] >= 0).any(axis=1)
             aidx = ids[app]
-            bcast_done[aidx] = (
-                st["delivered"][scn.bcast_origin[aidx], cols[app]] >= 0)
-        if delivered_full is not None:
-            delivered_full[:, ids] = d
+            self.bcast_done[aidx] = (
+                st["delivered"][cw.bc_origin[aidx], cols[app]] >= 0)
+        if self.delivered_full is not None:
+            self.delivered_full[:, ids] = d
         st["arr"][:, cols] = INF
         st["delivered"][:, cols] = -1
-        slot_msg[cols] = -1
+        cw.slot_msg[cols] = -1
 
-    def retire(t_now: int) -> int:
+    def _retire(self, t_now: int) -> int:
         """Retire every column the monolithic run could no longer touch
         (plus horizon expiries); returns how many were freed."""
+        st, cw, w = self.st, self.cw, self.w
+        slot_msg, slot_birth, slot_app = (cw.slot_msg, cw.slot_birth,
+                                          cw.slot_app)
         live = slot_msg >= 0
         if not live.any():
             return 0
@@ -519,20 +622,21 @@ def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
         alive = ~crashed
         gated = (gate >= 0) & active & ~crashed[:, None]
         red = None
-        if backend == "pallas":
+        if self.backend == "pallas":
             # The retirement-reduce kernel folds the per-column
             # reductions — total / alive-row delivery counts,
             # gate-window blockers, plus the record-side first-receipt
             # counts and delivered-round sums — into one pass over the
             # live planes; the retirement *decisions* stay host-side,
-            # identically to the numpy path, and ``record_and_free``
+            # identically to the numpy path, and ``_record_and_free``
             # consumes the same reduction instead of re-reading planes.
             from . import kernels as kx
             min_gate = np.where(gated, gate, INF).min(axis=1)
             cnt, alivedel, blockcnt, arrcnt, sumdel = (
                 np.asarray(x)
                 for x in kx.retire_reduce_jit()(st["arr"], delivered,
-                                                crashed, min_gate, rounds))
+                                                crashed, min_gate,
+                                                self.rounds))
             red = (cnt, arrcnt, sumdel)
             full_del = alivedel == int(alive.sum())
             blocked = (blockcnt > 0) & slot_app
@@ -552,8 +656,8 @@ def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
         dead = (cnt == 0) & (slot_birth < t_now)
         done = live & ~ref & ((full_del & ~blocked) | dead)
         by_exp = np.zeros(w, bool)
-        if horizon is not None:
-            by_exp = live & ~done & (t_now - slot_birth > horizon)
+        if self.horizon is not None:
+            by_exp = live & ~done & (t_now - slot_birth > self.horizon)
             hung = by_exp & ref
             if hung.any():
                 # a gate whose ping column is being force-expired can
@@ -566,35 +670,69 @@ def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
                 gate[sel], flush[sel], ping[sel] = -1, INF, -1
             done |= by_exp
         cols = np.nonzero(done)[0]
-        record_and_free(cols, by_exp[cols], red)
+        self._record_and_free(cols, by_exp[cols], red)
         return len(cols)
 
-    t = 0
-    while t < rounds:
-        t_end = min(t + seg_len, rounds)
-        if snapshot_round is not None and t <= snapshot_round:
-            t_end = min(t_end, snapshot_round + 1)
+    def advance(self) -> int:
+        """Run one segment (activate -> span -> retire); returns the new
+        current round.  May raise :class:`WindowOverflowError` from
+        ``activate`` with the engine state untouched since the previous
+        segment boundary."""
+        t = self.t
+        if t >= self.rounds:
+            return t
+        t_end = min(t + self.seg_len, self.rounds)
+        if self.snapshot_round is not None and t <= self.snapshot_round:
+            t_end = min(t_end, self.snapshot_round + 1)
         # Activate events due before t_end while free columns last.
-        t_end = cw.activate(t, t_end)
-        run_segment(t, t_end)
-        if snapshot_round is not None and t_end - 1 == snapshot_round:
-            snapshot = {key: v.copy() for key, v in st.items()}
-            snapshot["is_app"] = slot_app.copy()
-            snapshot["slot_msg"] = slot_msg.copy()
-        retire(t_end)
-        t = t_end
+        t_end = self.cw.activate(t, t_end)
+        self._run_segment(t, t_end)
+        if (self.snapshot_round is not None
+                and t_end - 1 == self.snapshot_round):
+            self.snapshot = {key: v.copy() for key, v in self.st.items()}
+            self.snapshot["is_app"] = self.cw.slot_app.copy()
+            self.snapshot["slot_msg"] = self.cw.slot_msg.copy()
+        self._retire(t_end)
+        self.t = t_end
+        return t_end
 
-    # Drain: whatever is still live keeps its end-of-run values, exactly
-    # like the monolithic matrices at t == rounds.
-    live_cols = np.nonzero(slot_msg >= 0)[0]
-    record_and_free(live_cols, np.zeros(len(live_cols), bool))
+    def finish(self) -> WindowedRunResult:
+        """Drain still-live columns and build the run result.  Whatever
+        is still live keeps its end-of-run values, exactly like the
+        monolithic matrices at ``t == rounds``."""
+        live_cols = np.nonzero(self.cw.slot_msg >= 0)[0]
+        self._record_and_free(live_cols, np.zeros(len(live_cols), bool))
+        stats = stats_from_series(self.series, self.first_receipts)
+        return WindowedRunResult(
+            scenario=self.scn, window=self.w, backend=self.backend,
+            stats=stats, series=self.series, delivered=self.delivered_full,
+            deliv_count=self.deliv_count, bcast_done=self.bcast_done,
+            expired=self.expired, state=self.st, snapshot=self.snapshot,
+            peak_live=self.cw.peak_live, lat_sum=self.lat_sum,
+            lat_cnt=self.lat_cnt, deliv_round_sum=self.deliv_round_sum)
 
-    stats = stats_from_series(series, first_receipts)
-    return WindowedRunResult(
-        scenario=scn, window=w, backend=backend, stats=stats, series=series,
-        delivered=delivered_full, deliv_count=deliv_count,
-        bcast_done=bcast_done, expired=expired, state=st, snapshot=snapshot,
-        peak_live=cw.peak_live, lat_sum=lat_sum, lat_cnt=lat_cnt)
+
+def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
+                     horizon: Optional[int] = None, seg_len: int = 32,
+                     snapshot_round: Optional[int] = None,
+                     collect: str = "auto") -> WindowedRunResult:
+    """Run ``scn`` through a ``window``-column streaming buffer.
+
+    ``horizon`` — force-retire columns older than this many rounds
+    (default: never; exactness preserved).  ``seg_len`` — rounds per
+    jitted segment between retirement sweeps (also bounds how long a
+    finished column lingers before its slot recycles).  ``collect`` —
+    ``"full"`` keeps the (N, M_total) delivered matrix, ``"aggregate"``
+    keeps only per-message counters, ``"auto"`` picks by size.
+
+    This is the engine implementation behind ``repro.api.run``; prefer
+    the front door (``repro.api.run(RunSpec(...))``) in new code."""
+    stepper = WindowedStepper(scn, window, backend=backend, horizon=horizon,
+                              seg_len=seg_len, snapshot_round=snapshot_round,
+                              collect=collect)
+    while not stepper.done:
+        stepper.advance()
+    return stepper.finish()
 
 
 def run_vec_windowed(scn: VecScenario, window: int, backend: str = "auto",
