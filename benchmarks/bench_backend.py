@@ -88,8 +88,8 @@ def rows(n: int = 2048, messages: int = 4096, rate: float = 64.0,
             jaxp["run_seconds"] / palp["run_seconds"], 3),
     )
     if out:
-        with open(out, "w") as fh:
-            json.dump(doc, fh, indent=2)
+        from repro.obs.report import write_bench_report
+        write_bench_report(out, "backend", doc)
     tag = f"n={n},m={messages},w={window}"
     out_rows = []
     for point in points:

@@ -29,7 +29,7 @@ import argparse
 
 from repro.api import (DynamicsSpec, MetricsSpec, RunSpec, TopologySpec,
                        TrafficSpec, WindowSpec, run)
-from repro.core.metrics import mean_shortest_path
+from repro.obs import mean_shortest_path
 from repro.core.vecsim import (full_out_mask, mean_shortest_path_vec,
                                safe_out_mask, unsafe_link_stats_vec)
 

@@ -84,11 +84,11 @@ def _steady_state(seg_profile, series):
 def run_point(n: int, devices: int, messages: int, rate: float,
               window: int, k: int, topology: str, traffic: str,
               seg_len: int, horizon: int | None, max_delay: int,
-              seed: int, scan: str = "auto") -> dict:
+              seed: int, scan: str = "auto", obs=None) -> dict:
     from dataclasses import replace
 
-    from repro.api import (RunSpec, ShardSpec, TopologySpec, TrafficSpec,
-                           WindowSpec, build_scenario, run)
+    from repro.api import (ObsSpec, RunSpec, ShardSpec, TopologySpec,
+                           TrafficSpec, WindowSpec, build_scenario, run)
     from repro.core.vecsim.shard import pad_rows
 
     spec = RunSpec(
@@ -97,7 +97,11 @@ def run_point(n: int, devices: int, messages: int, rate: float,
         topology=TopologySpec(kind=topology, k=k, max_delay=max_delay),
         traffic=TrafficSpec(kind=traffic, rate=rate, messages=messages),
         window=WindowSpec(window=window, seg_len=seg_len, horizon=horizon,
-                          collect="aggregate"))
+                          collect="aggregate"),
+        # throughput microbench: telemetry off by default so the
+        # committed floor keeps measuring the bare engine (the
+        # obs-overhead bench measures both sides explicitly)
+        obs=obs if obs is not None else ObsSpec(histograms=False))
     t0 = time.perf_counter()
     scn = build_scenario(spec.validate())
     build_s = time.perf_counter() - t0
@@ -158,8 +162,8 @@ def rows(n: int = 1 << 20, devices: int = 4, messages: int = 512,
                                 topology, traffic, seg_len, horizon,
                                 max_delay, seed, scan)
     if out:
-        with open(out, "w") as fh:
-            json.dump(point, fh, indent=2)
+        from repro.obs.report import write_bench_report
+        write_bench_report(out, "scale", point)
     if segments_out:
         with open(segments_out, "w") as fh:
             json.dump(dict(n=n, devices=point["devices"],
@@ -231,8 +235,8 @@ def main() -> None:
     ref = None
     if args.assert_floor is not None:
         # read the reference before --out can overwrite the same file
-        with open(args.floor_ref) as fh:
-            ref = json.load(fh)
+        from repro.obs.report import load_bench_report
+        ref = load_bench_report(args.floor_ref, kind="scale")
     point, csv = rows(args.n, args.devices, args.messages, args.rate,
                       args.window, args.k, args.topology, args.traffic,
                       args.seg_len, args.horizon, args.max_delay,

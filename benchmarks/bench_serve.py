@@ -113,8 +113,8 @@ def rows(n: int = 1 << 16, devices: int | None = None,
         capacity_p99=knee["p99"] if knee else None,
         points=points)
     if out:
-        with open(out, "w") as fh:
-            json.dump(doc, fh, indent=2)
+        from repro.obs.report import write_bench_report
+        write_bench_report(out, "serve", doc)
     csv = []
     for p in points:
         tag = f"n={n},rate={p['rate']:g}"
@@ -187,8 +187,8 @@ def main() -> None:
     ref = None
     if args.assert_floor is not None:
         # read the reference before --out can overwrite the same file
-        with open(args.floor_ref) as fh:
-            ref = json.load(fh)
+        from repro.obs.report import load_bench_report
+        ref = load_bench_report(args.floor_ref, kind="serve")
     rates = tuple(float(r) for r in args.rates.split(","))
     doc, csv = rows(args.n, args.devices, args.engine, args.scan,
                     args.arrivals, args.admission, rates, args.messages,

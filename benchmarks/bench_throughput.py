@@ -84,8 +84,8 @@ def rows(n: int = 5000, messages: int = 100_000, rate: float = 500.0,
     point = run_point(n, messages, rate, window, k, backend, topology,
                       traffic, seg_len, horizon, max_delay, seed)
     if out:
-        with open(out, "w") as fh:
-            json.dump(point, fh, indent=2)
+        from repro.obs.report import write_bench_report
+        write_bench_report(out, "throughput", point)
     us = point["run_seconds"] * 1e6
     tag = f"n={n},m={messages}"
     return [

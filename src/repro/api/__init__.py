@@ -22,23 +22,26 @@ the schema, the registry keys, and the auto-selection rule.
 
 from ..core.vecsim import TrafficModel
 from ..core.vecsim.live import AdmissionPolicy, ArrivalProcess, LiveReport
+from ..obs.sinks import MetricsSink
+from ..obs.spans import EngineObs
 from .registry import (ADMISSION, ARRIVALS, BACKENDS, ENGINES, PROTOCOLS,
-                       SCENARIOS, TOPOLOGIES, TRAFFIC, BackendEntry,
+                       SCENARIOS, SINKS, TOPOLOGIES, TRAFFIC, BackendEntry,
                        EngineEntry, ProtocolEntry, Registry, ScenarioEntry,
                        describe_entry)
 from .run import (RunReport, build_live_scenario, build_scenario, run,
                   select_engine)
-from .spec import (DynamicsSpec, LiveSpec, MetricsSpec, RunSpec, ShardSpec,
-                   SpecError, TopologySpec, TrafficSpec, WindowSpec)
+from .spec import (DynamicsSpec, LiveSpec, MetricsSpec, ObsSpec, RunSpec,
+                   ShardSpec, SpecError, TopologySpec, TrafficSpec,
+                   WindowSpec)
 
 __all__ = [
     "RunSpec", "TopologySpec", "TrafficSpec", "DynamicsSpec", "WindowSpec",
-    "ShardSpec", "LiveSpec", "MetricsSpec", "SpecError",
+    "ShardSpec", "LiveSpec", "MetricsSpec", "ObsSpec", "SpecError",
     "run", "RunReport", "build_scenario", "build_live_scenario",
-    "select_engine", "LiveReport",
+    "select_engine", "LiveReport", "EngineObs", "MetricsSink",
     "Registry", "ProtocolEntry", "EngineEntry", "BackendEntry",
     "ScenarioEntry", "TrafficModel", "ArrivalProcess", "AdmissionPolicy",
     "describe_entry",
     "PROTOCOLS", "ENGINES", "BACKENDS", "TOPOLOGIES", "TRAFFIC",
-    "SCENARIOS", "ARRIVALS", "ADMISSION",
+    "SCENARIOS", "ARRIVALS", "ADMISSION", "SINKS",
 ]

@@ -18,7 +18,8 @@ import json
 import sys
 
 from . import (ADMISSION, ARRIVALS, BACKENDS, ENGINES, PROTOCOLS, SCENARIOS,
-               TOPOLOGIES, TRAFFIC, RunSpec, SpecError, describe_entry, run)
+               SINKS, TOPOLOGIES, TRAFFIC, RunSpec, SpecError,
+               describe_entry, run)
 
 
 def _spec_dict(src: str) -> dict:
@@ -107,6 +108,20 @@ def build_parser() -> argparse.ArgumentParser:
                      help="happens-before oracle check on the trace")
     met.add_argument("--crossval", action="store_true", default=None,
                      help="replay on the exact engine and compare")
+    obs = ap.add_argument_group("observability")
+    obs.add_argument("--trace-out", metavar="PATH",
+                     help="write structured trace spans as Perfetto-"
+                          "loadable Chrome trace JSON (implies span "
+                          "recording)")
+    obs.add_argument("--metrics-out", metavar="PATH",
+                     help="write the run's latency histogram / gauges / "
+                          "counters through the --sink writer")
+    obs.add_argument("--sink", choices=sorted(SINKS.keys()),
+                     help="metrics sink format for --metrics-out "
+                          "(default jsonl)")
+    obs.add_argument("--spans", action="store_true", default=None,
+                     help="record trace spans even without --trace-out "
+                          "(kept on report.obs.spans)")
     return ap
 
 
@@ -129,6 +144,9 @@ _FLAG_MAP = [
     ("admit_cap", "live", "per_round_cap"),
     ("slo_p99", "live", "slo_p99"),
     ("oracle", "metrics", "oracle"), ("crossval", "metrics", "crossval"),
+    ("trace_out", "obs", "trace_out"),
+    ("metrics_out", "obs", "metrics_out"),
+    ("sink", "obs", "sink"), ("spans", "obs", "spans"),
 ]
 
 
@@ -163,7 +181,8 @@ def print_registries() -> None:
                            ("topologies", TOPOLOGIES), ("traffic", TRAFFIC),
                            ("scenarios (dynamics kinds)", SCENARIOS),
                            ("arrivals (live mode)", ARRIVALS),
-                           ("admission (live mode)", ADMISSION)):
+                           ("admission (live mode)", ADMISSION),
+                           ("sinks (--metrics-out formats)", SINKS)):
         print(f"{name}:")
         for key in sorted(registry.keys()):
             desc = describe_entry(registry.get(key))

@@ -25,12 +25,13 @@ from typing import Any, Callable, Dict, Iterable, Optional
 
 from ..core.vecsim import scenario as _scn
 from ..core.vecsim.live import _ADMISSION, _ARRIVALS
+from ..obs.sinks import SINKS as _SINKS
 from .spec import RunSpec, SpecError
 
 __all__ = ["Registry", "ProtocolEntry", "EngineEntry", "BackendEntry",
            "ScenarioEntry", "PROTOCOLS", "ENGINES", "BACKENDS",
            "TOPOLOGIES", "TRAFFIC", "SCENARIOS", "ARRIVALS", "ADMISSION",
-           "describe_entry"]
+           "SINKS", "describe_entry"]
 
 
 class Registry:
@@ -95,6 +96,9 @@ SCENARIOS = Registry("scenario")
 # LiveLoop (and vice versa).
 ARRIVALS = Registry("arrivals", items=_ARRIVALS)
 ADMISSION = Registry("admission", items=_ADMISSION)
+# Telemetry export sinks (ObsSpec.sink), shared live with repro.obs so a
+# MetricsSink registered here is immediately usable by --metrics-out.
+SINKS = Registry("sink", items=_SINKS)
 
 
 # --------------------------------------------------------------------- #

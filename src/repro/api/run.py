@@ -33,7 +33,6 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
-from ..core.metrics import overhead_per_message
 from ..core.oracle import OracleReport, check_trace
 from ..core.types import NetStats
 from ..core.vecsim import crossval as _crossval
@@ -43,7 +42,11 @@ from ..core.vecsim.metrics import build_trace
 from ..core.vecsim.scenario import VecScenario
 from ..core.vecsim.sim import execute_vec, resolve_backend
 from ..core.vecsim.vc import run_vec_vc
-from .registry import ENGINES, PROTOCOLS, SCENARIOS, EngineEntry
+from ..obs.graphs import overhead_per_message
+from ..obs.hist import percentiles_from_hist
+from ..obs.sinks import write_chrome_trace
+from ..obs.spans import EngineObs
+from .registry import ENGINES, PROTOCOLS, SCENARIOS, SINKS, EngineEntry
 from .spec import RunSpec, SpecError
 
 __all__ = ["RunReport", "run", "build_scenario", "select_engine",
@@ -71,6 +74,7 @@ class RunReport:
     result: Any = None         # the raw engine result object
     scenario: Any = None       # the VecScenario that ran
     live: Optional[LiveReport] = None   # serving report (mode="live")
+    obs: Any = None            # EngineObs telemetry accumulator (or None)
 
     def to_dict(self) -> Dict[str, Any]:
         """JSON-safe summary (drops the raw result and scenario)."""
@@ -200,7 +204,7 @@ def _latency_from_trace(trace) -> float:
 
 
 def _run_exact(spec: RunSpec, scn: VecScenario, window: Optional[int],
-               snapshot_round: Optional[int]):
+               snapshot_round: Optional[int], obs=None):
     net = _crossval.run_exact(scn, seed=spec.seed, protocol=spec.protocol,
                               snapshot_round=snapshot_round)
     n_bcast = sum(1 for _, kind, _, _ in net.trace if kind == "broadcast")
@@ -237,7 +241,7 @@ def _vec_extras(spec: RunSpec, res) -> Dict[str, float]:
 
 
 def _run_vec(spec: RunSpec, scn: VecScenario, window: Optional[int],
-             snapshot_round: Optional[int]):
+             snapshot_round: Optional[int], obs=None):
     if spec.protocol == "vc":
         if snapshot_round is not None:
             raise SpecError("metrics.snapshot is not supported for the "
@@ -252,14 +256,14 @@ def _run_vec(spec: RunSpec, scn: VecScenario, window: Optional[int],
 
 
 def _run_windowed(spec: RunSpec, scn: VecScenario, window: Optional[int],
-                  snapshot_round: Optional[int]):
+                  snapshot_round: Optional[int], obs=None):
     if window is None:
         # explicit engine="windowed" without a window: apply the budget rule
         window = _auto_window(spec, scn)
     res = _stream.execute_windowed(
         scn, window, backend=spec.backend, horizon=spec.window.horizon,
         seg_len=spec.window.seg_len, snapshot_round=snapshot_round,
-        collect=spec.window.collect)
+        collect=spec.window.collect, obs=obs)
     extras = _vec_extras(spec, res)
     extras["peak_live"] = res.peak_live
     extras["expired_columns"] = int(res.expired.sum())
@@ -268,7 +272,7 @@ def _run_windowed(spec: RunSpec, scn: VecScenario, window: Optional[int],
 
 
 def _run_sharded(spec: RunSpec, scn: VecScenario, window: Optional[int],
-                 snapshot_round: Optional[int]):
+                 snapshot_round: Optional[int], obs=None):
     if spec.protocol == "vc":
         raise SpecError("protocol 'vc' has no sharded engine (its "
                         "delivery drain is a data-dependent host loop); "
@@ -283,7 +287,7 @@ def _run_sharded(spec: RunSpec, scn: VecScenario, window: Optional[int],
         scn, window, n_devices=devices, horizon=spec.window.horizon,
         seg_len=spec.window.seg_len, snapshot_round=snapshot_round,
         collect=spec.window.collect, backend=spec.backend,
-        scan=spec.shard.scan, profile=spec.shard.profile)
+        scan=spec.shard.scan, profile=spec.shard.profile, obs=obs)
     extras = _vec_extras(spec, res)
     extras["peak_live"] = res.peak_live
     extras["expired_columns"] = int(res.expired.sum())
@@ -317,6 +321,81 @@ ENGINES.register("sharded", EngineEntry(
     "shard.scan=auto|on|off picks whole-segment lax.scan vs per-round "
     "stepping, shard.profile=True records per-segment timings",
     _run_sharded))
+
+
+# --------------------------------------------------------------------- #
+# Telemetry plumbing (repro.obs; DESIGN.md §2.10)
+# --------------------------------------------------------------------- #
+def _build_obs(spec: RunSpec, engine_name: str,
+               live: bool = False) -> Optional[EngineObs]:
+    """The :class:`EngineObs` accumulator a run threads through its
+    engine, or None when every telemetry pillar is off — the engines
+    then trace exactly the pre-telemetry program (the overhead gate in
+    CI holds them to it)."""
+    ob = spec.obs
+    hist = ob.histograms
+    if hist is None:
+        # auto: on wherever an engine can feed it (the streaming
+        # engines' retire reductions, and every live run)
+        hist = live or engine_name in ("windowed", "sharded")
+    spans = bool(ob.spans or ob.trace_out is not None)
+    if not live and not hist and not spans and ob.metrics_out is None:
+        return None
+    return EngineObs(histograms=hist, spans=spans,
+                     span_capacity=ob.span_capacity)
+
+
+def _obs_extras(obs: Optional[EngineObs], extras: Dict[str, float]) -> None:
+    """Histogram-derived latency percentiles and telemetry counters into
+    the report extras."""
+    if obs is None:
+        return
+    total = int(obs.latency_hist.sum())
+    if obs.histograms and total > 0:
+        p50, p99, p999 = percentiles_from_hist(
+            obs.latency_hist, (50.0, 99.0, 99.9))
+        extras["latency_p50"] = p50
+        extras["latency_p99"] = p99
+        extras["latency_p999"] = p999
+        extras["latency_hist_total"] = total
+    for name, value in obs.counters.items():
+        extras[name] = value
+
+
+def _metrics_doc(spec: RunSpec, report: "RunReport",
+                 obs: EngineObs) -> dict:
+    """The sink-agnostic telemetry doc a metrics sink serializes."""
+    return dict(
+        run=dict(engine=report.engine, backend=report.backend,
+                 mode=spec.mode, protocol=spec.protocol, n=report.n,
+                 m_app=report.m_app, rounds=report.rounds,
+                 seed=spec.seed),
+        summary=dict(
+            wall_seconds=report.wall_seconds,
+            delivered_frac=report.delivered_frac,
+            mean_latency=report.mean_latency,
+            **{k: v for k, v in report.extras.items()
+               if isinstance(v, (int, float))}),
+        gauges={k: list(v) for k, v in obs.gauges.items()},
+        counters=dict(obs.counters),
+        latency_hist=(obs.latency_hist
+                      if obs.histograms and obs.latency_hist.sum() > 0
+                      else None))
+
+
+def _write_obs_outputs(spec: RunSpec, report: "RunReport") -> None:
+    ob, obs = spec.obs, report.obs
+    if obs is None:
+        return
+    if ob.metrics_out is not None:
+        SINKS.get(ob.sink).write(ob.metrics_out,
+                                 _metrics_doc(spec, report, obs))
+    if ob.trace_out is not None:
+        try:
+            run_args = spec.to_dict()
+        except SpecError:
+            run_args = {"scenario": "prebuilt"}
+        write_chrome_trace(ob.trace_out, obs.spans, run_args=run_args)
 
 
 # --------------------------------------------------------------------- #
@@ -357,6 +436,7 @@ def _select_live_engine(spec: RunSpec, scn: VecScenario
 def _run_live(spec: RunSpec, on_tick=None) -> RunReport:
     scn = build_live_scenario(spec)
     engine_name, window = _select_live_engine(spec, scn)
+    obs = _build_obs(spec, engine_name, live=True)
     lv = spec.live
     arrival_params = dict(rate_lo=lv.rate_lo, period=lv.period,
                           duty=lv.duty)
@@ -369,7 +449,7 @@ def _run_live(spec: RunSpec, on_tick=None) -> RunReport:
         queue_cap=lv.queue_cap, per_round_cap=lv.per_round_cap,
         slo_p99=lv.slo_p99, seed=spec.seed,
         arrival_params=arrival_params, profile=spec.shard.profile,
-        on_tick=on_tick)
+        obs=obs, on_tick=on_tick)
     lr = loop.run()
     res = lr.result
 
@@ -385,6 +465,7 @@ def _run_live(spec: RunSpec, on_tick=None) -> RunReport:
         extras["serve_" + key] = v
     if lr.slo_ok is not None:
         extras["serve_slo_ok"] = int(lr.slo_ok)
+    _obs_extras(obs, extras)
 
     report = RunReport(
         spec=spec, engine=engine_name,
@@ -394,7 +475,7 @@ def _run_live(spec: RunSpec, on_tick=None) -> RunReport:
         m_app=lr.scenario.m_app, rounds=lr.scenario.rounds,
         stats=res.stats, delivered_frac=lr.delivered_frac,
         mean_latency=res.mean_latency(), extras=extras, result=res,
-        scenario=lr.scenario, live=lr)
+        scenario=lr.scenario, live=lr, obs=obs)
     # the live result is re-indexed to the admitted scenario, so the
     # batch-mode checkers run on it unchanged
     if spec.metrics.oracle:
@@ -403,6 +484,7 @@ def _run_live(spec: RunSpec, on_tick=None) -> RunReport:
         report.crossval_ok = _check_crossval(spec, lr.scenario,
                                              report.window, engine_name,
                                              res)
+    _write_obs_outputs(spec, report)
     return report
 
 
@@ -421,11 +503,13 @@ def run(spec: RunSpec, on_tick=None) -> RunReport:
     engine_name, window = select_engine(spec, scn)
     snapshot_round = _snapshot_round(spec, scn)
     runner = ENGINES.get(engine_name)
+    obs = _build_obs(spec, engine_name)
 
     t0 = time.perf_counter()
     result, stats, frac, latency, extras = runner(spec, scn, window,
-                                                  snapshot_round)
+                                                  snapshot_round, obs=obs)
     wall = time.perf_counter() - t0
+    _obs_extras(obs, extras)
 
     if engine_name == "exact":
         backend = "object"
@@ -442,13 +526,14 @@ def run(spec: RunSpec, on_tick=None) -> RunReport:
                 if engine_name in ("windowed", "sharded") else None),
         wall_seconds=wall, n=scn.n, m_app=scn.m_app, rounds=scn.rounds,
         stats=stats, delivered_frac=frac, mean_latency=latency,
-        extras=extras, result=result, scenario=scn)
+        extras=extras, result=result, scenario=scn, obs=obs)
 
     if spec.metrics.oracle:
         report.oracle = _check_oracle(spec, scn, engine_name, result)
     if spec.metrics.crossval:
         report.crossval_ok = _check_crossval(spec, scn, report.window,
                                              engine_name, result)
+    _write_obs_outputs(spec, report)
     return report
 
 

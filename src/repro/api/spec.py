@@ -21,7 +21,8 @@ from dataclasses import dataclass, field, replace
 from typing import Any, Dict, Optional, Union
 
 __all__ = ["SpecError", "TopologySpec", "TrafficSpec", "DynamicsSpec",
-           "WindowSpec", "ShardSpec", "MetricsSpec", "LiveSpec", "RunSpec"]
+           "WindowSpec", "ShardSpec", "MetricsSpec", "LiveSpec",
+           "ObsSpec", "RunSpec"]
 
 
 class SpecError(ValueError):
@@ -140,6 +141,32 @@ class LiveSpec:
 
 
 @dataclass(frozen=True)
+class ObsSpec:
+    """Telemetry knobs (``repro.obs``; DESIGN.md §2.10).
+
+    ``histograms=None`` (the default) turns the on-device
+    delivery-latency histogram on wherever an engine supports it (the
+    streaming windowed/sharded engines and every live run) and off on
+    the monolithic/exact engines; an explicit bool forces it.  Results
+    are byte-identical either way — the histogram rides the existing
+    per-column aggregate reductions.
+
+    ``spans`` records structured trace spans (live-loop ticks, segment
+    stage/dispatch/block/retire phases, stager uploads) into a
+    preallocated ring; ``trace_out`` writes them as Perfetto-loadable
+    Chrome trace JSON and implies ``spans=True``.  ``metrics_out``
+    writes the run's histogram/gauge/counter doc through the named
+    ``sink`` (registry: ``repro.api.SINKS``)."""
+
+    histograms: Optional[bool] = None   # None = auto per engine
+    spans: bool = False                 # record trace spans
+    span_capacity: int = 65536          # span ring size (events)
+    trace_out: Optional[str] = None     # Chrome trace JSON (implies spans)
+    metrics_out: Optional[str] = None   # metrics doc path (via `sink`)
+    sink: str = "jsonl"                 # repro.api.SINKS key
+
+
+@dataclass(frozen=True)
 class MetricsSpec:
     """What to measure beyond the engine's NetStats."""
 
@@ -168,6 +195,7 @@ class RunSpec:
     shard: ShardSpec = field(default_factory=ShardSpec)
     live: LiveSpec = field(default_factory=LiveSpec)
     metrics: MetricsSpec = field(default_factory=MetricsSpec)
+    obs: ObsSpec = field(default_factory=ObsSpec)
     # Escape hatch: run a prebuilt VecScenario (topology/traffic/dynamics
     # sections are then ignored).  Used by the legacy shims and tests.
     scenario: Optional[Any] = None
@@ -285,6 +313,17 @@ class RunSpec:
             raise SpecError("protocol 'vc' is numpy-only (the delivery "
                             "drain is a data-dependent host loop); use "
                             "backend='numpy' or 'auto'")
+        if self.obs.histograms is not None \
+                and not isinstance(self.obs.histograms, bool):
+            raise SpecError(f"obs.histograms={self.obs.histograms!r} "
+                            "must be a bool or None (auto)")
+        if not isinstance(self.obs.span_capacity, int) \
+                or isinstance(self.obs.span_capacity, bool) \
+                or self.obs.span_capacity < 1:
+            raise SpecError(f"obs.span_capacity="
+                            f"{self.obs.span_capacity!r} must be an "
+                            "int >= 1")
+        check_key(reg.SINKS, self.obs.sink, "obs.sink")
         snap = self.metrics.snapshot
         if snap is not None and not (isinstance(snap, int)
                                      or snap == "last_churn"):
@@ -343,7 +382,7 @@ class RunSpec:
         sections = dict(topology=TopologySpec, traffic=TrafficSpec,
                         dynamics=DynamicsSpec, window=WindowSpec,
                         shard=ShardSpec, live=LiveSpec,
-                        metrics=MetricsSpec)
+                        metrics=MetricsSpec, obs=ObsSpec)
         kw: Dict[str, Any] = {}
         top_fields = {f.name for f in dataclasses.fields(cls)}
         for key, value in d.items():

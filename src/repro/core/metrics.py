@@ -1,19 +1,21 @@
-"""Protocol metrics: safe-graph path lengths, unsafe links, overhead.
+"""Deprecation shim: these metrics moved to :mod:`repro.obs.graphs`.
 
-These back the Table 1 and Fig. 7 reproductions:
-  * ``mean_shortest_path`` — BFS over the *safe-link* graph (PC-broadcast
-    excludes links still in their buffering phase, R-broadcast uses all);
-  * ``unsafe_link_stats`` — unsafe links / buffered messages per process;
-  * ``overhead_per_message`` — control bytes per app message sent.
+Kept so external callers of ``repro.core.metrics`` keep working; the
+implementations live in ``repro.obs`` with the rest of the telemetry
+subsystem.  Importing this module warns with
+:class:`~repro.core.types.LegacyEntryPointWarning` — CI escalates that
+category to an error, so nothing shipped in this repo imports through
+here.
 """
 
 from __future__ import annotations
 
-import statistics
-from collections import deque
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+import warnings
 
-from .events import Network
+from ..obs.graphs import (_bfs_depths, full_graph, mean_shortest_path,
+                          overhead_per_message, safe_graph,
+                          unsafe_link_stats)
+from .types import LegacyEntryPointWarning
 
 __all__ = [
     "safe_graph",
@@ -23,85 +25,8 @@ __all__ = [
     "overhead_per_message",
 ]
 
-
-def safe_graph(net: Network) -> Dict[int, List[int]]:
-    """Adjacency restricted to links the protocol will actually use (Q)."""
-    g: Dict[int, List[int]] = {}
-    for pid, proc in net.procs.items():
-        if getattr(proc, "crashed", False):
-            continue
-        g[pid] = [q for q in getattr(proc, "Q", ()) if not
-                  getattr(net.procs.get(q), "crashed", False)]
-    return g
-
-
-def full_graph(net: Network) -> Dict[int, List[int]]:
-    """Adjacency over all alive links regardless of safety."""
-    g: Dict[int, List[int]] = {}
-    for pid, proc in net.procs.items():
-        if getattr(proc, "crashed", False):
-            continue
-        g[pid] = [q for q in net.neighbors(pid) if not
-                  getattr(net.procs.get(q), "crashed", False)]
-    return g
-
-
-def _bfs_depths(g: Dict[int, List[int]], src: int) -> Dict[int, int]:
-    depth = {src: 0}
-    dq = deque([src])
-    while dq:
-        u = dq.popleft()
-        for v in g.get(u, ()):
-            if v not in depth:
-                depth[v] = depth[u] + 1
-                dq.append(v)
-    return depth
-
-
-def mean_shortest_path(g: Dict[int, List[int]], sources: Sequence[int],
-                       unreachable_penalty: Optional[float] = None) -> float:
-    """Mean hops from ``sources`` to every reachable process.
-
-    This is the paper's Fig. 7 (top) metric: the expected hop count of a
-    broadcast before reaching everyone; x transmission delay = expected
-    delivery latency."""
-    total, count = 0.0, 0
-    n = len(g)
-    for s in sources:
-        depth = _bfs_depths(g, s)
-        for pid in g:
-            if pid == s:
-                continue
-            d = depth.get(pid)
-            if d is None:
-                if unreachable_penalty is not None:
-                    total += unreachable_penalty
-                    count += 1
-                continue
-            total += d
-            count += 1
-    return total / count if count else float("nan")
-
-
-def unsafe_link_stats(net: Network) -> Tuple[float, float, int]:
-    """(mean unsafe links/process, mean buffered msgs/process, max buffer)."""
-    unsafe, buffered, mx = [], [], 0
-    for proc in net.procs.values():
-        if getattr(proc, "crashed", False) or not hasattr(proc, "B"):
-            continue
-        sizes = [len(ent[1]) for ent in proc.B.values()]
-        unsafe.append(len(proc.B))
-        buffered.append(sum(sizes))
-        if sizes:
-            mx = max(mx, max(sizes))
-    return (
-        statistics.fmean(unsafe) if unsafe else 0.0,
-        statistics.fmean(buffered) if buffered else 0.0,
-        mx,
-    )
-
-
-def overhead_per_message(net: Network) -> float:
-    """Mean causality-control bytes per message sent on FIFO links."""
-    sent = net.stats.sent_messages
-    return net.stats.control_bytes / sent if sent else 0.0
+warnings.warn(
+    "repro.core.metrics moved to repro.obs (import safe_graph, "
+    "mean_shortest_path, overhead_per_message... from repro.obs or "
+    "repro.obs.graphs)",
+    LegacyEntryPointWarning, stacklevel=2)

@@ -55,8 +55,8 @@ from ..scenario import INF
 
 __all__ = ["fused_sweep_kernel", "deliver_sweep_kernel",
            "frontier_sweep_kernel", "retire_scan_kernel",
-           "retire_reduce_kernel", "slot_frontier_kernel",
-           "ring_apply_kernel"]
+           "retire_reduce_kernel", "latency_hist_kernel",
+           "slot_frontier_kernel", "ring_apply_kernel"]
 
 _INF = np.int32(INF)
 
@@ -198,6 +198,28 @@ def retire_reduce_kernel(crashed_ref, min_gate_ref, rounds_ref, arr_ref,
         jnp.int32)
     sumdel_ref[0, :] = jnp.where(got, delivered, 0).sum(axis=0).astype(
         jnp.int32)
+
+
+def latency_hist_kernel(base_ref, delivered_ref, hist_ref, *, nb: int):
+    """Per-column log-bucketed delivery-latency counts over one tile.
+
+    Implements the ``repro.obs.hist`` bucket contract (16 exact buckets
+    then power-of-two decades) with integer comparisons only, so the
+    counts are byte-identical to the numpy/jnp bucketings.  Rows that
+    never delivered (``delivered < 0``) and columns with no latency
+    base (``base < 0``: ping columns, padding) count nowhere."""
+    delivered = delivered_ref[...]
+    base = base_ref[...]
+    valid = (delivered >= 0) & (base >= 0)[None, :]
+    lat = delivered - base[None, :]
+    extra = jnp.zeros(lat.shape, jnp.int32)
+    for k in range(5, 20):
+        extra = extra + (lat >= (1 << k)).astype(jnp.int32)
+    bidx = jnp.where(lat < 16, jnp.clip(lat, 0, 15),
+                     jnp.minimum(16 + extra, nb - 1))
+    for b in range(nb):
+        hist_ref[:, b] = ((bidx == b) & valid).sum(axis=0).astype(
+            jnp.int32)
 
 
 def slot_frontier_kernel(t_ref, gate_ref, delay_ref, do_ref, fwd_ref,

@@ -31,9 +31,9 @@ from ..scenario import INF
 __all__ = ["PallasUnavailableError", "pallas_available", "require_pallas",
            "default_interpret", "deliver_sweep", "fused_sweep",
            "frontier_sweep", "retire_scan", "retire_scan_jit",
-           "retire_reduce", "retire_reduce_jit", "slot_frontier",
-           "ring_apply", "pack_columns", "unpack_columns",
-           "popcount_bytes"]
+           "retire_reduce", "retire_reduce_jit", "latency_hist",
+           "latency_hist_jit", "slot_frontier", "ring_apply",
+           "pack_columns", "unpack_columns", "popcount_bytes"]
 
 _INF = np.int32(INF)
 
@@ -354,6 +354,45 @@ def retire_reduce_jit(block_w: Optional[int] = None,
     :func:`retire_scan_jit`)."""
     import jax
     return jax.jit(functools.partial(retire_reduce, block_w=block_w,
+                                     interpret=interpret))
+
+
+def latency_hist(base, delivered, *, block_w: Optional[int] = None,
+                 interpret: Optional[bool] = None):
+    """Per-column ``(W, NB)`` delivery-latency histogram: row p of
+    column m counts in bucket(delivered[p, m] - base[m]) when the row
+    delivered and the column carries a latency base (``base >= 0``).
+    The bucket layout is the ``repro.obs.hist`` contract."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    from ....obs.hist import NB
+    from .kernel import latency_hist_kernel
+    n, w = delivered.shape
+    wp, bw, nt = _tiles(w, block_w)
+    out = pl.pallas_call(
+        functools.partial(latency_hist_kernel, nb=NB),
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((bw,), lambda i: (i,)),
+            pl.BlockSpec((n, bw), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((bw, NB), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((wp, NB), jnp.int32),
+        interpret=_resolve(interpret),
+    )(_pad_cols(jnp.asarray(base, jnp.int32), wp, -1),
+      _pad_cols(jnp.asarray(delivered, jnp.int32), wp, -1))
+    return out[:w]
+
+
+@functools.lru_cache(maxsize=None)
+def latency_hist_jit(block_w: Optional[int] = None,
+                     interpret: Optional[bool] = None):
+    """Cached jitted :func:`latency_hist` (same treatment as
+    :func:`retire_reduce_jit`)."""
+    import jax
+    return jax.jit(functools.partial(latency_hist, block_w=block_w,
                                      interpret=interpret))
 
 

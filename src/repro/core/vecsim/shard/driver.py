@@ -39,6 +39,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from ....obs.hist import NB
+from ....obs.spans import NULL_RECORDER
 from ..scenario import INF, VecScenario
 from ..sim import SERIES_FIELDS, STACKED_SCHED_FIELDS, SlotSchedule, \
     init_topo_state, stats_from_series
@@ -110,7 +112,7 @@ class _SegmentStager:
                     - {"bc_slot", "add_slot"}) | {"ts"}
 
     def __init__(self, cw: ColumnWindow, caps, seg_len: int, rounds: int,
-                 put):
+                 put, rec=None):
         self.cw = cw
         self.caps = caps
         self.seg_len = seg_len
@@ -119,6 +121,12 @@ class _SegmentStager:
         self.host: Dict[str, np.ndarray] = {}
         self.dev: Dict[str, object] = {}
         self.pending: Optional[tuple] = None
+        # telemetry: content-cache effectiveness (repro.obs), and a span
+        # around each actual device upload when tracing
+        self.uploads = 0
+        self.skips = 0
+        self.rec = rec if rec is not None else NULL_RECORDER
+        self._sid_upload = self.rec.name("stager.upload")
 
     def _ts(self, lo: int, hi: int) -> np.ndarray:
         ts = np.full(self.seg_len, -3, np.int32)
@@ -131,7 +139,12 @@ class _SegmentStager:
             # copy: some sources (e.g. ``is_app``) alias ColumnWindow
             # arrays that mutate in place between segments
             self.host[key] = np.array(host, copy=True)
+            self.uploads += 1
+            self.rec.begin(self._sid_upload)
             self.dev[key] = self.put(host)
+            self.rec.end()
+        else:
+            self.skips += 1
         return self.dev[key]
 
     def _build(self, lo: int, hi: int, fields) -> Dict[str, object]:
@@ -186,7 +199,8 @@ class ShardedStepper:
                  backend: str = "jax",
                  scan: str = "auto",
                  profile: bool = False,
-                 cw: Optional[ColumnWindow] = None):
+                 cw: Optional[ColumnWindow] = None,
+                 obs=None):
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -248,17 +262,47 @@ class ShardedStepper:
         self._clock = time.perf_counter
         self.t = 0
 
+        # telemetry (repro.obs): the segment bodies are telemetry-free
+        # either way — the latency histogram is a separate per-retirement
+        # dispatch over only the retiring columns (shard_hist_runner), so
+        # both arms of the CI overhead gate lean on the same traced
+        # segment program
+        self.obs = obs
+        self.hist = obs is not None and obs.histograms
+        self._rec = obs.spans if obs is not None else NULL_RECORDER
+        self._sid = {name: self._rec.name(f"segment.{name}")
+                     for name in ("stage", "dispatch", "block", "retire")}
+
         self.caps = cw.segment_caps(rounds, seg_len)
         self.runner = shard_span_runner(d, scn.k, pc, scn.always_gate,
                                         scn.pong_delay, gating=gating,
                                         backend=backend, scan=scan == "on")
         self.reduce_run, self.apply_run = shard_retire_kernels(d)
+        if self.hist:
+            import jax.numpy as jnp
+
+            from ....obs.hist import bucket_index_jnp
+
+            # jitted retiring-column gather + on-device log bucketing:
+            # the host pulls one uint8 index plane (NB = invalid, kept
+            # out of the histogram by the bincount slice) instead of the
+            # raw int32 delivered slice — 4x less transfer, and the
+            # bucket fold rides the fused elementwise gather
+            def _bucket_take(a, c, b):
+                d = jnp.take(a, c, axis=1)
+                v = d - b[None, :]
+                ok = (d >= 0) & (v >= 0)
+                return jnp.where(ok, bucket_index_jnp(v),
+                                 NB).astype(jnp.uint8)
+
+            self._take = jax.jit(_bucket_take)
         self.rounds_dev = jax.device_put(np.int32(rounds), rep)
 
         if scan == "on":
             self.caps_r = cw.round_caps(rounds)
             self.stager = _SegmentStager(cw, self.caps_r, seg_len, rounds,
-                                         lambda a: jax.device_put(a, rep))
+                                         lambda a: jax.device_put(a, rep),
+                                         rec=self._rec)
             # The fast body needs the gating machinery quiescent for the
             # whole run (gate/flush/ping state can straddle segments)
             # and the arrival clock to fit int16; per segment it
@@ -333,12 +377,32 @@ class ShardedStepper:
             origins[app] = cw.bc_origin[cw.slot_msg[app]]
         return origins
 
+    def _column_base(self) -> np.ndarray:
+        """Per-column latency reference round for the on-device latency
+        histogram (app columns only; -1 = no base, count nowhere).  The
+        default base is the column's birth round — the batch engines'
+        latency convention — overridden per message by
+        ``obs.latency_base`` (live mode: the submission round, so the
+        histogram includes queueing delay)."""
+        cw = self.cw
+        base = np.full(self.w, -1, np.int32)
+        app = cw.slot_app & (cw.slot_msg >= 0)
+        if app.any():
+            lb = self.obs.latency_base if self.obs is not None else None
+            if lb is not None:
+                base[app] = lb[cw.slot_msg[app]]
+            else:
+                base[app] = cw.slot_birth[app]
+        return base
+
     def _run_segment(self, lo: int, hi: int):
         """Dispatch segment ``[lo, hi)``; returns the (device) stats
         rows and, on the scanned path, the fused retirement aggregates.
         """
         jax, cw, seg_len = self._jax, self.cw, self.seg_len
+        rec, sid = self._rec, self._sid
         t0 = self._clock()
+        rec.begin(sid["stage"])
         if self.scan == "off":
             ts = np.full(seg_len, -3, np.int32)
             ts[: hi - lo] = np.arange(lo, hi, dtype=np.int32)
@@ -348,8 +412,11 @@ class ShardedStepper:
                                                 self.rep)
                          for f in SlotSchedule.__dataclass_fields__
                          .values()}
+            rec.end()
             t1 = self._clock()
+            rec.begin(sid["dispatch"])
             self.state, stats = self.runner(self.state, sched_dev, ts_dev)
+            rec.end()
             red = None
             fast = False
         else:
@@ -364,20 +431,26 @@ class ShardedStepper:
                                     np.zeros((-self.w) % 8, bool)]),
                     bitorder="little")
                 ia_dev = self.stager._stage("__ia_pack", ia)
+                rec.end()
                 t1 = self._clock()
+                rec.begin(sid["dispatch"])
                 self.state, stats, red = frun(
                     self.state, tabs, ia_dev,
                     {key: sched_dev[key]
                      for key in ("bc_round", "bc_origin", "bc_slot",
                                  "cr_round", "cr_pid")},
                     sched_dev["ts"], origins_dev, self.rounds_dev)
+                rec.end()
             else:
                 sched_dev = self.stager.stage(lo, hi)
                 ts_dev = sched_dev.pop("ts")
+                rec.end()
                 t1 = self._clock()
+                rec.begin(sid["dispatch"])
                 self.state, stats, red = self.runner(
                     self.state, sched_dev, ts_dev, origins_dev,
                     self.rounds_dev)
+                rec.end()
             self._apply_topo_events(lo, hi)
         if self.seg_profile is not None:
             self.seg_profile.append(dict(lo=lo, hi=hi, fast=fast,
@@ -393,7 +466,7 @@ class ShardedStepper:
         if not len(cols):
             return
         cw = self.cw
-        cnt, arrcnt, sumdel, _, _, _, _, bdone = red
+        cnt, arrcnt, sumdel, bdone = red[0], red[1], red[2], red[7]
         ids = cw.slot_msg[cols]
         self.deliv_count[ids] = cnt[cols]
         self.deliv_round_sum[ids] = sumdel[cols].astype(np.int64)
@@ -411,6 +484,33 @@ class ShardedStepper:
             self.lat_sum += int((sumdel[acols] - cnt[acols] * births).sum())
             self.lat_cnt += int(cnt[acols].sum())
             self.bcast_done[ids[app]] = bdone[acols] > 0
+            if self.hist:
+                # latency histogram over only the retiring app columns,
+                # read while their delivered plane is still intact
+                # (apply_run below recycles it): one jitted gather of
+                # the retiring slice — padded to a few power-of-two
+                # widths so it compiles a handful of shapes — with the
+                # log bucketing fused on device, so the host pulls a
+                # uint8 bucket-index plane and folds it with a single
+                # bincount.  Cheap enough that the CI overhead gate's
+                # enabled arm holds on a CPU mesh; shard_hist_runner is
+                # the fully on-device twin for accelerator meshes
+                # (parity-tested)
+                base = self._column_base()
+                r = min(max(8, 1 << (len(acols) - 1).bit_length()),
+                        max(self.w, 8))
+                cols_p = np.zeros(r, np.int32)
+                base_p = np.full(r, self.rounds + 1, np.int32)
+                cols_p[: len(acols)] = acols
+                bb = base[acols]
+                # negative base (no reference round) joins the padding
+                # sentinel: latency < 0, bucketed to NB and sliced off
+                base_p[: len(acols)] = np.where(bb >= 0, bb,
+                                                self.rounds + 1)
+                idx = np.asarray(self._take(self.state[1], cols_p,
+                                            base_p))
+                counts = np.bincount(idx.ravel(), minlength=NB + 1)
+                self.obs.add_hist(counts[:NB].astype(np.int64))
         self.state = self.apply_run(self.state, retire,
                                     retire & cw.slot_app, hung)
         cw.free_cols(cols)
@@ -424,10 +524,11 @@ class ShardedStepper:
         if not live.any():
             return 0
         if red_dev is None:
-            red_dev = self.reduce_run(self.state, self._column_origins(),
-                                      self.rounds_dev)
+            red_dev = self.reduce_run(
+                self.state, self._column_origins(), self.rounds_dev)
         red = tuple(np.asarray(x) for x in red_dev)
-        cnt, arrcnt, sumdel, alive, alivedel, blockcnt, refcnt, bdone = red
+        (cnt, arrcnt, sumdel, alive, alivedel, blockcnt, refcnt,
+         bdone) = red[:8]
         full_del = alivedel == int(alive)
         blocked = (blockcnt > 0) & cw.slot_app
         ref = refcnt > 0
@@ -464,17 +565,28 @@ class ShardedStepper:
             # this segment completes, so there is nothing to prefetch)
             self.stager.prefetch(t_end)
         t0 = self._clock()
+        self._rec.begin(self._sid["block"])
         self.series[t:t_end] = np.asarray(stats_dev, np.int64)[: t_end - t]
         if (self.snapshot_round is not None
                 and t_end - 1 == self.snapshot_round):
             self.snapshot = self.host_state()
             self.snapshot["is_app"] = self.cw.slot_app.copy()
             self.snapshot["slot_msg"] = self.cw.slot_msg.copy()
+        self._rec.end()
         t1 = self._clock()
+        self._rec.begin(self._sid["retire"])
         self._retire(t_end, red_dev)
+        self._rec.end()
         if self.seg_profile is not None:
             self.seg_profile[-1]["block_s"] = t1 - t0
             self.seg_profile[-1]["retire_s"] = self._clock() - t1
+        if self.obs is not None:
+            seg = self.series[t:t_end]
+            self.obs.gauge("piggyback_bytes",
+                           16 * int(seg[:, 1].sum() + seg[:, 3].sum())
+                           + 24 * int(seg[:, 2].sum()))
+            self.obs.gauge("window_occupancy",
+                           int((self.cw.slot_msg >= 0).sum()))
         self.t = t_end
         return t_end
 
@@ -489,12 +601,15 @@ class ShardedStepper:
         live_cols = cw.live_cols()
         if len(live_cols):
             red = tuple(np.asarray(x)
-                        for x in self.reduce_run(self.state,
-                                                 self._column_origins(),
-                                                 self.rounds_dev))
+                        for x in self.reduce_run(
+                            self.state, self._column_origins(),
+                            self.rounds_dev))
             self._record_and_free(live_cols,
                                   np.zeros(len(live_cols), bool), red,
                                   np.zeros(self.w, bool))
+        if self.obs is not None and self.scan == "on":
+            self.obs.count("stager_uploads", self.stager.uploads)
+            self.obs.count("stager_skips", self.stager.skips)
         stats = stats_from_series(self.series, self.first_receipts)
         return ShardedRunResult(
             scenario=self.scn, window=self.w, backend=self.backend,
@@ -514,7 +629,8 @@ def execute_sharded(scn: VecScenario, window: int,
                     collect: str = "auto",
                     backend: str = "jax",
                     scan: str = "auto",
-                    profile: bool = False) -> ShardedRunResult:
+                    profile: bool = False,
+                    obs=None) -> ShardedRunResult:
     """Run ``scn`` through a ``window``-column streaming buffer sharded
     over ``n_devices`` devices (``None`` = all visible).  Parameters
     match :func:`~repro.core.vecsim.stream.execute_windowed`; the
@@ -543,7 +659,8 @@ def execute_sharded(scn: VecScenario, window: int,
     stepper = ShardedStepper(scn, window, n_devices=n_devices,
                              horizon=horizon, seg_len=seg_len,
                              snapshot_round=snapshot_round, collect=collect,
-                             backend=backend, scan=scan, profile=profile)
+                             backend=backend, scan=scan, profile=profile,
+                             obs=obs)
     while not stepper.done:
         stepper.advance()
     return stepper.finish()

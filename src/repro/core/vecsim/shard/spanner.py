@@ -60,8 +60,9 @@ from ..sim import SERIES_FIELDS, _STATE_KEYS
 from .mesh import shard_mesh
 
 __all__ = ["shard_span_runner", "shard_fast_span_runner",
-           "shard_retire_kernels", "resolve_shard_backend",
-           "resolve_scan", "STATE_KEYS", "INT16_LIMIT"]
+           "shard_retire_kernels", "shard_hist_runner",
+           "resolve_shard_backend", "resolve_scan", "STATE_KEYS",
+           "INT16_LIMIT"]
 
 STATE_KEYS = _STATE_KEYS
 
@@ -119,6 +120,11 @@ def _column_partials(state, origins, rounds, off):
     drift from the reference reduction.  Returns the 8-tuple
     ``(cnt, arrcnt, sumdel, alive, alivedel, blocked, ref, bdone)``
     *before* the mesh ``psum``; callers psum it across shards.
+
+    Deliberately telemetry-free: the delivery-latency histogram is a
+    separate retirement-time dispatch (:func:`shard_hist_runner`) over
+    only the retiring columns, so enabling telemetry never re-traces or
+    slows the segment bodies (DESIGN.md §2.10).
     """
     import jax.numpy as jnp
 
@@ -701,3 +707,68 @@ def shard_retire_kernels(n_devices: int):
             return _apply(state, retire, app_retire, hung)
 
     return reduce_run, apply_run
+
+
+@functools.lru_cache(maxsize=None)
+def shard_hist_runner(n_devices: int):
+    """On-device retirement-time delivery-latency histogram
+    (``repro.obs.hist`` bucket contract): gather the retiring columns
+    out of the sharded ``delivered`` plane, bucket each valid
+    delivery's ``delivered - base`` latency on device, and psum the
+    ``(NB,)`` totals across the mesh.  Columns padded with
+    ``base = -1`` contribute nothing, mirroring ``hist_np``'s
+    negative-value mask.
+
+    This is the fully on-device twin of the sharded driver's fold
+    (device bucket indices + host bincount): both run once per
+    retirement batch over only the retiring columns — O(N x messages)
+    work for the whole run, segment bodies telemetry-free — and are
+    byte-identical (``tests/test_obs.py`` parity-checks them).  The
+    driver pulls the uint8 index plane because on a CPU mesh the
+    shard_map reduce costs more than the transfer it saves; this
+    runner is the shape the fold takes when the delivered plane lives
+    on a real accelerator mesh and any host pull is the expensive
+    direction.
+
+    The bucketing is the cumulative-count formulation: NB integer
+    ``value < upper_bound`` comparisons and a diff, byte-identical to
+    ``bucket_index_np`` + bincount because both are pure integer
+    threshold counts over the same bucket edges.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from ....obs.hist import NB
+
+    mesh = shard_mesh(n_devices)
+    # bucket upper bounds: exact buckets 0..15, then power-of-two
+    # decades [2**(4+j), 2**(5+j)); the last bucket is open-ended
+    hi = [k + 1 for k in range(16)] + [1 << k for k in range(5, 20)]
+    assert len(hi) + 1 == NB
+
+    def hist_fn(delivered, cols, base):
+        d = delivered[:, cols]
+        valid = (d >= 0) & (base >= 0)[None, :]
+        v = jnp.where(valid, d - base[None, :], -1)
+        # cumulative counts at each bucket's upper bound; prepend the
+        # (normally zero) count of negative latencies so they fall out
+        # of bucket 0 exactly as hist_np's v >= 0 mask drops them
+        cum = jnp.stack([(valid & (v < 0)).sum().astype(jnp.int64)]
+                        + [(valid & (v < h)).sum().astype(jnp.int64)
+                           for h in hi]
+                        + [valid.sum().astype(jnp.int64)])
+        return jax.lax.psum(jnp.diff(cum), "shard")
+
+    _run = jax.jit(shard_map(
+        hist_fn, mesh=mesh,
+        in_specs=(P("shard"), P(), P()),
+        out_specs=P()))
+
+    def run(delivered, cols, base):
+        with enable_x64():
+            return _run(delivered, cols, base)
+
+    return run

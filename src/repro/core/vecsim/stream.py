@@ -477,8 +477,17 @@ class WindowedStepper:
                  horizon: Optional[int] = None, seg_len: int = 32,
                  snapshot_round: Optional[int] = None,
                  collect: str = "auto",
-                 cw: Optional[ColumnWindow] = None):
+                 cw: Optional[ColumnWindow] = None,
+                 obs=None):
+        from ...obs.spans import NULL_RECORDER
         self.backend = backend = resolve_backend(backend)
+        # telemetry (repro.obs): histogram folding happens at column
+        # retirement on the host planes, spans wrap the segment phases
+        self.obs = obs
+        self.hist = obs is not None and obs.histograms
+        self._rec = obs.spans if obs is not None else NULL_RECORDER
+        self._sid = {name: self._rec.name(f"segment.{name}")
+                     for name in ("dispatch", "retire")}
         self.w = w = int(window)
         if w < 1:
             raise ValueError("window must be >= 1")
@@ -596,6 +605,26 @@ class WindowedStepper:
                 self.lat_sum += int((sumdel[acols]
                                      - cnt[acols] * births).sum())
                 self.lat_cnt += int(cnt[acols].sum())
+        if self.hist and app.any():
+            # latency histogram fold (repro.obs): once per column, at
+            # retirement, before the plane wipe below recycles it.  The
+            # base is the column birth round (batch latency convention)
+            # or the live loop's per-message submission round.
+            acols = cols[app]
+            lb = self.obs.latency_base
+            base = np.asarray(lb[ids[app]] if lb is not None
+                              else cw.slot_birth[acols], np.int64)
+            da = d[:, app]
+            if self.backend == "pallas":
+                from . import kernels as kx
+                h = np.asarray(kx.latency_hist_jit()(
+                    base.astype(np.int32), da), np.int64)
+                self.obs.add_hist(h.sum(axis=0))
+            else:
+                from ...obs.hist import hist_np
+                valid = (da >= 0) & (base >= 0)[None, :]
+                self.obs.add_hist(hist_np(
+                    (da.astype(np.int64) - base[None, :])[valid]))
         self.expired[ids] |= by_expiry
         if app.any():
             st["ever_del"] |= (d[:, app] >= 0).any(axis=1)
@@ -686,13 +715,24 @@ class WindowedStepper:
             t_end = min(t_end, self.snapshot_round + 1)
         # Activate events due before t_end while free columns last.
         t_end = self.cw.activate(t, t_end)
+        self._rec.begin(self._sid["dispatch"])
         self._run_segment(t, t_end)
+        self._rec.end()
         if (self.snapshot_round is not None
                 and t_end - 1 == self.snapshot_round):
             self.snapshot = {key: v.copy() for key, v in self.st.items()}
             self.snapshot["is_app"] = self.cw.slot_app.copy()
             self.snapshot["slot_msg"] = self.cw.slot_msg.copy()
+        self._rec.begin(self._sid["retire"])
         self._retire(t_end)
+        self._rec.end()
+        if self.obs is not None:
+            seg = self.series[t:t_end]
+            self.obs.gauge("piggyback_bytes",
+                           16 * int(seg[:, 1].sum() + seg[:, 3].sum())
+                           + 24 * int(seg[:, 2].sum()))
+            self.obs.gauge("window_occupancy",
+                           int((self.cw.slot_msg >= 0).sum()))
         self.t = t_end
         return t_end
 
@@ -715,7 +755,8 @@ class WindowedStepper:
 def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
                      horizon: Optional[int] = None, seg_len: int = 32,
                      snapshot_round: Optional[int] = None,
-                     collect: str = "auto") -> WindowedRunResult:
+                     collect: str = "auto",
+                     obs=None) -> WindowedRunResult:
     """Run ``scn`` through a ``window``-column streaming buffer.
 
     ``horizon`` — force-retire columns older than this many rounds
@@ -729,7 +770,7 @@ def execute_windowed(scn: VecScenario, window: int, backend: str = "auto",
     the front door (``repro.api.run(RunSpec(...))``) in new code."""
     stepper = WindowedStepper(scn, window, backend=backend, horizon=horizon,
                               seg_len=seg_len, snapshot_round=snapshot_round,
-                              collect=collect)
+                              collect=collect, obs=obs)
     while not stepper.done:
         stepper.advance()
     return stepper.finish()

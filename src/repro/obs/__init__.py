@@ -1,0 +1,40 @@
+"""repro.obs — the unified telemetry subsystem (DESIGN.md §2.10).
+
+Three pillars, one package:
+
+* **Latency histograms** (``hist.py``): the log-bucket contract shared
+  by every backend's retirement reduction, plus the nearest-rank
+  percentile read-out that turns psum'd bucket counts into the exact
+  p50/p99/p99.9 that ``RunReport``/``LiveReport`` publish.
+* **Trace spans** (``spans.py``): the zero-allocation ring recorder
+  (``SpanRecorder`` / ``NULL_RECORDER``) and the per-run accumulator
+  (``EngineObs``) the engines and the live loop share.
+* **Export sinks** (``sinks.py``): schema-versioned JSONL metrics and
+  Perfetto-loadable Chrome trace JSON, behind the ``SINKS`` registry
+  that ``repro.api --list`` surfaces.
+
+Plus the shared benchmark-report schema (``report.py``) and the
+protocol graph metrics (``graphs.py``, formerly ``repro.core.metrics``).
+"""
+
+from .graphs import (full_graph, mean_shortest_path, overhead_per_message,
+                     safe_graph, unsafe_link_stats)
+from .hist import (NB, bucket_index_np, bucket_lower_bounds, hist_np,
+                   merge_hists, percentiles_from_hist)
+from .report import (BENCH_SCHEMA_VERSION, load_bench_report,
+                     write_bench_report)
+from .sinks import (METRICS_SCHEMA, METRICS_VERSION, SINKS, MetricsSink,
+                    load_metrics_jsonl, write_chrome_trace,
+                    write_metrics_jsonl)
+from .spans import NULL_RECORDER, EngineObs, SpanRecorder
+
+__all__ = [
+    "NB", "bucket_index_np", "bucket_lower_bounds", "hist_np",
+    "merge_hists", "percentiles_from_hist",
+    "SpanRecorder", "NULL_RECORDER", "EngineObs",
+    "MetricsSink", "SINKS", "METRICS_SCHEMA", "METRICS_VERSION",
+    "write_metrics_jsonl", "load_metrics_jsonl", "write_chrome_trace",
+    "BENCH_SCHEMA_VERSION", "write_bench_report", "load_bench_report",
+    "safe_graph", "full_graph", "mean_shortest_path",
+    "unsafe_link_stats", "overhead_per_message",
+]

@@ -1,0 +1,54 @@
+"""Shared benchmark-report writer: one schema for every BENCH_*.json.
+
+Before this module each benchmark rolled its own JSON shape and none
+carried a version, so loaders (the CI floor gates, the README tables)
+had to guess.  Every bench now writes through
+:func:`write_bench_report`, which stamps ``schema_version`` and
+``kind``, and reads back through :func:`load_bench_report`, which
+validates both.  Legacy version-0 snapshots (no ``schema_version``
+field) still load — the floor gates must keep working against old
+artifacts — but anything claiming a *different* version is rejected
+loudly.
+"""
+
+from __future__ import annotations
+
+import json
+
+__all__ = ["BENCH_SCHEMA_VERSION", "load_bench_report",
+           "write_bench_report"]
+
+BENCH_SCHEMA_VERSION = 1
+
+# Known bench kinds; a typo'd kind is a schema bug, not a new format.
+_KINDS = ("backend", "scale", "serve", "throughput", "obs_overhead")
+
+
+def write_bench_report(path: str, kind: str, doc: dict) -> dict:
+    """Stamp ``schema_version`` + ``kind`` onto ``doc`` and write it."""
+    if kind not in _KINDS:
+        raise ValueError(f"unknown bench kind {kind!r} (have {_KINDS})")
+    out = dict(schema_version=BENCH_SCHEMA_VERSION, kind=kind)
+    out.update({k: v for k, v in doc.items()
+                if k not in ("schema_version", "kind")})
+    with open(path, "w") as fh:
+        json.dump(out, fh, indent=2)
+        fh.write("\n")
+    return out
+
+
+def load_bench_report(path: str, kind: str | None = None) -> dict:
+    """Load a bench snapshot, tolerating pre-schema (version-0) files."""
+    with open(path) as fh:
+        doc = json.load(fh)
+    if not isinstance(doc, dict):
+        raise ValueError(f"{path}: bench report is not a JSON object")
+    version = doc.get("schema_version", 0)
+    if version not in (0, BENCH_SCHEMA_VERSION):
+        raise ValueError(f"{path}: unsupported bench schema_version "
+                         f"{version!r} (supported: 0 legacy, "
+                         f"{BENCH_SCHEMA_VERSION})")
+    if kind is not None and version >= 1 and doc.get("kind") != kind:
+        raise ValueError(f"{path}: bench kind {doc.get('kind')!r} != "
+                         f"expected {kind!r}")
+    return doc

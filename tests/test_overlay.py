@@ -4,8 +4,8 @@ import pytest
 
 from repro.core import (BoundedPCBroadcast, Network, PCBroadcast,
                         SprayOverlay, check_trace, ring_plus_random)
-from repro.core.metrics import (full_graph, mean_shortest_path, safe_graph,
-                                unsafe_link_stats)
+from repro.obs import (full_graph, mean_shortest_path, safe_graph,
+                       unsafe_link_stats)
 
 
 def spray_net(n=40, seed=5, delay=0.5, period=20.0):

@@ -119,7 +119,7 @@ def test_vector_clock_baseline_invariants_under_churn(seed, n, n_ops):
 @given(seed=st.integers(0, 10_000), n=st.integers(5, 12))
 def test_pc_overhead_is_constant_vc_overhead_grows(seed, n):
     """Table 1: PC control info is O(1)/message; VC's grows with N."""
-    from repro.core.metrics import overhead_per_message
+    from repro.obs import overhead_per_message
     net_pc = run_random_schedule(
         lambda pid: PCBroadcast(pid, ping_mode="route"), seed, n, 12,
         churn=False)

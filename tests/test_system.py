@@ -10,8 +10,8 @@ import pytest
 
 from repro.core import (BoundedPCBroadcast, Network, SprayOverlay,
                         check_trace, ring_plus_random)
-from repro.core.metrics import (overhead_per_message, safe_graph,
-                                mean_shortest_path, unsafe_link_stats)
+from repro.obs import (overhead_per_message, safe_graph,
+                       mean_shortest_path, unsafe_link_stats)
 
 
 def test_end_to_end_protocol_under_realistic_conditions():
@@ -61,7 +61,7 @@ def test_end_to_end_protocol_under_realistic_conditions():
     # Network stays usable: safe graph reaches most correct processes
     # (crash holes are only repaired while the overlay churns, so demand
     # high-but-not-total reachability after it stops).
-    from repro.core.metrics import _bfs_depths
+    from repro.obs.graphs import _bfs_depths
     g = safe_graph(net)
     alive = [p for p in range(n) if p not in crashed]
     reach = [len(_bfs_depths(g, s)) / len(alive) for s in alive[:5]]
