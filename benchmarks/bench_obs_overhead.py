@@ -1,11 +1,12 @@
 """Telemetry overhead gate: bench_scale bare vs obs-off vs obs-on
 (S9/DESIGN §2.10 overhead policy).
 
-Runs the sharded-engine scale point three times through
+Runs the sharded-engine scale point four times through
 ``bench_scale.run_point`` in one process — ``bare`` (no obs spec),
-``disabled`` (``ObsSpec(histograms=False)``) and ``enabled`` (latency
-histograms + span recording) — and reports the steady-state send rates
-plus their ratios.
+``disabled`` (``ObsSpec(histograms=False)``), ``enabled`` (latency
+histograms + span recording) and ``audited`` (enabled + 1-in-32
+provenance sampling with the online causality auditor in ``log``
+mode) — and reports the steady-state send rates plus their ratios.
 
 The api resolves an all-off ObsSpec to engine ``obs=None``
 (``_resolve_obs``), so the disabled arm runs the *identical* engine
@@ -21,6 +22,8 @@ than 2% even on an idle box):
 
     disabled >= 0.98 x bare        (obs-off must cost nothing)
     enabled  >= 0.90 x disabled    (obs-on within 10%)
+    audited  >= 0.85 x enabled     (flight recorder + auditor within
+                                    15% of plain telemetry)
 
 ``--floor-ref`` additionally anchors the bare arm on an external
 bare-engine report — in CI the nightly scale smoke's fresh
@@ -54,6 +57,7 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 DISABLED_FRAC = 0.98   # telemetry off: within 2% of in-process bare
 ENABLED_FRAC = 0.90    # telemetry on: within 10% of the disabled arm
+AUDITED_FRAC = 0.85    # flight recorder + auditor: within 15% of enabled
 BARE_FRAC = 0.80       # in-process bare: within 20% of the anchor
 
 
@@ -68,7 +72,9 @@ def rows(n: int = 1 << 18, devices: int = 4, messages: int = 256,
     points = {}
     for label, obs in (("bare", None),
                        ("disabled", ObsSpec(histograms=False)),
-                       ("enabled", ObsSpec(histograms=True, spans=True))):
+                       ("enabled", ObsSpec(histograms=True, spans=True)),
+                       ("audited", ObsSpec(histograms=True, spans=True,
+                                           provenance=32, audit="log"))):
         point, _ = run_point(n, devices, messages, rate, window, k,
                              "kregular", "poisson", seg_len, None, 1,
                              seed, scan, obs=obs)
@@ -76,14 +82,17 @@ def rows(n: int = 1 << 18, devices: int = 4, messages: int = 256,
     bare = steady_rate(points["bare"])
     off = steady_rate(points["disabled"])
     on = steady_rate(points["enabled"])
+    aud = steady_rate(points["audited"])
     doc = dict(
         n=n, devices=points["bare"]["devices"], messages=messages,
         rate=rate, window=window, seg_len=seg_len, scan=scan,
         sends_per_sec_steady_bare=bare,
         sends_per_sec_steady_disabled=off,
         sends_per_sec_steady_enabled=on,
+        sends_per_sec_steady_audited=aud,
         disabled_over_bare=round(off / bare, 4) if bare else None,
         enabled_over_disabled=round(on / off, 4) if off else None,
+        audited_over_enabled=round(aud / on, 4) if on else None,
         points=points)
     if out:
         from repro.obs.report import write_bench_report
@@ -96,8 +105,11 @@ def rows(n: int = 1 << 18, devices: int = 4, messages: int = 256,
         (f"obs/sends_per_sec_enabled/{tag}", us, on),
         (f"obs/disabled_over_bare/{tag}", us,
          doc["disabled_over_bare"] or 0.0),
+        (f"obs/sends_per_sec_audited/{tag}", us, aud),
         (f"obs/enabled_over_disabled/{tag}", us,
          doc["enabled_over_disabled"] or 0.0),
+        (f"obs/audited_over_enabled/{tag}", us,
+         doc["audited_over_enabled"] or 0.0),
     ]
 
 
@@ -118,8 +130,9 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_obs_overhead.json")
     ap.add_argument("--assert-gate", action="store_true",
                     help="fail unless disabled >= 0.98x in-process "
-                         "bare, enabled >= 0.90x disabled, and (with "
-                         "--floor-ref) bare >= 0.80x the anchor")
+                         "bare, enabled >= 0.90x disabled, audited >= "
+                         "0.85x enabled, and (with --floor-ref) bare "
+                         ">= 0.80x the anchor")
     ap.add_argument("--floor-ref", default=None,
                     help="bare-engine scale report sanity-anchoring "
                          "the in-process bare arm (CI: the nightly "
@@ -137,11 +150,20 @@ def main() -> None:
                 f"{args.devices}").strip()
     anchor = None
     if args.floor_ref:
-        from bench_scale import steady_rate
+        if not os.path.exists(args.floor_ref):
+            # the nightly smoke may not have produced its report (first
+            # run on a fresh runner, or the smoke itself was skipped):
+            # degrade to the in-process-only gate instead of a KeyError
+            # deep inside the report loader
+            print(f"floor-ref {args.floor_ref!r} not found; skipping "
+                  "the bare-arm anchor check (in-process ratios still "
+                  "gated)", file=sys.stderr)
+        else:
+            from bench_scale import steady_rate
 
-        from repro.obs.report import load_bench_report
-        ref = load_bench_report(args.floor_ref, kind="scale")
-        anchor = args.anchor_frac * steady_rate(ref)
+            from repro.obs.report import load_bench_report
+            ref = load_bench_report(args.floor_ref, kind="scale")
+            anchor = args.anchor_frac * steady_rate(ref)
     doc, csv = rows(args.n, args.devices, args.messages, args.rate,
                     args.window, args.k, args.seg_len, args.seed,
                     args.scan, args.out)
@@ -151,6 +173,7 @@ def main() -> None:
         bare = doc["sends_per_sec_steady_bare"]
         off = doc["sends_per_sec_steady_disabled"]
         on = doc["sends_per_sec_steady_enabled"]
+        aud = doc["sends_per_sec_steady_audited"]
         bad = []
         if anchor is not None and bare < BARE_FRAC * anchor:
             bad.append(f"bare {bare:.0f} < {BARE_FRAC * anchor:.0f} "
@@ -162,12 +185,15 @@ def main() -> None:
         if on < ENABLED_FRAC * off:
             bad.append(f"enabled {on:.0f} < {ENABLED_FRAC * off:.0f} "
                        f"({ENABLED_FRAC:.0%} of disabled {off:.0f})")
+        if aud < AUDITED_FRAC * on:
+            bad.append(f"audited {aud:.0f} < {AUDITED_FRAC * on:.0f} "
+                       f"({AUDITED_FRAC:.0%} of enabled {on:.0f})")
         if bad:
             print("OVERHEAD GATE VIOLATION: " + "; ".join(bad),
                   file=sys.stderr)
             sys.exit(1)
         print(f"overhead gate ok: bare {bare:.0f}, disabled {off:.0f}, "
-              f"enabled {on:.0f} sends/s"
+              f"enabled {on:.0f}, audited {aud:.0f} sends/s"
               + (f" vs anchor {anchor:.0f}" if anchor else ""))
 
 

@@ -22,11 +22,15 @@ the schema, the registry keys, and the auto-selection rule.
 
 from ..core.vecsim import TrafficModel
 from ..core.vecsim.live import AdmissionPolicy, ArrivalProcess, LiveReport
+from ..obs.audit import CausalAuditor, CausalityViolationError
+from ..obs.flight import FlightRecorder
+from ..obs.ops import OpsPlane
 from ..obs.sinks import MetricsSink
 from ..obs.spans import EngineObs
-from .registry import (ADMISSION, ARRIVALS, BACKENDS, ENGINES, PROTOCOLS,
-                       SCENARIOS, SINKS, TOPOLOGIES, TRAFFIC, BackendEntry,
-                       EngineEntry, ProtocolEntry, Registry, ScenarioEntry,
+from .registry import (ADMISSION, ARRIVALS, AUDIT, BACKENDS, ENGINES,
+                       OPS_SINKS, PROTOCOLS, SAMPLERS, SCENARIOS, SINKS,
+                       TOPOLOGIES, TRAFFIC, BackendEntry, EngineEntry,
+                       ProtocolEntry, Registry, ScenarioEntry,
                        describe_entry)
 from .run import (RunReport, build_live_scenario, build_scenario, run,
                   select_engine)
@@ -42,6 +46,9 @@ __all__ = [
     "Registry", "ProtocolEntry", "EngineEntry", "BackendEntry",
     "ScenarioEntry", "TrafficModel", "ArrivalProcess", "AdmissionPolicy",
     "describe_entry",
+    "FlightRecorder", "CausalAuditor", "CausalityViolationError",
+    "OpsPlane",
     "PROTOCOLS", "ENGINES", "BACKENDS", "TOPOLOGIES", "TRAFFIC",
     "SCENARIOS", "ARRIVALS", "ADMISSION", "SINKS",
+    "SAMPLERS", "AUDIT", "OPS_SINKS",
 ]

@@ -17,9 +17,9 @@ import argparse
 import json
 import sys
 
-from . import (ADMISSION, ARRIVALS, BACKENDS, ENGINES, PROTOCOLS, SCENARIOS,
-               SINKS, TOPOLOGIES, TRAFFIC, RunSpec, SpecError,
-               describe_entry, run)
+from . import (ADMISSION, ARRIVALS, AUDIT, BACKENDS, ENGINES, OPS_SINKS,
+               PROTOCOLS, SAMPLERS, SCENARIOS, SINKS, TOPOLOGIES, TRAFFIC,
+               RunSpec, SpecError, describe_entry, run)
 
 
 def _spec_dict(src: str) -> dict:
@@ -122,6 +122,31 @@ def build_parser() -> argparse.ArgumentParser:
     obs.add_argument("--spans", action="store_true", default=None,
                      help="record trace spans even without --trace-out "
                           "(kept on report.obs.spans)")
+    fr = ap.add_argument_group("flight recorder (DESIGN.md §2.11)")
+    fr.add_argument("--provenance", type=int, metavar="RATE",
+                    help="sample 1-in-RATE application broadcasts and "
+                         "record their full lifecycle (submit/admit/"
+                         "activate/deliver/retire); exported as "
+                         "provenance JSONL records and per-message "
+                         "Perfetto tracks")
+    fr.add_argument("--sampler", choices=sorted(SAMPLERS.keys()),
+                    help="provenance sampling policy (default hash: "
+                         "deterministic splitmix64 of origin+round)")
+    fr.add_argument("--audit", choices=sorted(AUDIT.keys()),
+                    help="online causality auditor over the sampled "
+                         "records: log (count violations) or fail "
+                         "(raise on the first); needs --provenance")
+    fr.add_argument("--ops-out", metavar="PATH",
+                    help="stream per-tick ops gauges to PATH through "
+                         "--ops-sink (live mode)")
+    fr.add_argument("--ops-sink", choices=sorted(OPS_SINKS.keys()),
+                    help="ops stream format for --ops-out "
+                         "(default prometheus)")
+    fr.add_argument("--ops-every", type=int, metavar="N",
+                    help="publish ops gauges every N ticks (default 1)")
+    fr.add_argument("--watch", action="store_true", default=None,
+                    help="live terminal dashboard on stderr (plain "
+                         "line-per-tick records when not a TTY)")
     return ap
 
 
@@ -147,6 +172,10 @@ _FLAG_MAP = [
     ("trace_out", "obs", "trace_out"),
     ("metrics_out", "obs", "metrics_out"),
     ("sink", "obs", "sink"), ("spans", "obs", "spans"),
+    ("provenance", "obs", "provenance"), ("sampler", "obs", "sampler"),
+    ("audit", "obs", "audit"), ("ops_out", "obs", "ops_out"),
+    ("ops_sink", "obs", "ops_sink"), ("ops_every", "obs", "ops_every"),
+    ("watch", "obs", "watch"),
 ]
 
 
@@ -182,7 +211,10 @@ def print_registries() -> None:
                            ("scenarios (dynamics kinds)", SCENARIOS),
                            ("arrivals (live mode)", ARRIVALS),
                            ("admission (live mode)", ADMISSION),
-                           ("sinks (--metrics-out formats)", SINKS)):
+                           ("sinks (--metrics-out formats)", SINKS),
+                           ("samplers (--provenance policies)", SAMPLERS),
+                           ("audit (--audit modes)", AUDIT),
+                           ("ops sinks (--ops-out formats)", OPS_SINKS)):
         print(f"{name}:")
         for key in sorted(registry.keys()):
             desc = describe_entry(registry.get(key))

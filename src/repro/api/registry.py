@@ -25,13 +25,16 @@ from typing import Any, Callable, Dict, Iterable, Optional
 
 from ..core.vecsim import scenario as _scn
 from ..core.vecsim.live import _ADMISSION, _ARRIVALS
+from ..obs.audit import AUDIT_MODES as _AUDIT_MODES
+from ..obs.flight import SAMPLERS as _SAMPLERS
+from ..obs.ops import OPS_SINKS as _OPS_SINKS
 from ..obs.sinks import SINKS as _SINKS
 from .spec import RunSpec, SpecError
 
 __all__ = ["Registry", "ProtocolEntry", "EngineEntry", "BackendEntry",
            "ScenarioEntry", "PROTOCOLS", "ENGINES", "BACKENDS",
            "TOPOLOGIES", "TRAFFIC", "SCENARIOS", "ARRIVALS", "ADMISSION",
-           "SINKS", "describe_entry"]
+           "SINKS", "SAMPLERS", "AUDIT", "OPS_SINKS", "describe_entry"]
 
 
 class Registry:
@@ -99,6 +102,12 @@ ADMISSION = Registry("admission", items=_ADMISSION)
 # Telemetry export sinks (ObsSpec.sink), shared live with repro.obs so a
 # MetricsSink registered here is immediately usable by --metrics-out.
 SINKS = Registry("sink", items=_SINKS)
+# Flight-recorder surface (DESIGN §2.11), wrapped live from repro.obs:
+# provenance samplers (ObsSpec.sampler), causality-audit modes
+# (ObsSpec.audit) and live ops-plane sinks (ObsSpec.ops_sink).
+SAMPLERS = Registry("sampler", items=_SAMPLERS)
+AUDIT = Registry("audit mode", items=_AUDIT_MODES)
+OPS_SINKS = Registry("ops sink", items=_OPS_SINKS)
 
 
 # --------------------------------------------------------------------- #

@@ -42,8 +42,11 @@ from ..core.vecsim.metrics import build_trace
 from ..core.vecsim.scenario import VecScenario
 from ..core.vecsim.sim import execute_vec, resolve_backend
 from ..core.vecsim.vc import run_vec_vc
+from ..obs.audit import CausalAuditor
+from ..obs.flight import FlightRecorder, provenance_trace_events
 from ..obs.graphs import overhead_per_message
 from ..obs.hist import percentiles_from_hist
+from ..obs.ops import OpsPlane
 from ..obs.sinks import write_chrome_trace
 from ..obs.spans import EngineObs
 from .registry import ENGINES, PROTOCOLS, SCENARIOS, SINKS, EngineEntry
@@ -339,10 +342,26 @@ def _build_obs(spec: RunSpec, engine_name: str,
         # engines' retire reductions, and every live run)
         hist = live or engine_name in ("windowed", "sharded")
     spans = bool(ob.spans or ob.trace_out is not None)
-    if not live and not hist and not spans and ob.metrics_out is None:
+    flight = None
+    if ob.provenance is not None:
+        if not live and engine_name not in ("windowed", "sharded"):
+            raise SpecError(
+                f"obs.provenance needs a streaming engine (the hooks "
+                f"ride column retirement), but this run resolved to "
+                f"engine={engine_name!r}; set an explicit window or "
+                "engine='windowed'/'sharded'")
+        auditor = (CausalAuditor(ob.audit) if ob.audit != "off"
+                   else None)
+        flight = FlightRecorder(rate=ob.provenance, seed=spec.seed,
+                                sampler=ob.sampler, auditor=auditor,
+                                live=live)
+    if not live and not hist and not spans and ob.metrics_out is None \
+            and flight is None:
         return None
-    return EngineObs(histograms=hist, spans=spans,
-                     span_capacity=ob.span_capacity)
+    obs = EngineObs(histograms=hist, spans=spans,
+                    span_capacity=ob.span_capacity)
+    obs.flight = flight
+    return obs
 
 
 def _obs_extras(obs: Optional[EngineObs], extras: Dict[str, float]) -> None:
@@ -358,6 +377,12 @@ def _obs_extras(obs: Optional[EngineObs], extras: Dict[str, float]) -> None:
         extras["latency_p99"] = p99
         extras["latency_p999"] = p999
         extras["latency_hist_total"] = total
+    fl = obs.flight
+    if fl is not None:
+        extras["provenance_sampled"] = fl.sampled
+        if fl.auditor is not None:
+            extras["audit_pairs_checked"] = fl.auditor.pairs_checked
+            extras["audit_violations"] = len(fl.auditor.violations)
     for name, value in obs.counters.items():
         extras[name] = value
 
@@ -365,11 +390,15 @@ def _obs_extras(obs: Optional[EngineObs], extras: Dict[str, float]) -> None:
 def _metrics_doc(spec: RunSpec, report: "RunReport",
                  obs: EngineObs) -> dict:
     """The sink-agnostic telemetry doc a metrics sink serializes."""
+    fl = obs.flight
+    run = dict(engine=report.engine, backend=report.backend,
+               mode=spec.mode, protocol=spec.protocol, n=report.n,
+               m_app=report.m_app, rounds=report.rounds,
+               seed=spec.seed)
+    if "devices" in report.extras:
+        run["devices"] = int(report.extras["devices"])
     return dict(
-        run=dict(engine=report.engine, backend=report.backend,
-                 mode=spec.mode, protocol=spec.protocol, n=report.n,
-                 m_app=report.m_app, rounds=report.rounds,
-                 seed=spec.seed),
+        run=run,
         summary=dict(
             wall_seconds=report.wall_seconds,
             delivered_frac=report.delivered_frac,
@@ -380,7 +409,8 @@ def _metrics_doc(spec: RunSpec, report: "RunReport",
         counters=dict(obs.counters),
         latency_hist=(obs.latency_hist
                       if obs.histograms and obs.latency_hist.sum() > 0
-                      else None))
+                      else None),
+        provenance=(fl.export() if fl is not None else None))
 
 
 def _write_obs_outputs(spec: RunSpec, report: "RunReport") -> None:
@@ -395,7 +425,14 @@ def _write_obs_outputs(spec: RunSpec, report: "RunReport") -> None:
             run_args = spec.to_dict()
         except SpecError:
             run_args = {"scenario": "prebuilt"}
-        write_chrome_trace(ob.trace_out, obs.spans, run_args=run_args)
+        extra = None
+        fl = obs.flight
+        if fl is not None and fl.completed:
+            extra = provenance_trace_events(
+                fl.export(),
+                n_devices=int(report.extras.get("devices", 1)))
+        write_chrome_trace(ob.trace_out, obs.spans, run_args=run_args,
+                           extra_events=extra)
 
 
 # --------------------------------------------------------------------- #
@@ -440,6 +477,12 @@ def _run_live(spec: RunSpec, on_tick=None) -> RunReport:
     lv = spec.live
     arrival_params = dict(rate_lo=lv.rate_lo, period=lv.period,
                           duty=lv.duty)
+    ob = spec.obs
+    ops = None
+    if ob.ops_out is not None or ob.watch:
+        ops = OpsPlane(out=ob.ops_out, sink=ob.ops_sink,
+                       every=ob.ops_every, slo_p99=lv.slo_p99,
+                       watch=True if ob.watch else None)
     loop = LiveLoop(
         scn, window, engine=engine_name, backend=spec.backend,
         devices=spec.shard.devices, scan=spec.shard.scan,
@@ -449,7 +492,7 @@ def _run_live(spec: RunSpec, on_tick=None) -> RunReport:
         queue_cap=lv.queue_cap, per_round_cap=lv.per_round_cap,
         slo_p99=lv.slo_p99, seed=spec.seed,
         arrival_params=arrival_params, profile=spec.shard.profile,
-        obs=obs, on_tick=on_tick)
+        obs=obs, on_tick=on_tick, ops=ops)
     lr = loop.run()
     res = lr.result
 

@@ -156,7 +156,21 @@ class ObsSpec:
     preallocated ring; ``trace_out`` writes them as Perfetto-loadable
     Chrome trace JSON and implies ``spans=True``.  ``metrics_out``
     writes the run's histogram/gauge/counter doc through the named
-    ``sink`` (registry: ``repro.api.SINKS``)."""
+    ``sink`` (registry: ``repro.api.SINKS``).
+
+    **Flight recorder** (DESIGN.md §2.11): ``provenance=R`` samples
+    1-in-R application broadcasts (via ``sampler``, registry
+    ``repro.api.SAMPLERS``; seeded by the run seed) and records their
+    full lifecycle — exported as ``provenance`` JSONL records and
+    per-message Perfetto tracks.  ``audit`` (registry
+    ``repro.api.AUDIT``) runs the online causality auditor over the
+    sampled records during execution; it requires ``provenance``.
+    Streaming engines only (windowed/sharded/live).
+
+    **Live ops plane**: ``ops_out`` streams per-tick gauges through
+    ``ops_sink`` (registry: ``repro.api.OPS_SINKS``) every
+    ``ops_every`` ticks; ``watch`` renders a terminal dashboard
+    (plain lines when stderr is not a TTY).  Live mode only."""
 
     histograms: Optional[bool] = None   # None = auto per engine
     spans: bool = False                 # record trace spans
@@ -164,6 +178,13 @@ class ObsSpec:
     trace_out: Optional[str] = None     # Chrome trace JSON (implies spans)
     metrics_out: Optional[str] = None   # metrics doc path (via `sink`)
     sink: str = "jsonl"                 # repro.api.SINKS key
+    provenance: Optional[int] = None    # sample 1-in-N broadcasts
+    sampler: str = "hash"               # repro.api.SAMPLERS key
+    audit: str = "off"                  # repro.api.AUDIT key
+    ops_out: Optional[str] = None       # live ops stream path
+    ops_sink: str = "prometheus"        # repro.api.OPS_SINKS key
+    ops_every: int = 1                  # publish every N ticks
+    watch: bool = False                 # --watch terminal dashboard
 
 
 @dataclass(frozen=True)
@@ -324,6 +345,34 @@ class RunSpec:
                             f"{self.obs.span_capacity!r} must be an "
                             "int >= 1")
         check_key(reg.SINKS, self.obs.sink, "obs.sink")
+        ob = self.obs
+        if ob.provenance is not None and (
+                not isinstance(ob.provenance, int)
+                or isinstance(ob.provenance, bool)
+                or ob.provenance < 1):
+            raise SpecError(f"obs.provenance={ob.provenance!r} must be "
+                            "an int >= 1 (sample 1-in-N) or None")
+        check_key(reg.SAMPLERS, ob.sampler, "obs.sampler")
+        check_key(reg.AUDIT, ob.audit, "obs.audit")
+        check_key(reg.OPS_SINKS, ob.ops_sink, "obs.ops_sink")
+        if not isinstance(ob.ops_every, int) \
+                or isinstance(ob.ops_every, bool) or ob.ops_every < 1:
+            raise SpecError(f"obs.ops_every={ob.ops_every!r} must be an "
+                            "int >= 1")
+        if ob.audit != "off" and ob.provenance is None:
+            raise SpecError("obs.audit consumes sampled provenance "
+                            "records; set obs.provenance (e.g. 1 to "
+                            "sample everything)")
+        if ob.provenance is not None and self.mode != "live" \
+                and self.engine in ("vec", "exact"):
+            raise SpecError(
+                f"obs.provenance needs a streaming engine (the hooks "
+                f"ride column retirement); engine={self.engine!r} has "
+                "no window to sample — use 'windowed', 'sharded' or "
+                "'auto'")
+        if self.mode != "live" and (ob.ops_out is not None or ob.watch):
+            raise SpecError("obs.ops_out/obs.watch are the live ops "
+                            "plane; they need mode='live'")
         snap = self.metrics.snapshot
         if snap is not None and not (isinstance(snap, int)
                                      or snap == "last_churn"):

@@ -48,8 +48,9 @@ from ..stream import ColumnWindow, WindowedRunResult
 from .mesh import inverse_tables, pad_rows, resolve_devices, shard_mesh, \
     topology_digest
 from .spanner import (INT16_LIMIT, STATE_KEYS, resolve_scan,
-                      resolve_shard_backend, shard_fast_span_runner,
-                      shard_retire_kernels, shard_span_runner)
+                      resolve_shard_backend, shard_column_gather,
+                      shard_fast_span_runner, shard_retire_kernels,
+                      shard_span_runner)
 
 __all__ = ["ShardedRunResult", "ShardedStepper", "execute_sharded"]
 
@@ -272,6 +273,12 @@ class ShardedStepper:
         self._rec = obs.spans if obs is not None else NULL_RECORDER
         self._sid = {name: self._rec.name(f"segment.{name}")
                      for name in ("stage", "dispatch", "block", "retire")}
+        # flight recorder (repro.obs.flight): host-side provenance
+        # hooks riding the retiring-column gather — O(sample) transfer,
+        # segment bodies untouched
+        self._flight = getattr(obs, "flight", None)
+        if self._flight is not None:
+            self._pgather = shard_column_gather()
 
         self.caps = cw.segment_caps(rounds, seg_len)
         self.runner = shard_span_runner(d, scn.k, pc, scn.always_gate,
@@ -459,7 +466,8 @@ class ShardedStepper:
         return stats, red
 
     def _record_and_free(self, cols: np.ndarray, by_expiry: np.ndarray,
-                         red, hung: np.ndarray) -> None:
+                         red, hung: np.ndarray,
+                         t_now: Optional[int] = None) -> None:
         """Fold retired columns into the host aggregates and recycle
         their device-side planes — the sharded twin of the windowed
         driver's ``_record_and_free``."""
@@ -511,6 +519,24 @@ class ShardedStepper:
                                             base_p))
                 counts = np.bincount(idx.ravel(), minlength=NB + 1)
                 self.obs.add_hist(counts[:NB].astype(np.int64))
+        fl = self._flight
+        if fl is not None and fl.open_count and app.any():
+            # sampled provenance: gather only the sampled retiring
+            # columns' delivered rows (padded to a few power-of-two
+            # widths, same shape discipline as the hist gather) while
+            # the plane is intact — apply_run below recycles it
+            aidx = ids[app]
+            m = fl.sampled_mask(aidx)
+            if m.any():
+                scols = cols[app][m]
+                r = min(max(8, 1 << (len(scols) - 1).bit_length()),
+                        max(self.w, 8))
+                cols_p = np.zeros(r, np.int32)
+                cols_p[: len(scols)] = scols
+                rows = np.asarray(self._pgather(self.state[1], cols_p))
+                fl.on_retire(aidx[m], rows[: self.scn.n, : len(scols)],
+                             self.t if t_now is None else t_now,
+                             by_expiry[app][m])
         self.state = self.apply_run(self.state, retire,
                                     retire & cw.slot_app, hung)
         cw.free_cols(cols)
@@ -540,8 +566,16 @@ class ShardedStepper:
             by_exp = live & ~done & (t_now - cw.slot_birth > self.horizon)
             hung = by_exp & ref
             done |= by_exp
+        fl = self._flight
+        if fl is not None and fl.open_count:
+            blk = np.nonzero(live & blocked & ~done)[0]
+            if len(blk):
+                bids = cw.slot_msg[blk]
+                m = fl.sampled_mask(bids)
+                if m.any():
+                    fl.on_blocked(bids[m], t_now)
         cols = np.nonzero(done)[0]
-        self._record_and_free(cols, by_exp[cols], red, hung)
+        self._record_and_free(cols, by_exp[cols], red, hung, t_now)
         return len(cols)
 
     def advance(self) -> int:
@@ -556,7 +590,13 @@ class ShardedStepper:
         t_end = min(t + self.seg_len, self.rounds)
         if self.snapshot_round is not None and t <= self.snapshot_round:
             t_end = min(t_end, self.snapshot_round + 1)
+        b0 = self.cw.next_bc
         t_end = self.cw.activate(t, t_end)
+        fl = self._flight
+        if fl is not None and self.cw.next_bc > b0:
+            b1 = self.cw.next_bc
+            fl.on_activate(np.arange(b0, b1), self.cw.bc_origin[b0:b1],
+                           self.cw.bc_round[b0:b1])
         stats_dev, red_dev = self._run_segment(t, t_end)
         if self.scan == "on" and not self.cw.mutable_schedule:
             # stage segment k+1's activation-independent schedule fields

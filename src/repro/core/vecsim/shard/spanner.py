@@ -61,6 +61,7 @@ from .mesh import shard_mesh
 
 __all__ = ["shard_span_runner", "shard_fast_span_runner",
            "shard_retire_kernels", "shard_hist_runner",
+           "shard_column_gather",
            "resolve_shard_backend", "resolve_scan", "STATE_KEYS",
            "INT16_LIMIT"]
 
@@ -772,3 +773,20 @@ def shard_hist_runner(n_devices: int):
             return _run(delivered, cols, base)
 
     return run
+
+
+@functools.lru_cache(maxsize=None)
+def shard_column_gather():
+    """Jitted retiring-column gather for the flight recorder
+    (``repro.obs.flight``): pull the delivered-plane rows of only the
+    (power-of-two padded) sampled retiring columns before ``apply_run``
+    recycles them.  Same O(sample) transfer pattern as the latency
+    histogram's ``_bucket_take``, minus the bucketing — provenance
+    wants the raw per-receiver delivery rounds."""
+    import jax
+    import jax.numpy as jnp
+
+    def _take(a, c):
+        return jnp.take(a, c, axis=1)
+
+    return jax.jit(_take)

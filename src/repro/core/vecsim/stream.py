@@ -488,6 +488,9 @@ class WindowedStepper:
         self._rec = obs.spans if obs is not None else NULL_RECORDER
         self._sid = {name: self._rec.name(f"segment.{name}")
                      for name in ("dispatch", "retire")}
+        # flight recorder (repro.obs.flight): host-side provenance
+        # hooks; None keeps every path a plain attribute test
+        self._flight = getattr(obs, "flight", None)
         self.w = w = int(window)
         if w < 1:
             raise ValueError("window must be >= 1")
@@ -570,7 +573,7 @@ class WindowedStepper:
         self.series[lo:hi] = np.asarray(stats, np.int64)[: hi - lo]
 
     def _record_and_free(self, cols: np.ndarray, by_expiry: np.ndarray,
-                         red=None) -> None:
+                         red=None, t_now: Optional[int] = None) -> None:
         """Fold retired columns into the aggregates and recycle them.
         When the pallas retirement sweep already reduced the planes
         (``red`` = the :func:`kernels.retire_reduce` columns), the
@@ -625,6 +628,17 @@ class WindowedStepper:
                 valid = (da >= 0) & (base >= 0)[None, :]
                 self.obs.add_hist(hist_np(
                     (da.astype(np.int64) - base[None, :])[valid]))
+        fl = self._flight
+        if fl is not None and fl.open_count and app.any():
+            # sampled provenance: hand the per-receiver delivery rounds
+            # of retiring sampled app columns to the flight recorder
+            # while the delivered plane is still intact
+            aidx = ids[app]
+            m = fl.sampled_mask(aidx)
+            if m.any():
+                fl.on_retire(aidx[m], d[:, app][:, m],
+                             self.t if t_now is None else t_now,
+                             by_expiry[app][m])
         self.expired[ids] |= by_expiry
         if app.any():
             st["ever_del"] |= (d[:, app] >= 0).any(axis=1)
@@ -698,8 +712,16 @@ class WindowedStepper:
                 sel = (ping >= 0) & hung[np.clip(ping, 0, w - 1)]
                 gate[sel], flush[sel], ping[sel] = -1, INF, -1
             done |= by_exp
+        fl = self._flight
+        if fl is not None and fl.open_count:
+            blk = np.nonzero(live & blocked & ~done)[0]
+            if len(blk):
+                bids = slot_msg[blk]
+                m = fl.sampled_mask(bids)
+                if m.any():
+                    fl.on_blocked(bids[m], t_now)
         cols = np.nonzero(done)[0]
-        self._record_and_free(cols, by_exp[cols], red)
+        self._record_and_free(cols, by_exp[cols], red, t_now)
         return len(cols)
 
     def advance(self) -> int:
@@ -714,7 +736,13 @@ class WindowedStepper:
         if self.snapshot_round is not None and t <= self.snapshot_round:
             t_end = min(t_end, self.snapshot_round + 1)
         # Activate events due before t_end while free columns last.
+        b0 = self.cw.next_bc
         t_end = self.cw.activate(t, t_end)
+        fl = self._flight
+        if fl is not None and self.cw.next_bc > b0:
+            b1 = self.cw.next_bc
+            fl.on_activate(np.arange(b0, b1), self.cw.bc_origin[b0:b1],
+                           self.cw.bc_round[b0:b1])
         self._rec.begin(self._sid["dispatch"])
         self._run_segment(t, t_end)
         self._rec.end()

@@ -13,14 +13,23 @@ Three pillars, one package:
   Perfetto-loadable Chrome trace JSON, behind the ``SINKS`` registry
   that ``repro.api --list`` surfaces.
 
-Plus the shared benchmark-report schema (``report.py``) and the
-protocol graph metrics (``graphs.py``, formerly ``repro.core.metrics``).
+Plus the flight recorder (``flight.py``: sampled per-message
+provenance), the online causality auditor (``audit.py``) and the live
+ops plane (``ops.py``) — DESIGN.md §2.11 — alongside the shared
+benchmark-report schema (``report.py``) and the protocol graph metrics
+(``graphs.py``, formerly ``repro.core.metrics``).
 """
 
+from .audit import (AUDIT_MODES, AuditMode, CausalAuditor,
+                    CausalityViolationError, Violation)
+from .flight import (SAMPLERS, FlightRecord, FlightRecorder,
+                     FlightSampler, provenance_trace_events)
 from .graphs import (full_graph, mean_shortest_path, overhead_per_message,
                      safe_graph, unsafe_link_stats)
 from .hist import (NB, bucket_index_np, bucket_lower_bounds, hist_np,
                    merge_hists, percentiles_from_hist)
+from .ops import (OPS_SCHEMA, OPS_SCHEMA_VERSION, OPS_SINKS, OpsPlane,
+                  OpsSink, SloBurn, WatchDashboard, load_ops_jsonl)
 from .report import (BENCH_SCHEMA_VERSION, load_bench_report,
                      write_bench_report)
 from .sinks import (METRICS_SCHEMA, METRICS_VERSION, SINKS, MetricsSink,
@@ -34,6 +43,12 @@ __all__ = [
     "SpanRecorder", "NULL_RECORDER", "EngineObs",
     "MetricsSink", "SINKS", "METRICS_SCHEMA", "METRICS_VERSION",
     "write_metrics_jsonl", "load_metrics_jsonl", "write_chrome_trace",
+    "SAMPLERS", "FlightSampler", "FlightRecord", "FlightRecorder",
+    "provenance_trace_events",
+    "AUDIT_MODES", "AuditMode", "CausalAuditor",
+    "CausalityViolationError", "Violation",
+    "OPS_SCHEMA", "OPS_SCHEMA_VERSION", "OPS_SINKS", "OpsSink",
+    "OpsPlane", "SloBurn", "WatchDashboard", "load_ops_jsonl",
     "BENCH_SCHEMA_VERSION", "write_bench_report", "load_bench_report",
     "safe_graph", "full_graph", "mean_shortest_path",
     "unsafe_link_stats", "overhead_per_message",

@@ -186,6 +186,10 @@ class EngineObs:
         Per-segment gauge series (piggyback bytes, window occupancy).
     counters : dict[str, int]
         Monotonic event counts (stager uploads/skips, backpressure...).
+    flight : optional FlightRecorder
+        Sampled per-message provenance buffer (S10).  ``None`` unless
+        the run asked for provenance; the engines read it via
+        ``getattr`` so telemetry-off paths never touch it.
     """
 
     def __init__(self, histograms: bool = True, spans: bool = False,
@@ -197,6 +201,7 @@ class EngineObs:
         self.latency_base = None
         self.gauges: dict = {}
         self.counters: dict = {}
+        self.flight = None
 
     def add_hist(self, hist) -> None:
         if self.histograms:

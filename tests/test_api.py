@@ -425,9 +425,17 @@ def test_cli_list_is_a_discovery_surface(capsys):
                 "ring", "kregular", "smallworld",         # topologies
                 "uniform", "poisson", "bursty",           # traffic
                 "churn", "crash", "link_add", "none",
-                "partition_heal", "churn_wave"):          # scenarios
+                "partition_heal", "churn_wave",           # scenarios
+                "hash", "all",                            # samplers
+                "log", "fail",                            # audit modes
+                "prometheus", "jsonl"):                   # ops sinks
         assert key in out, key
     # descriptions, not bare keys
     assert "shard_map frontier exchange" in out
     assert "Algorithm 2" in out
     assert "Watts-Strogatz" in out
+    # flight-recorder axes (S10) are discoverable with descriptions
+    assert "samplers" in out and "audit" in out and "ops sinks" in out
+    assert "splitmix64" in out
+    assert "CausalityViolationError" in out
+    assert "append-only JSONL stream" in out

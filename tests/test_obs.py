@@ -439,13 +439,19 @@ def test_chrome_trace_json_is_loadable(tmp_path):
     assert doc["displayTimeUnit"] == "ms"
     evs = doc["traceEvents"]
     phases = [e["ph"] for e in evs]
-    assert phases.count("M") == 2 and "X" in phases and "i" in phases
+    assert phases.count("M") >= 2 and "X" in phases and "i" in phases
     assert "C" in phases
     span = next(e for e in evs if e["ph"] == "X")
     assert span["name"] == "segment.dispatch" and span["dur"] >= 0
     assert all(e["ts"] >= 0 for e in evs if "ts" in e)   # rebased to t0
     inst = next(e for e in evs if e["ph"] == "i")
     assert inst["s"] == "t" and inst["args"]["value"] == 12.0
+    # satellite (S10): span-name families land on *named* thread tracks
+    # so the trace reads without the code open
+    threads = {e["tid"]: e["args"]["name"] for e in evs
+               if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert threads[span["tid"]] == "segment pipeline"
+    assert threads[inst["tid"]] == "serving loop"
 
 
 def test_chrome_metrics_sink(tmp_path):
@@ -454,8 +460,19 @@ def test_chrome_metrics_sink(tmp_path):
     with open(path) as fh:
         doc = json.load(fh)
     counters = [e for e in doc["traceEvents"] if e["ph"] == "C"]
-    assert {e["name"] for e in counters} == {"window_occupancy",
-                                             "stager_uploads"}
+    # satellite (S10): counter tracks are engine-prefixed so gauge
+    # series from different engines never collide into one track
+    assert {e["name"] for e in counters} == {"windowed/window_occupancy",
+                                             "windowed/stager_uploads"}
+    # a sharded doc additionally carries the device count in the prefix
+    sharded = _sample_doc()
+    sharded["run"] = {"engine": "sharded", "n": 64, "devices": 4}
+    SINKS["chrome-trace"].write(path, sharded)
+    with open(path) as fh:
+        doc = json.load(fh)
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "C"}
+    assert names == {"sharded[d4]/window_occupancy",
+                     "sharded[d4]/stager_uploads"}
 
 
 def test_sinks_registry_exposed_by_api():

@@ -1,0 +1,479 @@
+"""Flight recorder, causal auditor, live ops plane (DESIGN.md §2.11).
+
+The S10 claims, each tested directly:
+
+  * the hash sampler is a pure function of (seed, origin, key round):
+    chunking- and order-invariant, seed-sensitive, rate=1 total;
+  * a batch run's completed provenance records reproduce the engine's
+    own delivered matrix column-for-column, and the sampled id set is
+    exactly the sampler's a-priori selection over the scenario;
+  * provenance export is byte-identical across windowed numpy / jax /
+    pallas and the sharded engine with scan on and off — in-process on
+    one device and in a forced 4-device child mesh at 1/2/4 shards;
+  * the auditor stays silent on honest runs but flags a corrupted
+    delivery plane in BOTH batch and live mode (mutation tests:
+    ``log`` collects violations, ``fail`` raises);
+  * withdrawn-then-requeued live columns record their *final*
+    activation, with zero span-stack leaks across the overflow-retry
+    path (satellite: flight recorder under backpressure);
+  * both ops sinks round-trip (Prometheus text parses; JSONL stream is
+    schema-headed and cadence-correct), the --watch dashboard degrades
+    to greppable plain lines off a TTY, and the SLO burn rate is a
+    sound under-count over its sliding window;
+  * spec validation rejects audit-without-provenance, batch ops
+    planes, and non-streaming provenance hosts;
+  * the API front door exports provenance JSONL records and pid-2
+    Perfetto tracks next to the existing metrics/trace outputs.
+"""
+
+import io
+import json
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.api import ObsSpec, RunSpec, SpecError, TrafficSpec, WindowSpec
+from repro.api import run as api_run
+from repro.core.vecsim import (execute_windowed, static_scenario,
+                               sustained_scenario)
+from repro.core.vecsim.live import LiveLoop
+from repro.core.vecsim.shard import execute_sharded
+from repro.core.vecsim.stream import WindowedStepper
+from repro.obs.audit import (AUDIT_MODES, CausalAuditor,
+                             CausalityViolationError)
+from repro.obs.flight import (SAMPLERS, FlightRecorder,
+                              provenance_trace_events, sample_hash)
+from repro.obs.hist import NB, bucket_index_np
+from repro.obs.ops import (OPS_SINKS, OpsPlane, SloBurn, WatchDashboard,
+                           load_ops_jsonl)
+from repro.obs.sinks import load_metrics_jsonl
+from repro.obs.spans import EngineObs
+
+from vecsim_cases import run_shard_matrix_subprocess
+
+
+def _scn():
+    """Small sustained-traffic scenario: many same-origin chains."""
+    return sustained_scenario(3, 48, k=5, rate=2.0, messages=24,
+                              topology="kregular", max_delay=2)
+
+
+def _flight_obs(rate=1, seed=0, audit=None, live=False):
+    obs = EngineObs(histograms=True)
+    auditor = CausalAuditor(audit) if audit else None
+    obs.flight = FlightRecorder(rate=rate, seed=seed, auditor=auditor,
+                                live=live)
+    return obs
+
+
+# --------------------------------------------------------------------- #
+# Sampler determinism
+# --------------------------------------------------------------------- #
+def test_hash_sampler_is_a_pure_function_of_the_key():
+    o = np.arange(4096) % 37
+    r = np.arange(4096) // 7
+    m = sample_hash(5, 8, o, r)
+    # chunking-invariant: batch boundaries never change the selection
+    chunks = [sample_hash(5, 8, o[i:i + 13], r[i:i + 13])
+              for i in range(0, 4096, 13)]
+    np.testing.assert_array_equal(m, np.concatenate(chunks))
+    # order-invariant: each element keyed independently
+    perm = np.random.default_rng(0).permutation(4096)
+    np.testing.assert_array_equal(m[perm], sample_hash(5, 8, o[perm],
+                                                       r[perm]))
+    # rate=1 records everything; the seed moves a proper subset
+    assert sample_hash(5, 1, o, r).all()
+    assert m.any() and not m.all()
+    assert (m != sample_hash(6, 8, o, r)).any()
+    assert 0.04 < m.mean() < 0.30          # loosely ~1/8
+
+
+def test_recorder_rejects_unknown_sampler_and_registry_is_described():
+    with pytest.raises(KeyError, match="unknown sampler"):
+        FlightRecorder(sampler="nope")
+    for reg in (SAMPLERS, AUDIT_MODES, OPS_SINKS):
+        for entry in reg.values():
+            assert entry.description
+    with pytest.raises(KeyError, match="auditor mode"):
+        CausalAuditor("off")
+
+
+# --------------------------------------------------------------------- #
+# Batch provenance correctness
+# --------------------------------------------------------------------- #
+def test_batch_records_reproduce_the_delivered_matrix():
+    scn = _scn()
+    obs = _flight_obs(rate=1, audit="log")
+    res = execute_windowed(scn, 32, backend="numpy", collect="full",
+                           seg_len=8, obs=obs)
+    fl = obs.flight
+    assert fl.completed, "rate=1 must sample"
+    for rec in fl.completed:
+        assert rec.origin == scn.bcast_origin[rec.id]
+        assert rec.bcast_round == scn.bcast_round[rec.id]
+        assert rec.activate_round == rec.bcast_round
+        # batch runs have no front door
+        assert rec.submit_round == -1 and rec.admit_round == -1
+        assert rec.retire_round >= rec.bcast_round
+        np.testing.assert_array_equal(rec.deliv,
+                                      res.delivered[:, rec.id])
+    # honest run: edges were checked, none violated
+    aud = fl.auditor
+    assert aud.pairs_checked > 0 and not aud.violations
+
+
+def test_sampled_id_set_is_the_a_priori_selection():
+    scn = _scn()
+    obs = _flight_obs(rate=3, seed=11)
+    execute_windowed(scn, 32, backend="numpy", collect="full",
+                     seg_len=8, obs=obs)
+    fl = obs.flight
+    want = np.nonzero(fl.want(scn.bcast_origin, scn.bcast_round))[0]
+    got = sorted(r.id for r in fl.completed) + sorted(fl.open)
+    assert sorted(got) == want.tolist()
+
+
+# --------------------------------------------------------------------- #
+# Cross-backend byte identity
+# --------------------------------------------------------------------- #
+def test_provenance_is_byte_identical_across_backends():
+    scn = _scn()
+    runs = {
+        "win-numpy": lambda o: execute_windowed(
+            scn, 32, backend="numpy", collect="full", seg_len=8, obs=o),
+        "win-jax": lambda o: execute_windowed(
+            scn, 32, backend="jax", collect="full", seg_len=8, obs=o),
+        "win-pallas": lambda o: execute_windowed(
+            scn, 32, backend="pallas", collect="full", seg_len=8, obs=o),
+        "shard-scan-on": lambda o: execute_sharded(
+            scn, 32, n_devices=1, collect="full", seg_len=8, scan="on",
+            obs=o),
+        "shard-scan-off": lambda o: execute_sharded(
+            scn, 32, n_devices=1, collect="full", seg_len=8, scan="off",
+            obs=o),
+    }
+    outs = {}
+    for name, fn in runs.items():
+        obs = _flight_obs(rate=2, audit="fail")   # fail = mutation canary
+        fn(obs)
+        outs[name] = obs.flight.export()
+    ref = outs["win-numpy"]
+    assert ref, "sampler picked nothing"
+    for name, got in outs.items():
+        assert got == ref, name
+
+
+def test_provenance_byte_identity_on_multi_device_meshes():
+    # 4 forced host devices in a child (XLA_FLAGS must precede jax
+    # init), then 1/2/4-shard runs against the windowed reference
+    extra = """
+from repro.obs.spans import EngineObs
+from repro.obs.flight import FlightRecorder
+from repro.obs.audit import CausalAuditor
+from repro.core.vecsim import sustained_scenario
+
+scn2 = sustained_scenario(3, 24, k=5, rate=2.0, messages=24,
+                          topology="kregular", max_delay=2)
+
+def _fl():
+    obs = EngineObs(histograms=True)
+    obs.flight = FlightRecorder(rate=2, seed=0,
+                                auditor=CausalAuditor("fail"))
+    return obs
+
+obs = _fl()
+execute_windowed(scn2, 32, backend="numpy", collect="full", seg_len=8,
+                 obs=obs)
+ref = obs.flight.export()
+assert ref, "sampler picked nothing"
+for d in (1, 2, 4):
+    for scan in ("on", "off"):
+        obs = _fl()
+        execute_sharded(scn2, 32, n_devices=d, collect="full", seg_len=8,
+                        scan=scan, obs=obs)
+        assert obs.flight.export() == ref, (d, scan)
+print("PROV_MATRIX_OK", len(ref))
+"""
+    out = run_shard_matrix_subprocess([], 4, extra=extra)
+    assert "PROV_MATRIX_OK" in out
+
+
+# --------------------------------------------------------------------- #
+# Auditor mutation tests: corrupt the plane, expect the alarm
+# --------------------------------------------------------------------- #
+class _CorruptingStepper(WindowedStepper):
+    """Forges an out-of-order causal delivery just before every sweep:
+    each in-window app column after the first gets one receiver's
+    delivery round zeroed, so that receiver appears to deliver the
+    successor before messages it causally follows."""
+
+    def _retire(self, t_now):
+        cw, st = self.cw, self.st
+        for c in np.nonzero((cw.slot_msg > 0) & cw.slot_app)[0]:
+            d = st["delivered"][:, c]
+            got = np.nonzero(d >= 1)[0]
+            if len(got):
+                st["delivered"][got[0], c] = 0
+        return super()._retire(t_now)
+
+
+def _corrupted_batch(mode):
+    obs = _flight_obs(rate=1, audit=mode)
+    stp = _CorruptingStepper(_scn(), 32, backend="numpy",
+                             collect="full", seg_len=8, obs=obs)
+    while not stp.done:
+        stp.advance()
+    stp.finish()
+    return obs.flight.auditor
+
+
+def test_auditor_flags_batch_plane_corruption():
+    aud = _corrupted_batch("log")
+    assert aud.violations, "mutation must be caught"
+    for v in aud.violations:
+        assert v.edge in ("same-origin", "deliv-before-bcast")
+        assert v.a_deliv > v.b_deliv >= 0     # the inversion itself
+        assert v.a_id != v.b_id
+    # fail mode raises out of the engine loop on the first violation
+    with pytest.raises(CausalityViolationError) as ei:
+        _corrupted_batch("fail")
+    assert ei.value.violation.a_deliv > ei.value.violation.b_deliv
+
+
+def test_auditor_flags_live_plane_corruption():
+    obs = _flight_obs(rate=1, audit="log", live=True)
+    scn = static_scenario(5, 48, k=4, m_app=0)
+    loop = LiveLoop(scn, 64, engine="windowed", backend="numpy",
+                    collect="full", arrivals="poisson", rate=4.0,
+                    messages=160, seed=3, obs=obs)
+    stp, orig = loop.stepper, loop.stepper._retire
+
+    def corrupt(t_now):
+        cw, st = stp.cw, stp.st
+        for c in np.nonzero((cw.slot_msg > 0) & cw.slot_app)[0]:
+            d = st["delivered"][:, c]
+            got = np.nonzero(d >= 1)[0]
+            if len(got):
+                st["delivered"][got[0], c] = 0
+        return orig(t_now)
+
+    stp._retire = corrupt
+    loop.run()
+    aud = obs.flight.auditor
+    assert aud.pairs_checked > 0
+    assert aud.violations, "live mutation must be caught"
+
+
+def test_auditor_is_silent_on_an_honest_live_run():
+    obs = _flight_obs(rate=1, audit="fail", live=True)
+    scn = static_scenario(5, 48, k=4, m_app=0)
+    LiveLoop(scn, 64, engine="windowed", backend="numpy",
+             collect="full", arrivals="poisson", rate=4.0,
+             messages=160, seed=3, obs=obs).run()
+    aud = obs.flight.auditor
+    assert aud.pairs_checked > 0 and not aud.violations
+
+
+# --------------------------------------------------------------------- #
+# Live lifecycle: requeue records the final activation, spans balance
+# --------------------------------------------------------------------- #
+def test_requeued_columns_record_final_activation():
+    obs = EngineObs(histograms=True, spans=True)
+    obs.flight = FlightRecorder(rate=1, seed=0, live=True)
+    scn = static_scenario(3, 32, k=3, m_app=0)
+    loop = LiveLoop(scn, 24, engine="windowed", backend="numpy",
+                    seg_len=4, admission="admit", rate=8.0,
+                    messages=160, seed=2, obs=obs)
+    rep = loop.run()
+    assert rep.overflow_catches > 0 and loop.requeued > 0, \
+        "admit policy should force withdraw/requeue"
+    adm = loop.admitted_scenario()
+    fl = obs.flight
+    assert fl.completed
+    for rec in fl.completed:
+        # the record describes the FINAL placement: after any number of
+        # withdraw/requeue cycles it matches the admitted schedule the
+        # batch replay would use
+        assert rec.bcast_round == adm.bcast_round[rec.id]
+        assert rec.origin == adm.bcast_origin[rec.id]
+        assert rec.activate_round == rec.bcast_round
+        assert 0 <= rec.submit_round <= rec.bcast_round
+        assert rec.admit_round >= rec.submit_round
+    # satellite: the overflow-retry path leaks no spans with the
+    # flight recorder in the loop, and backpressure instants still
+    # mirror the counter one-for-one
+    assert obs.spans.depth == 0
+    bp = [e for e in obs.spans.events() if e["name"] == "backpressure"]
+    assert len(bp) == rep.overflow_catches
+    assert all(e["kind"] == "instant" for e in bp)
+
+
+# --------------------------------------------------------------------- #
+# Ops plane: sinks, dashboard, burn rate
+# --------------------------------------------------------------------- #
+def _ops_run(ops, messages=96):
+    obs = _flight_obs(rate=1, audit="log", live=True)
+    scn = static_scenario(5, 48, k=4, m_app=0)
+    loop = LiveLoop(scn, 64, engine="windowed", backend="numpy",
+                    collect="full", arrivals="poisson", rate=4.0,
+                    messages=messages, seed=3, obs=obs, ops=ops)
+    return loop, loop.run()
+
+
+def test_prometheus_snapshot_round_trips(tmp_path):
+    out = tmp_path / "ops.prom"
+    ops = OpsPlane(out=str(out), sink="prometheus", slo_p99=30.0)
+    _ops_run(ops)
+    gauges = {}
+    lines = out.read_text().splitlines()
+    for line in lines:
+        if not line.startswith("#"):
+            name, val = line.split()
+            gauges[name] = float(val)
+    # text-format contract: every gauge is TYPE-declared and repro_-
+    # namespaced
+    assert all(line.split()[2].startswith("repro_")
+               and line.split()[3] == "gauge"
+               for line in lines if line.startswith("# TYPE"))
+    for key in ("repro_tick", "repro_queue_depth",
+                "repro_window_occupancy", "repro_admitted_total",
+                "repro_delivered_total", "repro_slo_burn",
+                "repro_provenance_completed",
+                "repro_audit_pairs_checked", "repro_audit_violations"):
+        assert key in gauges, key
+    # the snapshot is the LAST tick (atomically replaced each publish)
+    assert gauges["repro_tick"] == ops.ticks
+    assert gauges["repro_audit_violations"] == 0
+    assert gauges["repro_provenance_completed"] > 0
+
+
+def test_jsonl_ops_stream_round_trips(tmp_path):
+    out = tmp_path / "ops.jsonl"
+    ops = OpsPlane(out=str(out), sink="jsonl", every=3)
+    _ops_run(ops)
+    ticks = load_ops_jsonl(str(out))
+    assert ticks
+    # cadence: every 3rd tick, plus close() flushing the final one
+    nums = [t["tick"] for t in ticks]
+    assert nums == sorted(set(nums))
+    assert all(t % 3 == 0 for t in nums[:-1])
+    assert nums[-1] == ops.ticks
+    for t in ticks:
+        assert {"t", "queue_depth", "window_occupancy", "admitted_tick",
+                "admitted_total", "shed", "requeued",
+                "backpressure_events"} <= set(t)
+    # a foreign JSONL file is rejected by the schema header check
+    bad = tmp_path / "other.jsonl"
+    bad.write_text(json.dumps({"kind": "header", "schema": "nope"}) + "\n")
+    with pytest.raises(ValueError, match="not an ops stream"):
+        load_ops_jsonl(str(bad))
+
+
+def test_watch_dashboard_degrades_to_plain_lines_off_tty():
+    buf = io.StringIO()          # not a TTY
+    ops = OpsPlane(watch=WatchDashboard(buf), slo_p99=30.0)
+    _, rep = _ops_run(ops)
+    text = buf.getvalue()
+    assert "\x1b[" not in text   # no ANSI redraws into a pipe
+    lines = text.splitlines()
+    assert len(lines) == ops.ticks
+    assert all(line.startswith("ops tick=") for line in lines)
+    assert "queue_depth=" in lines[-1] and "slo_burn=" in lines[-1]
+
+
+def test_slo_burn_is_a_windowed_undercount():
+    sb = SloBurn(slo=16.0, window=4)
+    h = np.zeros(NB, np.int64)
+    assert sb.update(h) == 0.0
+    # 3 fast deliveries, 1 over-SLO (lat 100 lands in a bucket whose
+    # lower bound exceeds the SLO)
+    h[bucket_index_np([4])[0]] += 3
+    h[bucket_index_np([100])[0]] += 1
+    assert sb.update(h) == pytest.approx(0.25)
+    # boundary soundness: lat 20 shares the SLO's own bucket, so it is
+    # NOT counted over (under-count, never a false alarm)
+    h[bucket_index_np([20])[0]] += 1
+    assert sb.update(h) == pytest.approx(1 / 5)
+    # the window forgets: after `window` idle ticks the burn is clean
+    for _ in range(4):
+        frac = sb.update(h)
+    assert frac == 0.0
+
+
+# --------------------------------------------------------------------- #
+# Spec validation and the API front door
+# --------------------------------------------------------------------- #
+def test_flight_spec_validation():
+    with pytest.raises(SpecError, match="obs.provenance"):
+        RunSpec(n=16, obs=ObsSpec(audit="log")).validate()
+    with pytest.raises(SpecError, match="streaming engine"):
+        RunSpec(n=16, engine="vec",
+                obs=ObsSpec(provenance=4)).validate()
+    with pytest.raises(SpecError, match="mode='live'"):
+        RunSpec(n=16, obs=ObsSpec(ops_out="x.prom")).validate()
+    with pytest.raises(SpecError, match="mode='live'"):
+        RunSpec(n=16, obs=ObsSpec(watch=True)).validate()
+    with pytest.raises(SpecError, match="obs.sampler"):
+        RunSpec(n=16, obs=ObsSpec(provenance=4,
+                                  sampler="nope")).validate()
+    with pytest.raises(SpecError, match="obs.provenance"):
+        RunSpec(n=16, obs=ObsSpec(provenance=True)).validate()
+    # the valid shapes pass
+    RunSpec(n=16, engine="windowed",
+            obs=ObsSpec(provenance=4, audit="fail")).validate()
+
+
+def test_api_exports_provenance_records_and_tracks(tmp_path):
+    trace = str(tmp_path / "t.json")
+    metrics = str(tmp_path / "m.jsonl")
+    rep = api_run(RunSpec(
+        engine="windowed", backend="numpy", n=48,
+        traffic=TrafficSpec(messages=16), window=WindowSpec(window=48),
+        obs=ObsSpec(provenance=1, audit="log", trace_out=trace,
+                    metrics_out=metrics)))
+    assert rep.extras["provenance_sampled"] == 16
+    assert rep.extras["audit_pairs_checked"] > 0
+    assert rep.extras["audit_violations"] == 0
+    # the metrics doc carries one `provenance` record per sampled msg
+    doc = load_metrics_jsonl(metrics)
+    provs = doc["provenance"]
+    ids = [p["id"] for p in provs]
+    assert len(ids) == len(set(ids)) == 16
+    for p in provs:
+        assert len(p["deliv"]) == 48
+        assert p["retire_round"] >= p["bcast_round"] >= 0
+    # the trace gained per-message tracks in the provenance process
+    with open(trace) as fh:
+        evs = json.load(fh)["traceEvents"]
+    prov = [e for e in evs if e.get("pid") == 2]
+    assert any(e["ph"] == "M" and e["name"] == "process_name"
+               for e in prov)
+    assert sum(1 for e in prov if e["ph"] == "M"
+               and e["name"] == "thread_name") == 16
+    assert sum(1 for e in prov if e["ph"] == "X"
+               and e["name"] == "life") == 16
+
+
+def test_provenance_trace_events_are_well_formed():
+    rec = dict(id=7, origin=1, bcast_round=3, submit_round=1,
+               admit_round=2, activate_round=3, retire_round=9,
+               expired=False, blocked_at=[4, 5], deliv=[3, 4, -1, 6])
+    ev = provenance_trace_events([rec, dict(rec, id=8, expired=True)],
+                                 n_devices=2)
+    assert ev[0]["name"] == "process_name"
+    tnames = [e["args"]["name"] for e in ev
+              if e["ph"] == "M" and e["name"] == "thread_name"]
+    assert tnames == ["msg 7 @o1", "msg 8 @o1"]
+    life = next(e for e in ev if e["name"] == "life")
+    assert (life["ts"], life["dur"]) == (1000.0, 8000.0)  # submit→retire
+    q = next(e for e in ev if e["name"] == "queued")
+    assert (q["ts"], q["dur"]) == (1000.0, 2000.0)        # submit→bcast
+    # shard split at ceil(4/2)=2 rows, -1 sentinels masked out
+    d0 = next(e for e in ev if e["name"] == "deliver shard0")
+    assert d0["args"] == dict(receivers=2, first=3, last=4)
+    d1 = next(e for e in ev if e["name"] == "deliver shard1")
+    assert d1["args"]["receivers"] == 1 and d1["dur"] == 1.0
+    assert sum(1 for e in ev if e["name"] == "blocked") == 4
+    assert any(e["name"] == "life (expired)" for e in ev)
+    assert all(e["ts"] >= 0 for e in ev if "ts" in e)
